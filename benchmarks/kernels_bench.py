@@ -1,0 +1,60 @@
+"""Kernel-path microbench on CPU: the pure-jnp reference implementations
+(the compute the dry-run lowers) — wall time per call.  Pallas kernels
+execute in interpret mode on CPU, so their timings here are NOT hardware-
+representative; the roofline table is the TPU-side perf source of truth.
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.models import layers as L
+
+
+def _time(fn, *args, iters=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(log_fn=print):
+    key = jax.random.PRNGKey(0)
+    results = {}
+
+    # attention: dense vs chunked reference at a CPU-sized shape
+    B, S, H, KV, hd = 1, 2048, 8, 2, 64
+    q = jax.random.normal(key, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, KV, hd))
+    dense = jax.jit(lambda q, k, v: L._dense_sdpa(q, k, v, causal=True))
+    chunked = jax.jit(lambda q, k, v: L._chunked_sdpa(q, k, v, causal=True,
+                                                      window=0, softcap=0.0))
+    results["attn_dense_2k"] = _time(dense, q, k, v)
+    results["attn_chunked_2k"] = _time(chunked, q, k, v)
+
+    # fed aggregation reference at 1M params x 16 clients
+    d = jax.random.normal(key, (16, 1_000_000), jnp.float32)
+    w = jax.random.uniform(jax.random.PRNGKey(3), (16,))
+    agg = jax.jit(ref.fed_aggregate_ref)
+    results["fed_aggregate_16x1M"] = _time(agg, d, w)
+
+    # ssd reference
+    x = jax.random.normal(key, (1, 1024, 8, 64))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (1, 1024, 8)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(5), (8,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(6), (1, 1024, 64))
+    Cm = jax.random.normal(jax.random.PRNGKey(7), (1, 1024, 64))
+    ssd = jax.jit(lambda *a: ref.ssd_ref(*a, 128))
+    results["ssd_ref_1k"] = _time(ssd, x, dt, A, Bm, Cm)
+
+    for name, us in results.items():
+        log_fn(f"{name},{us:.0f},cpu-reference-path")
+    return results

@@ -1,0 +1,111 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh) from
+the dry-run artifacts (experiments/dryrun/*.json) and annotate each with
+MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+cost_analysis() of the SPMD-partitioned module is per-device, so terms are
+per-chip by construction (equivalent to the brief's global/chips form).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.configs import ARCHS, INPUT_SHAPES
+from repro.launch.specs import count_params
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def active_params(arch_id: str) -> int:
+    """Parameters touched per token (MoE: only top-k experts count)."""
+    spec = ARCHS[arch_id]
+    cfg = spec.model
+    total = count_params(cfg)
+    if cfg.mlp == "moe":
+        expert = 3 * cfg.d_model * cfg.d_ff * cfg.n_experts * cfg.n_layers
+        unused = expert * (cfg.n_experts - cfg.moe_top_k) / cfg.n_experts
+        return int(total - unused)
+    return total
+
+
+def model_flops(arch_id: str, shape_name: str, n_devices: int) -> float:
+    """Per-device useful model FLOPs for the lowered program."""
+    spec = ARCHS[arch_id]
+    shp = INPUT_SHAPES[shape_name]
+    n_act = active_params(arch_id)
+    if shp["kind"] == "train":
+        K, E = spec.fed.cohort_size, spec.fed.local_steps
+        B = spec.fed.local_batch_for(shp["global_batch"])
+        tokens = K * E * B * shp["seq_len"]
+        return 6.0 * n_act * tokens / n_devices
+    if shp["kind"] == "prefill":
+        tokens = shp["global_batch"] * shp["seq_len"]
+        return 2.0 * n_act * tokens / n_devices
+    tokens = shp["global_batch"]          # decode: one token per sequence
+    return 2.0 * n_act * tokens / n_devices
+
+
+def load_records(mesh: str = "single"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def build_table(mesh: str = "single"):
+    rows = []
+    for rec in load_records(mesh):
+        if rec.get("status") != "ok":
+            rows.append(dict(arch=rec["arch"], shape=rec["shape"],
+                             status=rec.get("status", "?"),
+                             reason=rec.get("reason", "")[:40]))
+            continue
+        terms = rec["roofline"]
+        mf = model_flops(rec["arch"], rec["shape"], rec["n_devices"])
+        ratio = mf / max(terms["hlo_flops"], 1.0)
+        rows.append(dict(
+            arch=rec["arch"], shape=rec["shape"], status="ok",
+            t_compute=terms["t_compute"], t_memory=terms["t_memory"],
+            t_collective=terms["t_collective"], dominant=rec["dominant"],
+            model_flops=mf, hlo_flops=terms["hlo_flops"], useful_ratio=ratio,
+            hbm_gb=rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+            + rec["memory"].get("argument_size_in_bytes", 0) / 1e9,
+        ))
+    return rows
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':<18}{'shape':<13}{'t_comp(s)':>10}{'t_mem(s)':>10}"
+           f"{'t_coll(s)':>10}{'dom':>6}{'useful':>8}{'HBM(GB)':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:<18}{r['shape']:<13}  {r['status']} "
+                         f"({r.get('reason', '')})")
+            continue
+        lines.append(
+            f"{r['arch']:<18}{r['shape']:<13}{r['t_compute']:>10.4f}"
+            f"{r['t_memory']:>10.4f}{r['t_collective']:>10.4f}"
+            f"{r['dominant'][:4]:>6}{r['useful_ratio']:>8.2f}{r['hbm_gb']:>9.2f}")
+    return "\n".join(lines)
+
+
+def run(log_fn=print, mesh="single"):
+    rows = build_table(mesh)
+    if not rows:
+        log_fn(f"roofline: no dry-run artifacts in {DRYRUN_DIR} — run "
+               "`python -m repro.launch.dryrun --all` first")
+        return []
+    log_fn(format_table(rows))
+    for r in rows:
+        if r["status"] == "ok":
+            log_fn(f"roofline,{r['arch']},{r['shape']},"
+                   f"{max(r['t_compute'], r['t_memory'], r['t_collective'])*1e6:.0f},"
+                   f"dominant={r['dominant']}")
+    return rows

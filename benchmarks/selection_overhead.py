@@ -1,0 +1,45 @@
+"""Framework-perf microbench: server-side cost of one F3AST control step
+(selection + rate update + weight computation) vs fleet size N.
+
+The paper evaluates accuracy only; this table quantifies the *system* cost
+of the technique — it must stay negligible next to a training round.
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import make_algorithm
+
+
+def _time(fn, *args, iters=50):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(ns=(100, 1000, 10_000, 100_000), m=10, log_fn=print):
+    results = {}
+    for n in ns:
+        rng = np.random.default_rng(0)
+        p = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+        algo = make_algorithm("f3ast", n, p)
+        state = algo.init(r0=m / n)
+        avail = jnp.asarray(rng.random(n) < 0.5)
+        key = jax.random.PRNGKey(0)
+
+        @jax.jit
+        def step(st, key, avail):
+            return algo.select(st, key, avail, jnp.asarray(m))
+
+        us = _time(step, state, key, avail)
+        results[n] = us
+        log_fn(f"f3ast_select_n{n},{us:.1f},per-round control-plane cost")
+    return results

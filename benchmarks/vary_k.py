@@ -1,0 +1,27 @@
+"""Figure 5: impact of the communication level K (clients per round) on the
+Synthetic(1,1) task — the F3AST-vs-baselines gap vs K."""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.launch.train import run_federated
+
+
+def run(ks=(2, 5, 10, 20), rounds=250, algos=("f3ast", "fedavg", "poc"),
+        availability="homedevices", out_dir=None, log_fn=print):
+    results = {}
+    for k in ks:
+        for algo in algos:
+            res = run_federated("synthetic11", algo, availability,
+                                rounds=rounds, clients_per_round=k,
+                                eval_every=rounds, log_fn=lambda *_: None)
+            results[(k, algo)] = (res.final_metrics["test_acc"],
+                                  res.final_metrics["test_loss"])
+            log_fn(f"vary_k,K={k},{algo},acc={results[(k, algo)][0]:.4f},"
+                   f"loss={results[(k, algo)][1]:.4f}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, "fig5_vary_k.json"), "w") as f:
+            json.dump({f"{k}|{a}": v for (k, a), v in results.items()}, f, indent=1)
+    return results

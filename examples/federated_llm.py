@@ -1,0 +1,83 @@
+"""End-to-end driver: federated training of a ~100M-param llama-family model
+for a few hundred rounds on synthetic char-LM data with F3AST selection.
+
+This is the deliverable-(b) end-to-end example: real model (reduced llama3
+topology, ~100M params), real data pipeline (per-role char streams), real
+availability process, checkpointing, and the same jitted fed_round that the
+production mesh lowers.
+
+    PYTHONPATH=src python examples/federated_llm.py --rounds 300
+(defaults to a fast 20-round demo; --rounds 300 is the full run)
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.core import CommBudget, make_algorithm, make_availability, make_fed_round
+from repro.data import CohortSampler, FederatedData
+from repro.data.synthetic import make_char_lm_federated
+from repro.models import ModelConfig, get_model_api
+from repro.optim import make_optimizer
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--rounds", type=int, default=20)
+ap.add_argument("--clients", type=int, default=64)
+ap.add_argument("--cohort", type=int, default=8)
+ap.add_argument("--ckpt-dir", default=None)
+args = ap.parse_args()
+
+# ~100M-param llama-style model over a 256-char vocabulary
+CFG = ModelConfig(name="llama-100m", family="dense", n_layers=12, d_model=768,
+                  n_heads=12, n_kv_heads=4, head_dim=64, d_ff=3072,
+                  vocab=256, rope_theta=10000.0, tie_embeddings=True)
+api = get_model_api(CFG)
+n_params = sum(int(np.prod(x.shape)) for x in
+               jax.tree.leaves(jax.eval_shape(lambda: api.init_params(
+                   jax.random.PRNGKey(0)))))
+print(f"model: {CFG.name}, {n_params/1e6:.1f}M params")
+
+# federated char-LM data: one client per 'speaking role'
+clients = make_char_lm_federated(n_clients=args.clients, vocab=CFG.vocab,
+                                 seq_len=64, seed=0)
+fed = FederatedData(clients)
+p = fed.p
+N = fed.n_clients
+
+algo = make_algorithm("f3ast", N, p, beta=5e-3)
+state = algo.init(r0=args.cohort / N)
+avail_proc = make_availability("homedevices", N)
+budget = CommBudget(fixed=args.cohort, jitter=2)
+
+opt = make_optimizer("adam", lr=3e-4)
+key = jax.random.PRNGKey(0)
+params = api.init_params(key)
+opt_state = opt.init(params)
+fed_round = jax.jit(make_fed_round(api.loss_fn, opt, mode="parallel"))
+sampler = CohortSampler(fed, cohort_size=args.cohort, local_steps=2,
+                        local_batch=8, seed=0)
+
+for t in range(args.rounds):
+    key, k1, k2, k3 = jax.random.split(key, 4)
+    avail = avail_proc.sample(k1, t)
+    k_t = budget.sample(k3, t)
+    mask, w_full, state = algo.select(state, k2, avail, k_t)
+    ids = np.flatnonzero(np.asarray(mask))
+    batch, valid, idarr = sampler.cohort_batch(ids)
+    w = jnp.asarray(np.asarray(w_full)[idarr] * valid)
+    params, opt_state, m = fed_round(
+        params, opt_state, {k: jnp.asarray(v) for k, v in batch.items()},
+        w, jnp.asarray(0.05, jnp.float32))
+    if t % 10 == 0 or t == args.rounds - 1:
+        print(f"round {t:4d}  local-loss {float(m.loss):.4f}  "
+              f"|Δ| {float(m.delta_norm):.3f}  selected {len(ids)} "
+              f"(K_t={int(k_t)}, avail {int(np.asarray(avail).sum())})")
+    if args.ckpt_dir and (t + 1) % 100 == 0:
+        save_checkpoint(args.ckpt_dir, t + 1,
+                        {"params": params, "rates": state.rates.r})
+
+print("done. learned rates:", np.asarray(state.rates.r).round(3)[:8], "...")

@@ -1,0 +1,18 @@
+"""Serve the (federated) global model: batched autoregressive decode with
+KV caches / SSM state — the deployment path exercised by the decode shapes.
+
+    PYTHONPATH=src python examples/serve_model.py --arch mamba2-2.7b
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="llama3.2-1b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--steps", type=int, default=32)
+args = ap.parse_args()
+
+serve(args.arch, batch=args.batch, steps=args.steps, smoke=True)

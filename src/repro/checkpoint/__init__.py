@@ -1,0 +1,1 @@
+from .ckpt import save_checkpoint, restore_checkpoint, latest_step

@@ -1,0 +1,59 @@
+"""Checkpointing: flat-path npz serialization of arbitrary pytrees.
+
+Server state in federated training = (params, server-opt state, rate tracker
+r(t), round counter, RNG key).  Saving r(t) matters: F3AST's selection policy
+is exactly the learned rate — losing it on restart resets the policy to the
+burn-in phase (paper Thm B.1: re-mixing costs O(log eps / log alpha) rounds).
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> dict:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key or "_root"] = np.asarray(leaf)
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree: Any, tag: str = "state") -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"{tag}_{step:08d}.npz")
+    tmp = path + ".tmp.npz"   # np.savez keeps names already ending in .npz
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype-checked)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = _SEP.join(str(getattr(q, "key", getattr(q, "idx", q))) for q in p)
+            key = key or "_root"
+            arr = data[key]
+            assert arr.shape == tuple(np.shape(leaf)), (key, arr.shape, np.shape(leaf))
+            leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_step(directory: str, tag: str = "state") -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(directory)
+             if (m := re.match(rf"{tag}_(\d+)\.npz$", f))]
+    return max(steps) if steps else None

@@ -1,0 +1,23 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+from .common import INPUT_SHAPES, ArchSpec, FedExec
+from . import (llama3_2_1b, qwen3_8b, qwen3_14b, gemma_7b, mamba2_2_7b,
+               llava_next_34b, mixtral_8x22b, recurrentgemma_2b,
+               grok_1_314b, whisper_small)
+from .paper_tasks import PAPER_TASKS, PaperTask
+
+ARCHS = {m.SPEC.arch_id: m.SPEC for m in (
+    llama3_2_1b, qwen3_8b, qwen3_14b, gemma_7b, mamba2_2_7b,
+    llava_next_34b, mixtral_8x22b, recurrentgemma_2b, grok_1_314b,
+    whisper_small)}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+__all__ = ["ARCHS", "get_arch", "ArchSpec", "FedExec", "INPUT_SHAPES",
+           "PAPER_TASKS", "PaperTask"]

@@ -1,0 +1,69 @@
+"""Server-side aggregation of client updates.
+
+F3AST (unbiased, Lemma C.1):     Delta = sum_{k in S} (p_k / r_k) v_k
+FedAvg-style (biased baseline):  Delta = sum_{k in S} p_k v_k / sum_{k in S} p_k
+Unweighted mean (biased):        Delta = (1/|S|) sum_{k in S} v_k
+
+All functions are pytree-aware and masked: deltas come stacked with a leading
+cohort axis (K, ...) plus a (K,) validity mask, so the jitted round has
+static shapes regardless of how many clients were actually selected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hfun import R_MIN
+
+
+def unbiased_weights(p_sel: jnp.ndarray, r_sel: jnp.ndarray,
+                     valid: jnp.ndarray) -> jnp.ndarray:
+    """Importance weights p_k / r_k for the selected cohort — shape (K,)."""
+    w = p_sel / jnp.maximum(r_sel, R_MIN)
+    return jnp.where(valid, w, 0.0)
+
+
+def fedavg_weights(p_sel: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    w = jnp.where(valid, p_sel, 0.0)
+    return w / jnp.maximum(w.sum(), 1e-12)
+
+
+def uniform_weights(valid: jnp.ndarray) -> jnp.ndarray:
+    v = valid.astype(jnp.float32)
+    return v / jnp.maximum(v.sum(), 1.0)
+
+
+def weighted_aggregate(deltas, weights: jnp.ndarray):
+    """sum_k weights[k] * deltas[k] over the leading cohort axis, per leaf.
+
+    ``deltas``: pytree whose leaves have shape (K, ...); returns same pytree
+    without the cohort axis.  Accumulates in f32 for numerical stability and
+    casts back to the leaf dtype (matches the TPU Pallas kernel semantics in
+    ``repro.kernels.fed_aggregate``).
+    """
+
+    def agg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        acc = jnp.sum(leaf.astype(jnp.float32) * w, axis=0)
+        return acc.astype(leaf.dtype)
+
+    return jax.tree.map(agg, deltas)
+
+
+def streaming_aggregate_init(params_like, dtype=jnp.float32):
+    """Zero accumulator (default f32), same shapes as the model params.
+
+    ``dtype=bfloat16`` halves the accumulator footprint — used for the
+    largest models where the f32 accumulator alone is ~5 GB/device; the
+    cohort is small (K <= 32) so bf16 accumulation error stays ~1e-2
+    relative, well under client-sampling noise.
+    """
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), params_like)
+
+
+def streaming_aggregate_add(acc, delta, weight: jnp.ndarray):
+    """acc += weight * delta (one client at a time, sequential cohort mode)."""
+    return jax.tree.map(
+        lambda a, d: (a.astype(jnp.float32)
+                      + weight * d.astype(jnp.float32)).astype(a.dtype),
+        acc, delta)

@@ -1,0 +1,104 @@
+"""Algorithm layer: selection + rate tracking + aggregation-weight policy.
+
+Each algorithm is a small stateful controller used by the training driver:
+
+    ctrl = make_algorithm("f3ast", n_clients=N, p=p, beta=1e-3)
+    state = ctrl.init()
+    sel_mask, weights_full, state = ctrl.select(state, key, avail, k_t, losses)
+
+``weights_full`` is the (N,) vector of aggregation weights (zero for
+unselected clients); the driver gathers the selected clients' slices into the
+static-size cohort and passes the matching (K,) weights to the jitted round.
+
+Algorithms
+  f3ast        selection: greedy −∇H(r) top-K     weights: p_k / r_k (unbiased)
+  fixed_f3ast  Algorithm 2 with frozen target r    weights: p_k / r_k(target)
+  fedavg       sampling ∝ p_k over available       weights: p_k / Σ_S p_k (biased)
+  uniform      uniform over available              weights: 1/|S|       (biased)
+  poc          Power-of-Choice (d candidates)      weights: 1/|S|       (biased)
+
+Server optimizer choice (SGD → FedAvg/F3AST, Adam → FedAdam/F3AST+Adam, Yogi)
+is orthogonal and lives in the driver / config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import selection as sel
+from .aggregation import fedavg_weights, unbiased_weights, uniform_weights
+from .hfun import R_MIN
+from .rates import RateState, init_rates, update_rates
+
+
+class AlgoState(NamedTuple):
+    rates: RateState
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    name: str
+    n_clients: int
+    p: jnp.ndarray                      # client data fractions, sum to 1
+    beta: float = 1e-3                  # paper: beta = O(1/T) = 1e-3
+    positively_correlated: bool = False
+    poc_d: int = 30                     # PoC candidate-set size
+    r_target: Optional[jnp.ndarray] = None  # fixed-policy F3AST target
+
+    def init(self, r0: float | None = None) -> AlgoState:
+        """Paper: r(0) arbitrary.  Default to a calibrated guess — the
+        uniform feasible rate K/N (here via expected p-mass per round) —
+        which shortens the stochastic-approximation burn-in (Thm B.1)."""
+        if r0 is None:
+            r0 = 0.1
+        return AlgoState(rates=init_rates(self.n_clients, r0))
+
+    def select(self, state: AlgoState, key: jax.Array, avail: jnp.ndarray,
+               k_t: jnp.ndarray, losses: Optional[jnp.ndarray] = None):
+        """Returns (sel_mask (N,) bool, weights (N,) f32, new state)."""
+        r = state.rates.r
+        name = self.name
+        if name == "f3ast":
+            # Alg. 1: select with r(t-1) (line 4), update the EMA (line 5),
+            # aggregate with the *updated* r(t) (line 9).
+            mask = sel.f3ast_select(avail, k_t, self.p, r,
+                                    self.positively_correlated, key=key)
+            new_rates = update_rates(state.rates, mask, self.beta)
+            w = unbiased_weights(self.p, jnp.maximum(new_rates.r, R_MIN), mask)
+            return mask, w, AlgoState(rates=new_rates)
+        elif name == "fixed_f3ast":
+            rt = self.r_target if self.r_target is not None else r
+            mask = sel.fixed_policy_select(avail, k_t, self.p, rt,
+                                           self.positively_correlated)
+            w = unbiased_weights(self.p, jnp.maximum(rt, R_MIN), mask)
+        elif name == "fedavg":
+            # Paper baseline: sample available clients with normalized
+            # probabilities p_k; aggregate the plain mean of the updates
+            # (Li et al. scheme II).  Under intermittent availability this
+            # estimator is biased — which is exactly the failure mode
+            # F3AST's p_k/r_k reweighting removes.
+            mask = sel.fedavg_select(key, avail, k_t, self.p)
+            w = uniform_weights(mask)
+        elif name == "fedavg_weighted":
+            mask = sel.fedavg_select(key, avail, k_t, self.p)
+            w = fedavg_weights(self.p, mask)
+        elif name == "uniform":
+            mask = sel.uniform_select(key, avail, k_t)
+            w = uniform_weights(mask)
+        elif name == "poc":
+            assert losses is not None, "PoC needs current per-client losses"
+            mask = sel.poc_select(key, avail, k_t, self.p, losses, self.poc_d)
+            w = uniform_weights(mask)
+        else:
+            raise ValueError(f"unknown algorithm {name!r}")
+
+        new_rates = update_rates(state.rates, mask, self.beta)
+        return mask, w, AlgoState(rates=new_rates)
+
+
+def make_algorithm(name: str, n_clients: int, p, **kw) -> Algorithm:
+    return Algorithm(name=name.lower(), n_clients=n_clients,
+                     p=jnp.asarray(p, jnp.float32), **kw)

@@ -1,0 +1,43 @@
+"""The variance surrogate H(r) of F3AST (paper Eq. 3) and its gradient.
+
+H(r) = sum_k p_k  / r_k   if client availability is positively correlated
+H(r) = sum_k p_k^2/ r_k   otherwise (uncorrelated / negatively correlated)
+
+Minimizing H over the achievable rate region R minimizes the upper bound on
+the client-sampling variance sigma_t^2(f^r) (Lemma 3.4), which is the term
+the selection policy controls in the convergence bound (Theorem 3.5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Rates are clipped away from zero before dividing: freshly initialized or
+# never-selected clients would otherwise produce infinite utilities and NaNs
+# in the aggregation weights.  The clip only regularizes the *utility*
+# computation; the tracked EMA itself is never clipped.
+R_MIN = 1e-3
+
+
+def h_value(r: jnp.ndarray, p: jnp.ndarray, positively_correlated: bool) -> jnp.ndarray:
+    """H(r) — scalar."""
+    rc = jnp.maximum(r, R_MIN)
+    num = p if positively_correlated else p * p
+    return jnp.sum(num / rc)
+
+
+def h_grad(r: jnp.ndarray, p: jnp.ndarray, positively_correlated: bool) -> jnp.ndarray:
+    """∇H(r) — shape (N,).  Always negative elementwise."""
+    rc = jnp.maximum(r, R_MIN)
+    num = p if positively_correlated else p * p
+    return -num / (rc * rc)
+
+
+def marginal_utility(r: jnp.ndarray, p: jnp.ndarray,
+                     positively_correlated: bool) -> jnp.ndarray:
+    """−∇H(r): the marginal utility of selecting each client (Eq. 4).
+
+    Selecting the K_t available clients with the largest utility is the exact
+    greedy maximizer of −∇H(r)·1_S over C_t because the objective is an
+    additive set function (paper §3.2).
+    """
+    return -h_grad(r, p, positively_correlated)

@@ -1,0 +1,34 @@
+"""Long-term participation-rate tracking (Algorithm 1 line 5).
+
+r(t) = (1-beta) r(t-1) + beta * 1_{S_t}
+
+Theorem 3.3: as beta -> 0 the tracked rate converges (in probability,
+uniformly over t > T/beta) to argmin_{r in R} H(r).  The paper uses
+beta = O(1/T) = 1e-3 in all experiments.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class RateState(NamedTuple):
+    r: jnp.ndarray        # (N,) EMA of selection indicators
+    t: jnp.ndarray        # round counter (int32 scalar)
+
+
+def init_rates(n_clients: int, r0: float | jnp.ndarray = 0.5) -> RateState:
+    """Paper: r(0) initialized arbitrarily; we default to 0.5 * ones."""
+    r = jnp.broadcast_to(jnp.asarray(r0, jnp.float32), (n_clients,)).copy()
+    return RateState(r=r, t=jnp.zeros((), jnp.int32))
+
+
+def update_rates(state: RateState, sel_mask: jnp.ndarray, beta: float) -> RateState:
+    r = (1.0 - beta) * state.r + beta * sel_mask.astype(jnp.float32)
+    return RateState(r=r, t=state.t + 1)
+
+
+def empirical_rate(sel_history: jnp.ndarray) -> jnp.ndarray:
+    """Time-average participation rate from a (T, N) selection history."""
+    return sel_history.astype(jnp.float32).mean(axis=0)

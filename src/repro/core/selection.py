@@ -1,0 +1,87 @@
+"""Client-selection policies.
+
+All selectors are jit-safe pure functions
+    (key, avail_mask (N,), k_budget scalar, ...) -> selection mask (N,) bool
+with |S| = min(k_budget, |available|).
+
+Implemented policies
+  * ``f3ast_select``   — Algorithm 1 line 4: greedy top-K_t available clients
+                         by marginal utility −∇H(r) (exact maximizer of the
+                         additive set objective, Eq. 4).
+  * ``fedavg_select``  — availability-agnostic baseline: sample K_t clients
+                         from the available set without replacement with
+                         probability ∝ p_k (Gumbel top-k).
+  * ``uniform_select`` — uniform without replacement over the available set.
+  * ``poc_select``     — Power-of-Choice (Cho et al.): sample d candidates
+                         ∝ p_k from the available set, then keep the M with
+                         the highest local loss.
+  * ``fixed_policy_select`` — Algorithm 2: greedy w.r.t. a *fixed* target
+                         rate r (static configuration-dependent policy).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hfun import marginal_utility
+
+_NEG = -1e30
+
+
+def _topk_mask(scores: jnp.ndarray, avail: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Boolean mask of the top-min(k, |avail|) available entries by score."""
+    n = scores.shape[0]
+    masked = jnp.where(avail, scores, _NEG)
+    # Rank positions by score (descending); position i selected iff its rank
+    # < k and it is available.  Stable w.r.t. ties via argsort.
+    order = jnp.argsort(-masked)            # indices, best first
+    ranks = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    k_eff = jnp.minimum(k.astype(jnp.int32), avail.sum().astype(jnp.int32))
+    return (ranks < k_eff) & avail
+
+
+def f3ast_select(avail: jnp.ndarray, k: jnp.ndarray, p: jnp.ndarray,
+                 r: jnp.ndarray, positively_correlated: bool = False,
+                 key: jax.Array | None = None) -> jnp.ndarray:
+    """F3AST greedy selection: S_t ∈ argmax_{S∈C_t} −∇H(r(t))·1_S."""
+    util = marginal_utility(r, p, positively_correlated)
+    if key is not None:
+        # Infinitesimal random tie-break so identical utilities (e.g. at
+        # initialization with uniform r) do not deterministically favor
+        # low-index clients.
+        util = util * (1.0 + 1e-6 * jax.random.uniform(key, util.shape))
+    return _topk_mask(util, avail, k)
+
+
+def fixed_policy_select(avail: jnp.ndarray, k: jnp.ndarray, p: jnp.ndarray,
+                        r_target: jnp.ndarray,
+                        positively_correlated: bool = False) -> jnp.ndarray:
+    """Fixed-policy F3AST (Algorithm 2): greedy w.r.t. a frozen rate."""
+    util = marginal_utility(r_target, p, positively_correlated)
+    return _topk_mask(util, avail, k)
+
+
+def fedavg_select(key: jax.Array, avail: jnp.ndarray, k: jnp.ndarray,
+                  p: jnp.ndarray) -> jnp.ndarray:
+    """Sample min(k,|avail|) available clients w/o replacement, prob ∝ p_k.
+
+    Uses the Gumbel top-k trick: adding i.i.d. Gumbel noise to log p and
+    taking the top-k is exactly sequential sampling without replacement with
+    probabilities proportional to p.
+    """
+    g = jax.random.gumbel(key, p.shape)
+    scores = jnp.log(jnp.maximum(p, 1e-12)) + g
+    return _topk_mask(scores, avail, k)
+
+
+def uniform_select(key: jax.Array, avail: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    scores = jax.random.uniform(key, avail.shape)
+    return _topk_mask(scores, avail, k)
+
+
+def poc_select(key: jax.Array, avail: jnp.ndarray, m: jnp.ndarray,
+               p: jnp.ndarray, losses: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Power-of-Choice: candidate set of size d sampled ∝ p_k from the
+    available pool, then the top-m candidates by current loss are selected."""
+    cand = fedavg_select(key, avail, jnp.asarray(d, jnp.int32), p)
+    return _topk_mask(losses, cand, m)

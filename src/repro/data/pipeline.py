@@ -1,0 +1,79 @@
+"""Client dataset registry + cohort batch assembly.
+
+The driver keeps data host-side (numpy); each round it gathers the selected
+clients' minibatches into one stacked cohort batch with static shapes
+(K, E, B, ...) — K = max cohort size, E = local steps, B = local batch —
+and ships it to the mesh together with the (K,) aggregation weights.
+Unselected cohort slots are filled by repeating a valid client but receive
+zero aggregation weight, so shapes never change across rounds (jit-stable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from .partition import client_fractions
+from .synthetic import SyntheticDataset
+
+
+@dataclasses.dataclass
+class FederatedData:
+    clients: List[SyntheticDataset]
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.clients)
+
+    @property
+    def p(self) -> np.ndarray:
+        sizes = np.array([len(next(iter(c.train.values()))) for c in self.clients],
+                         dtype=np.float64)
+        return (sizes / sizes.sum()).astype(np.float32)
+
+    def test_batch(self, max_per_client: int = 64) -> dict:
+        """Pooled test set (per-sample metrics, paper §4.1)."""
+        keys = self.clients[0].test.keys()
+        return {k: np.concatenate([c.test[k][:max_per_client] for c in self.clients])
+                for k in keys}
+
+    def per_client_test(self):
+        return [c.test for c in self.clients]
+
+
+@dataclasses.dataclass
+class CohortSampler:
+    """Assembles static-shape cohort batches for the jitted round."""
+    data: FederatedData
+    cohort_size: int          # K (max clients per round, = max K_t)
+    local_steps: int          # E
+    local_batch: int          # B
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def cohort_batch(self, selected: Sequence[int]):
+        """selected: client ids (any length <= cohort_size).
+
+        Returns (batch dict with leaves (K, E, B, ...), valid (K,) bool,
+        client_ids (K,) int) — slots beyond len(selected) are repeats of the
+        first selected client with valid=False.
+        """
+        K, E, B = self.cohort_size, self.local_steps, self.local_batch
+        sel = list(selected)
+        assert sel, "cohort must be non-empty"
+        ids = (sel + [sel[0]] * K)[:K]
+        valid = np.zeros(K, bool)
+        valid[:min(len(sel), K)] = True
+        keys = self.data.clients[0].train.keys()
+        out = {k: [] for k in keys}
+        for cid in ids:
+            tr = self.data.clients[cid].train
+            n = len(next(iter(tr.values())))
+            idx = self._rng.integers(0, n, size=(E, B))
+            for k in keys:
+                out[k].append(tr[k][idx])
+        return ({k: np.stack(v) for k, v in out.items()},
+                valid, np.asarray(ids, np.int32))

@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (GQA, causal / sliding-window, soft-cap).
+
+Grid: (batch, kv_head, q_block, kv_block) — the kv_block axis is innermost,
+so the VMEM scratch accumulators (acc, running max m, running sum l) persist
+across kv blocks for one q tile and are finalized on the last kv step
+(the canonical TPU flash pattern: streaming softmax in VMEM, one (Bq, Bk)
+score tile in registers/VMEM at a time, MXU-shaped 128-aligned matmuls).
+
+Layout: q is passed as (B, KV, G, Sq, hd) — query heads grouped under their
+kv head — so one grid cell's q tile (G, Bq, hd) folds to (G*Bq, hd) rows
+that share the same kv tile (GQA reuse without re-streaming K/V).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, nk: int, causal: bool, window: int,
+                  softcap: float, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                       # (G, bq, hd)
+    G, _, hd = q.shape
+    k = k_ref[0]                          # (bk, hd)
+    v = v_ref[0]                          # (bk, hd)
+    qf = q.reshape(G * bq, hd).astype(jnp.float32)
+    s = jax.lax.dot_general(qf, k.astype(jnp.float32),
+                            (((1,), (1,)), ((), ()))) * scale   # (G*bq, bk)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (G, bq, bk), 1)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (G, bq, bk), 2)
+    mask = jnp.ones((G, bq, bk), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask.reshape(G * bq, bk), s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v.astype(jnp.float32), (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.reshape(G, bq, hd).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, Skv, bq, bk)
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / (hd ** 0.5)
+
+    qg = q.reshape(B, Sq, KV, G, hd).transpose(0, 2, 3, 1, 4)   # (B,KV,G,Sq,hd)
+    kg = k.transpose(0, 2, 1, 3)                                # (B,KV,Skv,hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, nk=nk,
+                               causal=causal, window=window, softcap=softcap,
+                               scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, bq, hd), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, h, i, j: (b * KV + h, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, h, i, j: (b * KV + h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, bq, hd), lambda b, h, i, j: (b, h, 0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * bq, hd), jnp.float32),
+            pltpu.VMEM((G * bq, 1), jnp.float32),
+            pltpu.VMEM((G * bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kg.reshape(B * KV, Skv, hd), vg.reshape(B * KV, Skv, hd))
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)

@@ -1,0 +1,75 @@
+"""Jit'd dispatch wrappers: Pallas kernel on TPU, interpret-mode on CPU,
+jnp reference as explicit fallback.  Model code calls these; the dry-run
+(CPU backend) keeps the pure-XLA path, while on a real TPU the kernels are
+selected by default.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .fed_aggregate import fed_aggregate as _fed_aggregate_kernel
+from .fed_aggregate import fed_aggregate_tree
+from .flash_attention import flash_attention as _flash_kernel
+from .ssd_chunk import ssd_chunk as _ssd_chunk_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return _flash_kernel(q, k, v, causal=causal, window=window,
+                             softcap=softcap, interpret=not _on_tpu())
+    return _ref.attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+
+
+def fed_aggregate(deltas, weights, *, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return _fed_aggregate_kernel(deltas, weights, interpret=not _on_tpu())
+    return _ref.fed_aggregate_ref(deltas, weights)
+
+
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, use_kernel: bool | None = None):
+    """Full SSD: Pallas intra-chunk kernel + jnp inter-chunk recurrence.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,); Bm, Cm: (B, S, N).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        return _ref.ssd_ref(x, dt, A, Bm, Cm, chunk)
+
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = S // chunk
+    xr = x.reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    Br = Bm.reshape(B, nc, chunk, N)
+    Cr = Cm.reshape(B, nc, chunk, N)
+    y_intra, states, decays = _ssd_chunk_kernel(xr, dtr, A, Br, Cr,
+                                                interpret=not _on_tpu())
+
+    def scan_fn(h, inp):
+        st, dec = inp
+        return h * dec[..., None, None] + st, h
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_fn, h0,
+                             (states.transpose(1, 0, 2, 3, 4),
+                              decays.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # (B, nc, H, N, P)
+    a = dtr * A[None, None, None, :]
+    cum = jnp.cumsum(a, axis=2)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cr.astype(jnp.float32), jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    return y.astype(x.dtype)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0):
+    """Dense-softmax GQA attention — mirrors models.layers._dense_sdpa."""
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, Sq, KV, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def fed_aggregate_ref(deltas, weights):
+    """(K, D), (K,) -> (D,): f32-accumulated weighted sum."""
+    acc = jnp.sum(deltas.astype(jnp.float32) * weights[:, None].astype(jnp.float32),
+                  axis=0)
+    return acc.astype(deltas.dtype)
+
+
+def ssd_chunk_ref(x, dt, A, Bm, Cm):
+    """Intra-chunk SSD pieces — mirrors models.ssm._ssd_chunked internals.
+
+    Returns (y_intra, states, decays) with the same shapes as the kernel.
+    """
+    a = dt * A[None, None, None, :]                       # (B, nc, Q, H)
+    cum = jnp.cumsum(a, axis=2)
+    Q = x.shape[2]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cm.astype(jnp.float32),
+                        Bm.astype(jnp.float32))
+    M = scores[..., None] * L
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_to_end * dt,
+                        Bm.astype(jnp.float32), x.astype(jnp.float32))
+    decays = jnp.exp(cum[:, :, -1, :])
+    return y_intra, states, decays
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk: int):
+    """Full SSD (intra + inter) — delegates to the model's reference path."""
+    from ..models.ssm import _ssd_chunked
+    return _ssd_chunked(x, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel for the Mamba-2 SSD intra-chunk computation
+(arXiv 2405.21060, 'dual form'):
+
+  per (batch, head, chunk) tile, entirely in VMEM:
+    cum    = cumsum(dt * A)                                   (Q,)
+    L      = tril(exp(cum_i - cum_j))                         (Q, Q)
+    Yintra = ((C B^T) * L) @ (dt * X)                         (Q, P)
+    state  = B^T @ (exp(cum_Q - cum) * dt * X)                (N, P)
+    decay  = exp(cum_Q)                                       ()
+
+The O(1)-state inter-chunk recurrence (h <- decay*h + state; Yinter =
+exp(cum) * C h) is a tiny jnp scan outside the kernel (see ops.ssd) — the
+kernel owns the MXU-heavy (Q x Q)(Q x P) matmuls with Q = 128 (MXU-aligned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                y_ref, st_ref, dec_ref, *, q_chunk: int):
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)     # (Q,)
+    A = a_ref[0]                                     # scalar (negative)
+    Bm = b_ref[0, 0].astype(jnp.float32)            # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)            # (Q, N)
+
+    a = dt * A
+    cum = jnp.cumsum(a)                              # (Q,)
+    diff = cum[:, None] - cum[None, :]
+    iota_i = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 0)
+    iota_j = jax.lax.broadcasted_iota(jnp.int32, (q_chunk, q_chunk), 1)
+    L = jnp.where(iota_i >= iota_j, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))  # (Q, Q)
+    xdt = x * dt[:, None]
+    y = jax.lax.dot_general(scores * L, xdt, (((1,), (0,)), ((), ())))
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+    decay_to_end = jnp.exp(cum[-1] - cum)
+    st = jax.lax.dot_general(Bm, decay_to_end[:, None] * xdt,
+                             (((0,), (0,)), ((), ())))              # (N, P)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, 0, 0] = jnp.exp(cum[-1]).astype(dec_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x, dt, A, Bm, Cm, *, interpret: bool = True):
+    """Intra-chunk SSD over all chunks.
+
+    x : (B, nc, Q, H, P); dt: (B, nc, Q, H); A: (H,) negative
+    Bm, Cm: (B, nc, Q, N)
+    Returns (y_intra (B,nc,Q,H,P), states (B,nc,H,N,P), decays (B,nc,H)).
+    """
+    Bsz, nc, Q, H, P = x.shape
+    N = Bm.shape[-1]
+    y, st, dec = pl.pallas_call(
+        functools.partial(_ssd_kernel, q_chunk=Q),
+        grid=(Bsz, nc, H),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1,), lambda b, c, h: (h,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, nc, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, st, dec

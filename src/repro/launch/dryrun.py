@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+# ^ MUST precede every other import (jax locks the device count on first
+#   init).  Placeholder host devices exist ONLY in this dry-run entry point;
+#   tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry run.
+
+For every (architecture x input shape) pair, lower + compile the
+corresponding program (fed_round / prefill / serve_step) on
+  * the single-pod mesh  (16, 16)   = 256 chips  ("data", "model")
+  * the multi-pod mesh (2, 16, 16)  = 512 chips  ("pod", "data", "model")
+and record memory_analysis / cost_analysis / per-collective bytes into
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` — the §Roofline tables
+are derived from these artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, INPUT_SHAPES, get_arch
+from .hlo_analysis import collective_bytes, dominant_term, roofline_terms
+from .hlo_costs import analyze as hlo_analyze
+from .mesh import (CHIPS_PER_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                   make_production_mesh)
+from .specs import count_params
+from .steps import build_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _mem_summary(ma) -> dict:
+    keys = ("temp_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def run_one(arch_id: str, shape_name: str, multi_pod: bool,
+            save: bool = True, verbose: bool = True) -> dict:
+    arch = get_arch(arch_id)
+    cfg = arch.model_for_shape(shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "kind": INPUT_SHAPES[shape_name]["kind"]}
+    if cfg is None:
+        rec["status"] = "skipped"
+        rec["reason"] = arch.notes
+        if verbose:
+            print(f"[dryrun] {arch_id} x {shape_name} x {mesh_name}: SKIP "
+                  f"(long-context not applicable)")
+        if save:
+            _save(rec)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fn, args, in_sh, out_sh = build_step(arch, shape_name, mesh)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh
+                          ).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)            # loop bodies counted once (raw)
+    # trip-count-aware totals (scans over layers/E/K/chunks multiplied out)
+    trip = hlo_analyze(hlo)
+    terms = {
+        "hlo_flops": trip["flops"],
+        "hlo_bytes": trip["hbm_bytes"],
+        "collective_bytes": trip["coll_total"],
+        "t_compute": trip["flops"] / PEAK_FLOPS_BF16,
+        "t_memory": trip["hbm_bytes"] / HBM_BW,
+        "t_collective": trip["coll_total"] / ICI_BW,
+        # raw (per-loop-body) numbers kept for reference
+        "raw_flops": float(cost.get("flops", 0.0)),
+        "raw_bytes": float(cost.get("bytes accessed", 0.0)),
+        "raw_coll_bytes": float(coll["total"]),
+    }
+    coll = {k: trip.get(f"coll_{k}", 0.0) for k in
+            ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")}
+    coll["total"] = trip["coll_total"]
+    n_params = count_params(cfg)
+
+    rec.update({
+        "status": "ok",
+        "n_params": n_params,
+        "n_devices": mesh.size,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": _mem_summary(ma),
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "roofline": terms,
+        "dominant": dominant_term(terms),
+    })
+    if verbose:
+        mem_gb = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+        arg_gb = rec["memory"].get("argument_size_in_bytes", 0) / 1e9
+        print(f"[dryrun] {arch_id} x {shape_name} x {mesh_name}: OK  "
+              f"params={n_params/1e9:.2f}B  temp/dev={mem_gb:.2f}GB  "
+              f"args/dev={arg_gb:.2f}GB  flops/dev={terms['hlo_flops']:.3e}  "
+              f"coll/dev={coll['total']/1e9:.3f}GB  dom={rec['dominant']}  "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print("  memory_analysis:", rec["memory"])
+        print("  cost_analysis:", {k: f"{v:.3e}" for k, v in rec["cost"].items()
+                                   if k in ("flops", "bytes accessed")})
+    if save:
+        _save(rec, hlo)
+    return rec
+
+
+def _save(rec: dict, hlo: str | None = None):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(rec, f, indent=1)
+    if hlo is not None:
+        import gzip
+        with gzip.open(os.path.join(OUT_DIR, name[:-5] + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = sorted(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                mesh_name = "multi" if mp else "single"
+                path = os.path.join(OUT_DIR, f"{a}__{s}__{mesh_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] {a} x {s} x {mesh_name}: cached")
+                    continue
+                try:
+                    run_one(a, s, mp)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    traceback.print_exc()
+                    failures.append((a, s, mesh_name, repr(e)))
+    if failures:
+        print("\nFAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nAll dry-run combinations lowered and compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

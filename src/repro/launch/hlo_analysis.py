@@ -1,0 +1,88 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` exposes HLO FLOPs and bytes-accessed but not
+collective traffic; we parse the optimized (post-SPMD-partitioning, i.e.
+per-device) HLO text and sum the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Convention: for each collective we count the bytes of its RESULT shape —
+for all-gather that is the gathered (full) tensor a device materializes,
+for all-reduce the reduced tensor, for reduce-scatter the shard it keeps.
+This approximates per-device link traffic to within the ring-algorithm
+factor 2(n-1)/n ≈ 2, uniformly across ops, which is adequate for
+bottleneck attribution (the roofline table reports the raw sums and the
+derivation is stated in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shape: bf16[8,128,2048]{2,1,0:...} ; scalars: f32[]
+_SHAPE_RX = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RX = re.compile(
+    r"=\s+((?:\([^)]*\)|[\w\[\]{},:#\s*]+?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RX.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            n = int(np.prod([int(d) for d in dims.split(",") if d]))
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module.
+
+    ``-start``/``-done`` async pairs are counted once (the ``-done`` result
+    repeats the buffer) — we skip ops whose name ends in ``-done``.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RX.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        full = m.group(0)
+        if f"{kind}-done(" in full:
+            continue
+        out[kind] += _shape_bytes(shape_str)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: dict, coll: Dict[str, int], *, peak_flops: float,
+                   hbm_bw: float, ici_bw: float) -> Dict[str, float]:
+    """Three roofline terms in seconds (per-device program → per-chip)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    cbytes = float(coll.get("total", 0))
+    return {
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collective_bytes": cbytes,
+        "t_compute": flops / peak_flops,
+        "t_memory": bytes_accessed / hbm_bw,
+        "t_collective": cbytes / ici_bw,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    t = {"compute": terms["t_compute"], "memory": terms["t_memory"],
+         "collective": terms["t_collective"]}
+    return max(t, key=t.get)

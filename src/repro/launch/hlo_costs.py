@@ -1,0 +1,241 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE — but our
+programs are loops all the way down (lax.scan over layers x E local steps x
+K cohort clients x CE chunks), so raw flops / bytes / collective counts are
+low by 1-3 orders of magnitude.  This module parses the optimized
+(post-SPMD, per-device) HLO text into its computation graph and produces
+whole-execution totals:
+
+  * dot/convolution FLOPs — 2 * prod(result dims) * prod(contracted dims),
+    contracted sizes resolved through a per-computation symbol table;
+  * HBM traffic proxy — operand+result bytes of top-level fusion / dot /
+    copy / collective / (dynamic-)slice ops, i.e. buffers crossing HBM
+    between fused kernels;
+  * per-kind collective result bytes;
+
+walking the call graph with while bodies weighted by their trip count
+(parsed from the largest integer constant in the loop condition — the
+jax-lowered scan pattern `counter < N`).
+
+Conventions / known biases (consistent across programs, so bottleneck
+RANKING is reliable):
+  * the HBM proxy counts each inter-fusion buffer twice (as producer result
+    and consumer operand) — a ~2x overestimate of true traffic;
+  * collective bytes are result-shape bytes (ring factor 2(n-1)/n ~ 2 not
+    applied);
+  * dot FLOPs assume dense math (causal-flash masked blocks count fully —
+    visible as useful-ratio ~0.5-0.7 on causal training steps).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RX = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RX = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*((?:\([^()]*\)|\S+))\s+([\w\-]+)\((.*)$")
+_WHILE_RX = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RX = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCH_RX = re.compile(r"(?:true_computation|false_computation)=%?([\w\.\-]+)")
+_CONST_RX = re.compile(r"constant\((\d+)\)")
+
+
+def _shapes(s: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_RX.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",") if d) if dims else ()
+        out.append((dt, shape))
+    return out
+
+
+def _bytes_of(shape_str: str) -> int:
+    return sum(int(np.prod(sh)) * _DTYPE_BYTES[dt] if sh else _DTYPE_BYTES[dt]
+               for dt, sh in _shapes(shape_str))
+
+
+@dataclasses.dataclass
+class Comp:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    children: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    max_constant: int = 1
+    consts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    cmp_operands: List[str] = dataclasses.field(default_factory=list)
+
+
+# Ops whose operands/results proxy HBM traffic between fused kernels.
+# Layout ops (transpose/reshape/slice/bitcast) are EXCLUDED: on TPU they
+# fuse into neighbours or are free relayouts, and counting them inflated
+# the memory term ~5x on transformer training steps.
+_HBM_OPS = {"fusion", "dot", "convolution", "copy",
+            "dynamic-update-slice"} | set(_COLLECTIVES) \
+    | {c + "-start" for c in _COLLECTIVES}
+
+
+def parse_hlo(hlo: str):
+    comps: Dict[str, Comp] = {}
+    entry: Optional[str] = None
+    cur: Optional[Comp] = None
+    cur_name = None
+    symtab: Dict[str, str] = {}
+    pending: List[Tuple[str, str, str]] = []  # (opname_line fields) for dots
+
+    def flush_dots():
+        nonlocal pending
+        for res_shape, operands_str, line in pending:
+            res = _shapes(res_shape)
+            if not res:
+                continue
+            res_elems = int(np.prod(res[0][1])) if res[0][1] else 1
+            cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+            contract = 1
+            ops = [o.strip().lstrip("%") for o in operands_str.split(",")
+                   if o.strip().startswith("%")]
+            if cm and ops:
+                lhs_shape_str = symtab.get(ops[0], "")
+                lsh = _shapes(lhs_shape_str)
+                if lsh and lsh[0][1]:
+                    cdims = [int(d) for d in cm.group(1).split(",") if d]
+                    try:
+                        contract = int(np.prod([lsh[0][1][d] for d in cdims])) \
+                            if cdims else 1
+                    except IndexError:
+                        contract = 1
+            cur.flops += 2.0 * res_elems * contract
+        pending = []
+
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        ls = line.strip()
+        # computation header: `%name (args) -> type {`  or  `ENTRY %name ...{`
+        if ls.endswith("{") and "->" in ls and ("(" in ls):
+            flush_dots()
+            is_entry = ls.startswith("ENTRY")
+            name = ls.split()[1] if is_entry else ls.split()[0]
+            name = name.lstrip("%")
+            cur_name = name
+            cur = comps.setdefault(name, Comp())
+            symtab = {}
+            if is_entry:
+                entry = name
+            continue
+        if cur is None:
+            continue
+        m = _OP_RX.match(ls)
+        if not m:
+            continue
+        opname, res_shape, op, rest = m.groups()
+        symtab[opname] = res_shape
+        if op in ("dot", "convolution"):
+            if op == "dot":
+                pending.append((res_shape, rest, ls))
+            else:
+                res = _shapes(res_shape)
+                res_elems = int(np.prod(res[0][1])) if res and res[0][1] else 1
+                # conv flops approx: 2 * out * prod(kernel dims except out-ch)
+                cur.flops += 2.0 * res_elems  # refined below if window found
+                wm = re.search(r"window=\{size=([\dx]+)", ls)
+                if wm:
+                    k = int(np.prod([int(x) for x in wm.group(1).split("x")]))
+                    cur.flops += 2.0 * res_elems * (k - 1)
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES:
+            cur.coll[base_op] += _bytes_of(res_shape)
+        if op in _HBM_OPS:
+            cur.hbm_bytes += _bytes_of(res_shape)
+            # count named operands' bytes (reads)
+            for o in rest.split(","):
+                o = o.strip()
+                if o.startswith("%"):
+                    cur.hbm_bytes += _bytes_of(symtab.get(o.lstrip("%"), ""))
+        cm2 = _CONST_RX.search(ls)
+        if cm2:
+            cur.max_constant = max(cur.max_constant, int(cm2.group(1)))
+            if op == "constant":
+                cur.consts[opname] = int(cm2.group(1))
+        # loop bounds: record operands of compare ops (or compare-fusions)
+        if op == "compare" or (op == "fusion" and "compare" in opname):
+            for o in rest.split(","):
+                o = o.strip()
+                if o.startswith("%"):
+                    cur.cmp_operands.append(o.lstrip("%"))
+        if op == "while":
+            wm2 = _WHILE_RX.search(ls)
+            if wm2:
+                cur.children.append(("while:" + wm2.group(1), wm2.group(2)))
+        else:
+            for cm3 in _CALLS_RX.finditer(ls):
+                cur.children.append(("once", cm3.group(1)))
+            for cm4 in _BRANCH_RX.finditer(ls):
+                cur.children.append(("once", cm4.group(1)))
+    flush_dots()
+    return comps, entry
+
+
+def _trip(comps, cond_name: str) -> int:
+    """Trip count of a while loop: resolve the compare's constant operand
+    (jax scans lower to `counter < N`).  Only falls back to max-constant if
+    no compare operand resolves — taking a blind max over all constants in
+    the condition picks up unrelated sentinels (observed: a vocab-sized
+    constant inflating a loop 150,000x)."""
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    resolved = [cond.consts[o] for o in cond.cmp_operands if o in cond.consts]
+    if resolved:
+        return max(max(resolved), 1)
+    # compare may be delegated to a fused computation; its constant operand
+    # is still defined in the condition computation — already covered above.
+    return max(cond.max_constant, 1) if cond.consts else 1
+
+
+def evaluate(comps, name: str, memo=None, depth: int = 0):
+    if memo is None:
+        memo = {}
+    if name in memo:
+        return memo[name]
+    c = comps.get(name)
+    zero = (0.0, 0.0, {k: 0.0 for k in _COLLECTIVES})
+    if c is None or depth > 128:
+        return zero
+    memo[name] = zero   # cycle guard
+    fl, by = c.flops, c.hbm_bytes
+    coll = dict(c.coll)
+    for kind, child in c.children:
+        cf, cb, cc = evaluate(comps, child, memo, depth + 1)
+        mult = _trip(comps, kind.split(":", 1)[1]) if kind.startswith("while:") else 1
+        fl += mult * cf
+        by += mult * cb
+        for k in _COLLECTIVES:
+            coll[k] += mult * cc[k]
+    memo[name] = (fl, by, coll)
+    return memo[name]
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    comps, entry = parse_hlo(hlo)
+    if entry is None:
+        entry = max(comps, key=lambda k: len(comps[k].children), default=None)
+    fl, by, coll = evaluate(comps, entry) if entry else (0.0, 0.0, {})
+    out = {"flops": fl, "hbm_bytes": by}
+    for k in _COLLECTIVES:
+        out[f"coll_{k}"] = coll.get(k, 0.0) if coll else 0.0
+    out["coll_total"] = sum(out[f"coll_{k}"] for k in _COLLECTIVES)
+    return out

@@ -1,0 +1,89 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run lowers
+against these (weak-type-correct, shardable, zero allocation).
+
+``input_specs(arch, shape_name)`` returns a dict describing the program to
+lower for that (architecture x input shape) pair:
+
+  kind="train"   -> fed_round(params, opt_state, cohort_batch, weights, lr)
+  kind="prefill" -> prefill(params, batch)
+  kind="decode"  -> decode_step(params, state, tok)
+
+plus the matching in_shardings builders (see ``steps.py``).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.common import INPUT_SHAPES, ArchSpec
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _token_dtype():
+    return jnp.int32
+
+
+def cohort_batch_specs(arch: ArchSpec, shape_name: str) -> Dict:
+    """Training cohort batch: leaves (K, E, B_loc, ...)."""
+    shp = INPUT_SHAPES[shape_name]
+    assert shp["kind"] == "train"
+    cfg = arch.model_for_shape(shape_name)
+    K = arch.fed.cohort_size
+    E = arch.fed.local_steps
+    B = arch.fed.local_batch_for(shp["global_batch"])
+    S = shp["seq_len"]
+    emb_dtype = cfg.np_dtype
+    if cfg.family == "vlm":
+        text = S - cfg.n_patches
+        batch = {"tokens": SDS((K, E, B, text), _token_dtype()),
+                 "patch_embeds": SDS((K, E, B, cfg.n_patches, cfg.vit_dim), emb_dtype)}
+    elif cfg.family == "audio":
+        batch = {"tokens": SDS((K, E, B, S), _token_dtype()),
+                 "frames": SDS((K, E, B, cfg.enc_seq, cfg.d_model), emb_dtype)}
+    else:
+        batch = {"tokens": SDS((K, E, B, S), _token_dtype())}
+    return batch
+
+
+def prefill_batch_specs(arch: ArchSpec, shape_name: str) -> Dict:
+    shp = INPUT_SHAPES[shape_name]
+    cfg = arch.model_for_shape(shape_name)
+    B, S = shp["global_batch"], shp["seq_len"]
+    emb_dtype = cfg.np_dtype
+    if cfg.family == "vlm":
+        return {"tokens": SDS((B, S - cfg.n_patches), _token_dtype()),
+                "patch_embeds": SDS((B, cfg.n_patches, cfg.vit_dim), emb_dtype)}
+    if cfg.family == "audio":
+        return {"tokens": SDS((B, S), _token_dtype()),
+                "frames": SDS((B, cfg.enc_seq, cfg.d_model), emb_dtype)}
+    return {"tokens": SDS((B, S), _token_dtype())}
+
+
+def decode_tok_specs(arch: ArchSpec, shape_name: str):
+    shp = INPUT_SHAPES[shape_name]
+    return SDS((shp["global_batch"], 1), _token_dtype())
+
+
+def decode_state_specs(arch: ArchSpec, shape_name: str):
+    """eval_shape of init_decode_state — no allocation."""
+    from ..models import get_model_api
+    shp = INPUT_SHAPES[shape_name]
+    cfg = arch.model_for_shape(shape_name)
+    api = get_model_api(cfg)
+    return jax.eval_shape(lambda: api.init_decode_state(shp["global_batch"],
+                                                        shp["seq_len"]))
+
+
+def param_specs(cfg) -> Dict:
+    """eval_shape of init_params — no allocation."""
+    from ..models import get_model_api
+    api = get_model_api(cfg)
+    return jax.eval_shape(lambda: api.init_params(jax.random.PRNGKey(0)))
+
+
+def count_params(cfg) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(param_specs(cfg))))

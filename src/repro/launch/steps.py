@@ -1,0 +1,160 @@
+"""Build the jittable programs + shardings for every (arch x shape) pair.
+
+Three program kinds (see ``specs.py``):
+  train   — the F3AST federated round (local SGD cohort + weighted unbiased
+            aggregation + server optimizer)
+  prefill — full-sequence forward, last-position logits
+  decode  — single-token serve step against KV caches / recurrent state
+
+Each builder returns (fn, arg_structs, in_shardings, out_shardings) so the
+dry-run can do ``jax.jit(fn, in_shardings=..., out_shardings=...)
+.lower(*arg_structs).compile()`` with zero allocation, and the real driver
+can reuse the same program with concrete arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.common import INPUT_SHAPES, ArchSpec
+from ..core.fedstep import RoundMetrics, make_fed_round
+from ..models import get_model_api
+from ..optim import make_optimizer
+from ..sharding import batch_shardings, decode_state_shardings, param_shardings
+from ..sharding import hooks
+from . import specs as S
+from .mesh import data_axes
+
+
+def _repl(mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def _configure_hooks(mesh, cfg, *, sequential: bool, seq_parallel: bool = True):
+    """Activation logical-axis mapping.  'batch' carries the data split only
+    in sequential mode (parallel mode vmaps the cohort — ranks shift, and
+    the hooks skip on rank mismatch anyway).  'sequence' -> model enables
+    the sequence-parallel residual stream (divisibility-gated per tensor,
+    so decode's S=1 automatically opts out)."""
+    daxes = data_axes(mesh)
+    msize = mesh.shape["model"]
+    heads_ok = cfg.n_heads and cfg.n_heads % msize == 0
+    kv_ok = cfg.n_kv_heads and cfg.n_kv_heads % msize == 0
+    hooks.configure(mesh, {
+        "batch": daxes if sequential else None,
+        "tensor": "model",
+        "expert": None,
+        "sequence": "model" if (sequential and seq_parallel) else None,
+        "heads": "model" if heads_ok else None,
+        "kv_heads": "model" if kv_ok else None,
+        # head-count not divisible -> parallelize attention over queries
+        "q_seq": None if heads_ok else "model",
+    })
+
+
+def build_train_step(arch: ArchSpec, shape_name: str, mesh):
+    cfg = arch.model_for_shape(shape_name).replace(remat=arch.fed.remat)
+    api = get_model_api(cfg)
+    opt = make_optimizer(arch.fed.server_opt, lr=1.0 if arch.fed.server_opt == "sgd"
+                         else 1e-3)
+    sequential = arch.fed.cohort_mode == "sequential"
+    daxes = data_axes(mesh)
+    fsdp = daxes if sequential else None
+    _configure_hooks(mesh, cfg, sequential=sequential,
+                     seq_parallel=arch.fed.seq_parallel)
+    p_specs = S.param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, fsdp_axes=fsdp)
+    fed_round = make_fed_round(api.loss_fn, opt, mode=arch.fed.cohort_mode,
+                               remat=False,
+                               param_shardings=p_shard if sequential else None,
+                               acc_dtype=jnp.dtype(arch.fed.acc_dtype))
+    o_specs = jax.eval_shape(opt.init, p_specs)
+    # Server-optimizer state is always FSDP-sharded (ZeRO-1 style): even when
+    # params are replicated for the parallel cohort mode, Adam moments are
+    # f32 x2 and would otherwise dominate per-device memory.
+    o_shard = param_shardings(o_specs, mesh, fsdp_axes=daxes)
+
+    batch_specs = S.cohort_batch_specs(arch, shape_name)
+    # parallel: shard the cohort axis (dim 0); sequential: shard the local
+    # batch axis (dim 2) — the cohort axis is lax.scan-ned.
+    bdim = 2 if sequential else 0
+    b_shard = batch_shardings(batch_specs, mesh, batch_dim_axes=daxes,
+                              batch_dim=bdim)
+    K = arch.fed.cohort_size
+    w_spec = jax.ShapeDtypeStruct((K,), jnp.float32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+    w_shard = NamedSharding(mesh, P())
+    lr_shard = NamedSharding(mesh, P())
+
+    args = (p_specs, o_specs, batch_specs, w_spec, lr_spec)
+    in_sh = (p_shard, o_shard, b_shard, w_shard, lr_shard)
+    metrics_sh = RoundMetrics(*([NamedSharding(mesh, P())] * 3))
+    out_sh = (p_shard, o_shard, metrics_sh)
+    return fed_round, args, in_sh, out_sh
+
+
+def build_prefill_step(arch: ArchSpec, shape_name: str, mesh):
+    cfg = arch.model_for_shape(shape_name)
+    api = get_model_api(cfg)
+    daxes = data_axes(mesh)
+    _configure_hooks(mesh, cfg, sequential=True)   # prefill batch is flat
+
+    def prefill(params, batch):
+        if cfg.family == "audio":
+            logits, _ = api.module.forward(cfg, params, batch)
+        else:
+            logits, _ = api.forward(params, batch)
+        return logits[:, -1:, :]
+
+    p_specs = S.param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, fsdp_axes=None)
+    batch_specs = S.prefill_batch_specs(arch, shape_name)
+    b_shard = batch_shardings(batch_specs, mesh, batch_dim_axes=daxes, batch_dim=0)
+    B = INPUT_SHAPES[shape_name]["global_batch"]
+    vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    out_sh = NamedSharding(
+        mesh, P(daxes if B % _size(mesh, daxes) == 0 else None, None, vshard))
+    args = (p_specs, batch_specs)
+    return prefill, args, (p_shard, b_shard), out_sh
+
+
+def build_decode_step(arch: ArchSpec, shape_name: str, mesh):
+    cfg = arch.model_for_shape(shape_name)
+    api = get_model_api(cfg)
+    daxes = data_axes(mesh)
+    B = INPUT_SHAPES[shape_name]["global_batch"]
+    _configure_hooks(mesh, cfg, sequential=B % _size(mesh, daxes) == 0)
+
+    def serve_step(params, state, tok):
+        return api.module.decode_step(cfg, params, state, tok)
+
+    p_specs = S.param_specs(cfg)
+    p_shard = param_shardings(p_specs, mesh, fsdp_axes=None)
+    st_specs = S.decode_state_specs(arch, shape_name)
+    st_shard = decode_state_shardings(st_specs, mesh, data_axes=daxes)
+    tok_spec = S.decode_tok_specs(arch, shape_name)
+    B = tok_spec.shape[0]
+    bshard = daxes if B % _size(mesh, daxes) == 0 else None
+    tok_shard = NamedSharding(mesh, P(bshard, None))
+    vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+    logits_sh = NamedSharding(mesh, P(bshard, None, vshard))
+    args = (p_specs, st_specs, tok_spec)
+    return serve_step, args, (p_shard, st_shard, tok_shard), (logits_sh, st_shard)
+
+
+def _size(mesh, axes):
+    import numpy as np
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def build_step(arch: ArchSpec, shape_name: str, mesh):
+    kind = INPUT_SHAPES[shape_name]["kind"]
+    if kind == "train":
+        return build_train_step(arch, shape_name, mesh)
+    if kind == "prefill":
+        return build_prefill_step(arch, shape_name, mesh)
+    return build_decode_step(arch, shape_name, mesh)

@@ -1,0 +1,31 @@
+"""Model zoo: assigned-architecture backbones + the paper's own models.
+
+``get_model_api(cfg)`` returns a uniform API namespace for any ModelConfig
+family (decoder-only families via ``transformer``, audio via ``encdec``).
+"""
+from __future__ import annotations
+
+import types
+
+from .layers import ModelConfig
+from . import transformer, encdec, rnn, resnet, softmax_reg
+from .rnn import LstmConfig
+from .resnet import ResNetConfig
+from .softmax_reg import SoftmaxRegConfig
+
+
+def get_model_api(cfg: ModelConfig):
+    mod = encdec if cfg.family == "audio" else transformer
+    return types.SimpleNamespace(
+        init_params=lambda key: mod.init_params(cfg, key),
+        forward=lambda params, batch: mod.forward(cfg, params, batch),
+        loss_fn=lambda params, batch: mod.loss_fn(cfg, params, batch),
+        init_decode_state=lambda batch, max_len: mod.init_decode_state(cfg, batch, max_len),
+        decode_step=lambda params, state, tok: mod.decode_step(cfg, params, state, tok),
+        module=mod,
+    )
+
+
+__all__ = ["ModelConfig", "LstmConfig", "ResNetConfig", "SoftmaxRegConfig",
+           "transformer", "encdec", "rnn", "resnet", "softmax_reg",
+           "get_model_api"]

@@ -1,0 +1,210 @@
+"""Whisper-style encoder–decoder backbone (arXiv:2212.04356).
+
+Per the assignment carve-out, the audio frontend (mel-spectrogram + two conv
+layers) is a STUB: the input pipeline provides precomputed frame embeddings
+``frames: (B, enc_seq, d_model)``.  Everything downstream — sinusoidal
+encoder positions, bidirectional encoder, causal decoder with cross-attention,
+learned decoder positions, tied unembedding — is implemented.
+
+API mirrors ``transformer.py`` (batch = {"frames", "tokens"}).
+Decode keeps per-layer self-attention KV caches plus cross-attention K/V
+precomputed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (ModelConfig, init_attention, init_mlp, init_rms,
+                     mlp_block, rms_norm, sdpa)
+
+
+def _sinusoid(seq: int, d: int):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _proj_qkv(p, xq, xkv, cfg: ModelConfig):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (xq @ p["wq"]).reshape(B, Sq, h, hd)
+    k = (xkv @ p["wk"]).reshape(B, Skv, kv, hd)
+    v = (xkv @ p["wv"]).reshape(B, Skv, kv, hd)
+    return q, k, v
+
+
+def _attn(p, xq, xkv, cfg: ModelConfig, causal: bool):
+    q, k, v = _proj_qkv(p, xq, xkv, cfg)
+    out = sdpa(q, k, v, causal=causal)
+    B, Sq = xq.shape[:2]
+    return out.reshape(B, Sq, -1) @ p["wo"]
+
+
+def _init_enc_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "ln2": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "attn": init_attention(k1, cfg),
+            "mlp": init_mlp(k2, cfg)}
+
+
+def _init_dec_block(key, cfg: ModelConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"ln1": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "ln2": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "ln3": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "self_attn": init_attention(k1, cfg),
+            "cross_attn": init_attention(k2, cfg),
+            "mlp": init_mlp(k3, cfg)}
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 5)
+    s = 1.0 / jnp.sqrt(cfg.d_model)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    params = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * s
+                  ).astype(cfg.np_dtype),
+        "dec_pos": (jax.random.normal(keys[1], (4096, cfg.d_model)) * 0.01
+                    ).astype(cfg.np_dtype),
+        "enc_blocks": jax.vmap(lambda k: _init_enc_block(k, cfg))(
+            jax.random.split(keys[2], n_enc)),
+        "dec_blocks": jax.vmap(lambda k: _init_dec_block(k, cfg))(
+            jax.random.split(keys[3], cfg.n_layers)),
+        "ln_enc": init_rms(None, cfg.d_model, cfg.np_dtype),
+        "ln_f": init_rms(None, cfg.d_model, cfg.np_dtype),
+    }
+    return params
+
+
+def encode(cfg: ModelConfig, params, frames):
+    x = frames.astype(cfg.np_dtype) + _sinusoid(frames.shape[1], cfg.d_model
+                                                ).astype(cfg.np_dtype)
+
+    def body(h, blk):
+        h = h + _attn(blk["attn"], rms_norm(h, blk["ln1"], cfg.norm_eps),
+                      rms_norm(h, blk["ln1"], cfg.norm_eps), cfg, causal=False)
+        h = h + mlp_block(blk["mlp"], rms_norm(h, blk["ln2"], cfg.norm_eps), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+
+def _decoder(cfg: ModelConfig, params, tokens, enc_out):
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(cfg.np_dtype)
+    if S <= params["dec_pos"].shape[0]:
+        x = x + params["dec_pos"][None, :S, :]
+
+    def body(h, blk):
+        hn = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        h = h + _attn(blk["self_attn"], hn, hn, cfg, causal=True)
+        h = h + _attn(blk["cross_attn"], rms_norm(h, blk["ln2"], cfg.norm_eps),
+                      enc_out, cfg, causal=False)
+        h = h + mlp_block(blk["mlp"], rms_norm(h, blk["ln3"], cfg.norm_eps), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    return rms_norm(x, params["ln_f"], cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    x = _decoder(cfg, params, batch["tokens"], enc_out)
+    logits = x @ params["embed"].T          # tied unembedding (whisper)
+    return logits, {"lb_loss": jnp.zeros((), jnp.float32)}
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    from .losses import fused_unembed_xent
+    enc_out = encode(cfg, params, batch["frames"])
+    x = _decoder(cfg, params, batch["tokens"], enc_out)
+    tgt = batch["tokens"][:, 1:]
+    mask = jnp.ones(tgt.shape, bool)
+    return fused_unembed_xent(x[:, :-1, :], params["embed"].T, tgt, mask)
+
+
+# ---------------------------------------------------------------------------
+# Decode (self KV caches + precomputed cross K/V)
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    zeros = lambda: jnp.zeros(shape, cfg.np_dtype)
+    L = cfg.n_layers
+    return {
+        "index": jnp.zeros((), jnp.int32),
+        "self_k": jnp.zeros((L,) + shape, cfg.np_dtype),
+        "self_v": jnp.zeros((L,) + shape, cfg.np_dtype),
+        # cross K/V filled by prefill(); enc_seq comes from cfg
+        "cross_k": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim),
+                             cfg.np_dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim),
+                             cfg.np_dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params, batch, state):
+    """Encode frames once and precompute cross-attention K/V per layer."""
+    enc_out = encode(cfg, params, batch["frames"])
+
+    def per_layer(blk):
+        _, k, v = _proj_qkv(blk["cross_attn"], enc_out[:, :1], enc_out, cfg)
+        return k, v
+
+    ck, cv = jax.vmap(per_layer)(params["dec_blocks"])
+    return dict(state, cross_k=ck, cross_v=cv)
+
+
+def decode_step(cfg: ModelConfig, params, state, tok_t):
+    B = tok_t.shape[0]
+    idx = state["index"]
+    x = params["embed"][tok_t].astype(cfg.np_dtype)
+    pos_idx = jnp.minimum(idx, params["dec_pos"].shape[0] - 1)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_idx, 1, 0)
+
+    def body(h, xs):
+        blk, sk, sv, ck, cv = xs
+        hn = rms_norm(h, blk["ln1"], cfg.norm_eps)
+        q, k_new, v_new = _proj_qkv(blk["self_attn"], hn, hn, cfg)
+        sk = jax.lax.dynamic_update_slice(sk, k_new, (0, idx, 0, 0))
+        sv = jax.lax.dynamic_update_slice(sv, v_new, (0, idx, 0, 0))
+        valid = jnp.arange(sk.shape[1]) <= idx
+        out = _masked_decode_attn(q, sk, sv, valid, cfg)
+        h = h + out.reshape(B, 1, -1) @ blk["self_attn"]["wo"]
+        # cross attention against precomputed enc K/V
+        qx, _, _ = _proj_qkv(blk["cross_attn"],
+                             rms_norm(h, blk["ln2"], cfg.norm_eps),
+                             rms_norm(h, blk["ln2"], cfg.norm_eps), cfg)
+        outx = sdpa(qx, ck, cv, causal=False)
+        h = h + outx.reshape(B, 1, -1) @ blk["cross_attn"]["wo"]
+        h = h + mlp_block(blk["mlp"], rms_norm(h, blk["ln3"], cfg.norm_eps), cfg)
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["dec_blocks"], state["self_k"], state["self_v"],
+                  state["cross_k"], state["cross_v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = x @ params["embed"].T
+    new_state = dict(state, index=idx + 1, self_k=sk, self_v=sv)
+    return logits, new_state
+
+
+def _masked_decode_attn(q, k, v, valid, cfg: ModelConfig):
+    B, _, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, 1, KV, g, hd)
+    logits = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)

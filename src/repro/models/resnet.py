@@ -1,0 +1,115 @@
+"""Paper's CIFAR100 model: ResNet-18 with GroupNorm replacing BatchNorm
+(Hsieh et al. 2020 / Reddi et al. 2020 federated modification).
+Pure-JAX convs; NHWC layout.  A ``width`` knob provides the reduced smoke
+variant without changing the topology.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetConfig:
+    n_classes: int = 100
+    width: int = 64                  # first-stage channels (paper: 64)
+    stages: Sequence[int] = (2, 2, 2, 2)   # ResNet-18
+    groups: int = 8                  # GroupNorm groups (divides width)
+
+
+def _conv(x, w, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def group_norm(x, scale, bias, groups, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    while C % g:
+        g -= 1
+    xg = x.reshape(B, H, W, g, C // g).astype(jnp.float32)
+    mean = xg.mean(axis=(1, 2, 4), keepdims=True)
+    var = xg.var(axis=(1, 2, 4), keepdims=True)
+    xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
+    return (xn * scale + bias).astype(x.dtype)
+
+
+def _init_conv(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * jnp.sqrt(2.0 / fan_in)
+
+
+def _init_gn(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _init_block(key, cin, cout, stride):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"conv1": _init_conv(k1, 3, 3, cin, cout), "gn1": _init_gn(cout),
+         "conv2": _init_conv(k2, 3, 3, cout, cout), "gn2": _init_gn(cout)}
+    if stride != 1 or cin != cout:
+        p["proj"] = _init_conv(k3, 1, 1, cin, cout)
+        p["gn_proj"] = _init_gn(cout)
+    return p
+
+
+def init_params(cfg: ResNetConfig, key):
+    keys = jax.random.split(key, 2 + sum(cfg.stages))
+    w = cfg.width
+    params = {"stem": _init_conv(keys[0], 3, 3, 3, w), "gn_stem": _init_gn(w),
+              "blocks": [], "fc_w": None, "fc_b": None}
+    cin = w
+    ki = 1
+    for si, n in enumerate(cfg.stages):
+        cout = w * (2 ** si)
+        for bi in range(n):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            params["blocks"].append(
+                {"p": _init_block(keys[ki], cin, cout, stride), "stride": stride})
+            cin = cout
+            ki += 1
+    params["fc_w"] = jax.random.normal(keys[ki], (cin, cfg.n_classes)) / jnp.sqrt(cin)
+    params["fc_b"] = jnp.zeros((cfg.n_classes,))
+    # strides are static python ints — separate them from the param pytree
+    strides = tuple(b["stride"] for b in params["blocks"])
+    params["blocks"] = [b["p"] for b in params["blocks"]]
+    return params, strides
+
+
+def _block(p, x, stride, groups):
+    y = _conv(x, p["conv1"], stride)
+    y = jax.nn.relu(group_norm(y, p["gn1"]["scale"], p["gn1"]["bias"], groups))
+    y = _conv(y, p["conv2"], 1)
+    y = group_norm(y, p["gn2"]["scale"], p["gn2"]["bias"], groups)
+    if "proj" in p:
+        x = group_norm(_conv(x, p["proj"], stride),
+                       p["gn_proj"]["scale"], p["gn_proj"]["bias"], groups)
+    return jax.nn.relu(x + y)
+
+
+def forward(cfg: ResNetConfig, params, strides, images):
+    x = _conv(images, params["stem"], 1)
+    x = jax.nn.relu(group_norm(x, params["gn_stem"]["scale"],
+                               params["gn_stem"]["bias"], cfg.groups))
+    for p, s in zip(params["blocks"], strides):
+        x = _block(p, x, s, cfg.groups)
+    x = x.mean(axis=(1, 2))
+    return x @ params["fc_w"] + params["fc_b"]
+
+
+def make_loss_fn(cfg: ResNetConfig, strides):
+    def loss_fn(params, batch):
+        logits = forward(cfg, params, strides, batch["x"])
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, batch["y"][..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - gold)
+    return loss_fn
+
+
+def accuracy(cfg: ResNetConfig, params, strides, batch):
+    logits = forward(cfg, params, strides, batch["x"])
+    return jnp.mean(jnp.argmax(logits, -1) == batch["y"])

@@ -1,0 +1,84 @@
+"""Paper's Shakespeare model (Table 6): char embedding (dim 8) -> 2 LSTMs
+(hidden 256) -> dense softmax over the ~90-char vocabulary.
+Pure-JAX LSTM with lax.scan over time.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LstmConfig:
+    vocab: int = 90
+    embed_dim: int = 8
+    hidden: int = 256
+    n_layers: int = 2
+    seq_len: int = 80
+
+
+def _init_lstm_layer(key, in_dim, hidden):
+    k1, k2 = jax.random.split(key)
+    s = 1.0 / jnp.sqrt(in_dim + hidden)
+    return {
+        "wx": jax.random.normal(k1, (in_dim, 4 * hidden)) * s,
+        "wh": jax.random.normal(k2, (hidden, 4 * hidden)) * s,
+        "b": jnp.zeros((4 * hidden,)).at[:hidden].set(1.0),  # forget-gate bias 1
+    }
+
+
+def init_params(cfg: LstmConfig, key):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params = {"embed": jax.random.normal(keys[0], (cfg.vocab, cfg.embed_dim)) * 0.1,
+              "out_w": jax.random.normal(keys[1], (cfg.hidden, cfg.vocab))
+              / jnp.sqrt(cfg.hidden),
+              "out_b": jnp.zeros((cfg.vocab,))}
+    in_dim = cfg.embed_dim
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(_init_lstm_layer(keys[2 + i], in_dim, cfg.hidden))
+        in_dim = cfg.hidden
+    params["lstm"] = layers
+    return params
+
+
+def _lstm_layer(p, x):
+    """x: (B, S, D) -> (B, S, H)."""
+    B, S, _ = x.shape
+    H = p["wh"].shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        gates = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+        f, i, o, g = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), h
+
+    init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+    _, hs = jax.lax.scan(step, init, x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2)
+
+
+def forward(cfg: LstmConfig, params, tokens):
+    x = params["embed"][tokens]
+    for p in params["lstm"]:
+        x = _lstm_layer(p, x)
+    return x @ params["out_w"] + params["out_b"]
+
+
+def loss_fn(cfg: LstmConfig, params, batch):
+    tokens = batch["tokens"]
+    logits = forward(cfg, params, tokens)[:, :-1, :]
+    tgt = tokens[:, 1:]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def accuracy(cfg: LstmConfig, params, batch):
+    tokens = batch["tokens"]
+    logits = forward(cfg, params, tokens)[:, :-1, :]
+    return jnp.mean(jnp.argmax(logits, -1) == tokens[:, 1:])

@@ -1,0 +1,254 @@
+"""State-space blocks: Mamba-2 SSD (state-space duality, arXiv:2405.21060)
+and the RG-LRU recurrent block of RecurrentGemma/Griffin (arXiv:2402.19427).
+
+Both provide a full-sequence path (chunked SSD / associative scan) used for
+training and prefill, and an O(1)-state single-token path used for decode —
+this is what makes the ``long_500k`` shape feasible for these families.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ModelConfig, rms_norm
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv1d (width w), with streaming state for decode
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, D); w: (W, D) depthwise taps; returns (B, S, D)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b
+
+
+def causal_conv1d_step(x_t: jnp.ndarray, conv_state: jnp.ndarray,
+                       w: jnp.ndarray, b: jnp.ndarray):
+    """x_t: (B, 1, D); conv_state: (B, W-1, D) past inputs; returns (y_t, state)."""
+    window = jnp.concatenate([conv_state, x_t], axis=1)        # (B, W, D)
+    y = jnp.einsum("bwd,wd->bd", window, w)[:, None, :] + b
+    return y, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state      # x, B, C go through the conv
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    N = cfg.ssm_state
+    keys = jax.random.split(key, 6)
+    proj_out = 2 * d_inner + 2 * N + H           # z, x, B, C, dt
+    s = 1.0 / jnp.sqrt(d)
+    return {
+        "in_proj": (jax.random.normal(keys[0], (d, proj_out)) * s).astype(cfg.np_dtype),
+        "conv_w": (jax.random.normal(keys[1], (cfg.conv_width, conv_dim)) * 0.1).astype(cfg.np_dtype),
+        "conv_b": jnp.zeros((conv_dim,), cfg.np_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.zeros((d_inner,), cfg.np_dtype),
+        "out_proj": (jax.random.normal(keys[2], (d_inner, d)) /
+                     jnp.sqrt(d_inner)).astype(cfg.np_dtype),
+    }
+
+
+def _ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """Chunked SSD (the 'dual form' of Mamba-2), pure-jnp reference.
+
+    x : (B, S, H, P)   per-head inputs
+    dt: (B, S, H)      positive step sizes
+    A : (H,)           negative per-head decay
+    Bm, Cm: (B, S, N)  shared (n_groups = 1) input/output projections
+    Returns y: (B, S, H, P).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    a = dt * A[None, None, :]                       # (B, S, H), negative
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    ar = a.reshape(Bsz, nc, Q, H)
+    dtr = dt.reshape(Bsz, nc, Q, H)
+    Br = Bm.reshape(Bsz, nc, Q, N)
+    Cr = Cm.reshape(Bsz, nc, Q, N)
+
+    cum = jnp.cumsum(ar, axis=2)                    # within-chunk cumsum (B,nc,Q,H)
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for i >= j.  Mask BEFORE the
+    # exp: for i < j the difference is positive and exp overflows; an inf in
+    # the forward pass poisons the VJP (inf * 0 = NaN) even though the value
+    # itself is masked out.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", Cr.astype(jnp.float32),
+                        Br.astype(jnp.float32))                  # (B,nc,Q,Q)
+    M = scores[..., None] * L                                    # (B,nc,Q,Q,H)
+    xdt = xr.astype(jnp.float32) * dtr[..., None]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # chunk states: state_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)              # (B,nc,Q,H)
+    chunk_states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                              decay_to_end * dtr, Br.astype(jnp.float32),
+                              xr.astype(jnp.float32))            # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def scan_fn(h, inp):
+        st, dec = inp                                            # (B,H,N,P), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                          # emit state *before* chunk
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, h_prev = jax.lax.scan(scan_fn,
+                             h0,
+                             (chunk_states.transpose(1, 0, 2, 3, 4),
+                              chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cr.astype(jnp.float32), jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype)
+
+
+def mamba2_block(p, x, cfg: ModelConfig, use_kernel: bool = False):
+    """Full-sequence Mamba-2 mixer. x: (B, S, d_model)."""
+    B, S, d = x.shape
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    xbc = causal_conv1d(jnp.concatenate([xs, Bm, Cm], -1), p["conv_w"], p["conv_b"])
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, S, H, P)
+    if use_kernel:
+        from ..kernels import ops as kops
+        y = kops.ssd(xh, dt, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y = _ssd_chunked(xh, dt, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype):
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode(p, x_t, cfg: ModelConfig, state):
+    """Single-token recurrent update. x_t: (B, 1, d_model)."""
+    B = x_t.shape[0]
+    d_inner, H, conv_dim = mamba2_dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    zxbcdt = x_t @ p["in_proj"]
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1)
+    xbc_t, conv_state = causal_conv1d_step(
+        jnp.concatenate([xs, Bm, Cm], -1), state["conv"], p["conv_w"], p["conv_b"])
+    xbc_t = jax.nn.silu(xbc_t)
+    xs, Bm, Cm = jnp.split(xbc_t, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, H, P).astype(jnp.float32)
+    decay = jnp.exp(dt * A[None, :])                                     # (B, H)
+    # h <- decay * h + dt * B x^T ;  y = C . h + D x
+    h = state["ssm"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bm[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(x_t.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"ssm": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RG_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d, w = cfg.d_model, cfg.lru_width
+    keys = jax.random.split(key, 6)
+    s = 1.0 / jnp.sqrt(d)
+    sw = 1.0 / jnp.sqrt(w)
+    # Lambda init so that a = exp(-c*softplus(L)) is in (0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(jnp.linspace(0.9, 0.999, w)) / _RG_C))
+    return {
+        "wx": (jax.random.normal(keys[0], (d, w)) * s).astype(cfg.np_dtype),
+        "wy": (jax.random.normal(keys[1], (d, w)) * s).astype(cfg.np_dtype),
+        "conv_w": (jax.random.normal(keys[2], (cfg.conv_width, w)) * 0.1).astype(cfg.np_dtype),
+        "conv_b": jnp.zeros((w,), cfg.np_dtype),
+        "w_a": (jax.random.normal(keys[3], (w, w)) * sw).astype(cfg.np_dtype),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": (jax.random.normal(keys[4], (w, w)) * sw).astype(cfg.np_dtype),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "wo": (jax.random.normal(keys[5], (w, d)) * sw).astype(cfg.np_dtype),
+    }
+
+
+def _rglru_gates(p, u):
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"].astype(jnp.float32) + p["b_i"])
+    log_a = -_RG_C * jax.nn.softplus(p["lam"]) * r                  # (B, S, w)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_block(p, x, cfg: ModelConfig):
+    """Full-sequence Griffin recurrent block: conv1d -> RG-LRU, GeGLU-style gate."""
+    u = causal_conv1d(x @ p["wx"], p["conv_w"], p["conv_b"])
+    a, gated = _rglru_gates(p, u)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = h.astype(x.dtype) * jax.nn.gelu(x @ p["wy"])
+    return y @ p["wo"]
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_decode(p, x_t, cfg: ModelConfig, state):
+    u, conv_state = causal_conv1d_step(x_t @ p["wx"], state["conv"],
+                                       p["conv_w"], p["conv_b"])
+    a, gated = _rglru_gates(p, u)
+    h = a[:, 0] * state["h"] + gated[:, 0]
+    y = h[:, None, :].astype(x_t.dtype) * jax.nn.gelu(x_t @ p["wy"])
+    return y @ p["wo"], {"h": h, "conv": conv_state}

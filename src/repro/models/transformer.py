@@ -1,0 +1,374 @@
+"""Decoder-only model assembly for the dense / moe / ssm / hybrid / vlm
+families.  One parameter pytree, `lax.scan` over stacked layer params (both
+for compile time and so remat policies apply per-layer), full-sequence
+training/prefill path and KV-cache/recurrent-state decode path.
+
+Public API (family-dispatched; encoder-decoder lives in ``encdec.py``):
+
+    init_params(cfg, key)                       -> params
+    forward(cfg, params, batch)                 -> (logits, aux)
+    loss_fn(cfg, params, batch)                 -> scalar CE (+ aux losses)
+    init_decode_state(cfg, batch, max_len)      -> state
+    prefill(cfg, params, tokens, state)         -> (logits_last, state)
+    decode_step(cfg, params, state, tok_t)      -> (logits, state)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (ModelConfig, attention_block, attention_decode,
+                     init_attention, init_mlp, init_moe, init_rms, mlp_block,
+                     moe_block, rms_norm)
+from . import ssm as ssm_lib
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _init_dense_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": init_rms(None, cfg.d_model, cfg.np_dtype),
+         "ln2": init_rms(None, cfg.d_model, cfg.np_dtype),
+         "attn": init_attention(k1, cfg)}
+    if cfg.mlp == "moe":
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k2, cfg)
+    return p
+
+
+def _dense_block(p, x, cfg: ModelConfig, positions, window: int):
+    h = x + attention_block(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                            cfg, positions, window=window)
+    z = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.mlp == "moe":
+        y, aux = moe_block(p["moe"], z, cfg)
+    else:
+        y, aux = mlp_block(p["mlp"], z, cfg), {"lb_loss": jnp.zeros((), jnp.float32)}
+    return h + y, aux
+
+
+def _dense_block_decode(p, x, cfg: ModelConfig, cache, index, window: int):
+    a, cache = attention_decode(p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                cfg, cache, index, window=window)
+    h = x + a
+    z = rms_norm(h, p["ln2"], cfg.norm_eps)
+    if cfg.mlp == "moe":
+        y, _ = moe_block(p["moe"], z, cfg)
+    else:
+        y = mlp_block(p["mlp"], z, cfg)
+    return h + y, cache
+
+
+def _init_ssm_block(key, cfg: ModelConfig):
+    return {"ln": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "mixer": ssm_lib.init_mamba2(key, cfg)}
+
+
+def _ssm_block(p, x, cfg: ModelConfig):
+    return x + ssm_lib.mamba2_block(p["mixer"], rms_norm(x, p["ln"], cfg.norm_eps), cfg)
+
+
+def _ssm_block_decode(p, x, cfg: ModelConfig, state):
+    y, state = ssm_lib.mamba2_decode(p["mixer"], rms_norm(x, p["ln"], cfg.norm_eps),
+                                     cfg, state)
+    return x + y, state
+
+
+def _init_rec_block(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {"ln1": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "ln2": init_rms(None, cfg.d_model, cfg.np_dtype),
+            "rglru": ssm_lib.init_rglru(k1, cfg),
+            "mlp": init_mlp(k2, cfg)}
+
+
+def _rec_block(p, x, cfg: ModelConfig):
+    h = x + ssm_lib.rglru_block(p["rglru"], rms_norm(x, p["ln1"], cfg.norm_eps), cfg)
+    return h + mlp_block(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg)
+
+
+def _rec_block_decode(p, x, cfg: ModelConfig, state):
+    y, state = ssm_lib.rglru_decode(p["rglru"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                                    cfg, state)
+    h = x + y
+    return h + mlp_block(p["mlp"], rms_norm(h, p["ln2"], cfg.norm_eps), cfg), state
+
+
+# ---------------------------------------------------------------------------
+# Hybrid pattern bookkeeping (recurrentgemma: ("rec","rec","attn") groups)
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_layout(cfg: ModelConfig):
+    pat = cfg.hybrid_pattern or ("rec", "rec", "attn")
+    n_groups = cfg.n_layers // len(pat)
+    remainder = cfg.n_layers - n_groups * len(pat)
+    return pat, n_groups, remainder   # remainder layers are "rec" blocks
+
+
+# ---------------------------------------------------------------------------
+# init_params
+# ---------------------------------------------------------------------------
+
+
+def _stacked_init(block_init, key, n, cfg):
+    return jax.vmap(lambda k: block_init(k, cfg))(jax.random.split(key, n))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 8)
+    emb_scale = 1.0 / jnp.sqrt(cfg.d_model)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model))
+                  * emb_scale).astype(cfg.np_dtype),
+        "ln_f": init_rms(None, cfg.d_model, cfg.np_dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(keys[1], (cfg.d_model, cfg.vocab))
+                             * emb_scale).astype(cfg.np_dtype)
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        params["blocks"] = _stacked_init(_init_dense_block, keys[2], cfg.n_layers, cfg)
+    elif fam == "ssm":
+        params["blocks"] = _stacked_init(_init_ssm_block, keys[2], cfg.n_layers, cfg)
+    elif fam == "hybrid":
+        pat, n_groups, rem = _hybrid_layout(cfg)
+
+        def group_init(k, cfg=cfg):
+            gk = jax.random.split(k, len(pat))
+            return {f"{i}_{t}": (_init_rec_block(gk[i], cfg) if t == "rec"
+                                 else _init_dense_block(gk[i], cfg))
+                    for i, t in enumerate(pat)}
+
+        params["groups"] = jax.vmap(lambda k: group_init(k))(
+            jax.random.split(keys[2], n_groups))
+        if rem:
+            params["tail"] = _stacked_init(_init_rec_block, keys[3], rem, cfg)
+    else:
+        raise ValueError(f"family {fam!r} not handled here")
+    if fam == "vlm":
+        k1, k2 = jax.random.split(keys[4])
+        s = 1.0 / jnp.sqrt(cfg.vit_dim)
+        params["projector"] = {
+            "w1": (jax.random.normal(k1, (cfg.vit_dim, cfg.d_model)) * s).astype(cfg.np_dtype),
+            "w2": (jax.random.normal(k2, (cfg.d_model, cfg.d_model))
+                   / jnp.sqrt(cfg.d_model)).astype(cfg.np_dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / teacher-forced)
+# ---------------------------------------------------------------------------
+
+
+def _window(cfg: ModelConfig) -> int:
+    if cfg.long_context_window:
+        return cfg.long_context_window
+    return cfg.sliding_window
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch):
+    """Returns (x (B,S,d), text_mask (B,S)) — VLM prepends projected patches."""
+    tokens = batch["tokens"]
+    x_txt = params["embed"][tokens].astype(cfg.np_dtype)
+    if cfg.family == "vlm":
+        pe = batch["patch_embeds"].astype(cfg.np_dtype)        # (B, P, vit_dim)
+        proj = jax.nn.gelu(pe @ params["projector"]["w1"]) @ params["projector"]["w2"]
+        x = jnp.concatenate([proj, x_txt], axis=1)
+        tmask = jnp.concatenate(
+            [jnp.zeros(proj.shape[:2], bool), jnp.ones(tokens.shape, bool)], axis=1)
+        return x, tmask
+    return x_txt, jnp.ones(tokens.shape, bool)
+
+
+def backbone(cfg: ModelConfig, params, x) -> tuple[jnp.ndarray, Dict]:
+    """Run the stacked blocks over embeddings x: (B, S, d)."""
+    from ..sharding import hooks
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    w = _window(cfg)
+    fam = cfg.family
+    maybe_remat = jax.checkpoint if cfg.remat else (lambda f: f)
+
+    def seq_c(h):
+        # sequence-parallel residual stream (Korthikanti et al.): between
+        # blocks the (B, S, d) stream is sharded on S over the model axis;
+        # XLA inserts the all-gather/reduce-scatter transitions around the
+        # tensor-parallel regions.  Cuts residual/LN activation memory and
+        # the per-layer scan residuals by the model-axis size.
+        return hooks.constrain(h, ("batch", "sequence", None))
+
+    x = seq_c(x)
+    if fam in ("dense", "moe", "vlm"):
+        @maybe_remat
+        def body(h, blk):
+            h, aux = _dense_block(blk, h, cfg, positions, w)
+            return seq_c(h), aux["lb_loss"]
+        x, lb = jax.lax.scan(body, x, params["blocks"])
+        aux = {"lb_loss": lb.sum()}
+    elif fam == "ssm":
+        @maybe_remat
+        def body(h, blk):
+            return seq_c(_ssm_block(blk, h, cfg)), None
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        aux = {"lb_loss": jnp.zeros((), jnp.float32)}
+    elif fam == "hybrid":
+        pat, n_groups, rem = _hybrid_layout(cfg)
+
+        @maybe_remat
+        def gbody(h, grp):
+            for i, t in enumerate(pat):
+                blk = grp[f"{i}_{t}"]
+                if t == "rec":
+                    h = _rec_block(blk, h, cfg)
+                else:
+                    h, _ = _dense_block(blk, h, cfg, positions, cfg.sliding_window)
+            return h, None
+        x, _ = jax.lax.scan(gbody, x, params["groups"])
+        if rem:
+            def tbody(h, blk):
+                return _rec_block(blk, h, cfg), None
+            x, _ = jax.lax.scan(tbody, x, params["tail"])
+        aux = {"lb_loss": jnp.zeros((), jnp.float32)}
+    else:
+        raise ValueError(fam)
+    return x, aux
+
+
+def unembed(cfg: ModelConfig, params, x):
+    xn = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    proj = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    return xn @ proj
+
+
+def forward(cfg: ModelConfig, params, batch):
+    x, tmask = _embed_inputs(cfg, params, batch)
+    x, aux = backbone(cfg, params, x)
+    logits = unembed(cfg, params, x)
+    aux["text_mask"] = tmask
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Next-token CE over text positions (+ 0.01 * MoE load-balance loss).
+
+    The unembedding is FUSED into the chunked CE (see ``losses.py``): the
+    full (B, T, V) logits are never materialized — critical at 100k+ vocab."""
+    from .losses import fused_unembed_xent
+    x, tmask = _embed_inputs(cfg, params, batch)
+    x, aux = backbone(cfg, params, x)
+    xn = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    proj = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    tokens = batch["tokens"]
+    n_prefix = x.shape[1] - tokens.shape[1]        # VLM image prefix length
+    x_txt = xn[:, n_prefix:, :]
+    mask = tmask[:, n_prefix:][:, 1:]
+    if "loss_mask" in batch:
+        mask = mask & batch["loss_mask"][:, 1:]
+    ce = fused_unembed_xent(x_txt[:, :-1, :], proj, tokens[:, 1:], mask)
+    return ce + 0.01 * aux["lb_loss"]
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+
+def _kv_cache_init(cfg: ModelConfig, batch: int, max_len: int, window: int):
+    M = min(max_len, window) if window > 0 else max_len
+    shape = (batch, M, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.np_dtype),
+            "v": jnp.zeros(shape, cfg.np_dtype)}
+
+
+def _stack(tree, n: int):
+    """Stack n zero-initialized copies of a state tree along a new axis 0."""
+    return jax.tree.map(lambda x: jnp.zeros((n,) + x.shape, x.dtype), tree)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    fam = cfg.family
+    w = _window(cfg)
+    state: Dict[str, Any] = {"index": jnp.zeros((), jnp.int32)}
+    if fam in ("dense", "moe", "vlm"):
+        state["caches"] = _stack(_kv_cache_init(cfg, batch, max_len, w), cfg.n_layers)
+    elif fam == "ssm":
+        state["caches"] = _stack(ssm_lib.mamba2_init_state(cfg, batch, cfg.np_dtype),
+                                 cfg.n_layers)
+    elif fam == "hybrid":
+        pat, n_groups, rem = _hybrid_layout(cfg)
+        grp = {f"{i}_{t}": (ssm_lib.rglru_init_state(cfg, batch, cfg.np_dtype)
+                            if t == "rec" else
+                            _kv_cache_init(cfg, batch, max_len, cfg.sliding_window))
+               for i, t in enumerate(pat)}
+        state["groups"] = _stack(grp, n_groups)
+        if rem:
+            state["tail"] = _stack(ssm_lib.rglru_init_state(cfg, batch, cfg.np_dtype),
+                                   rem)
+    return state
+
+
+def decode_step(cfg: ModelConfig, params, state, tok_t):
+    """One decode step. tok_t: (B, 1) int32. Returns (logits (B,1,V), state)."""
+    x = params["embed"][tok_t].astype(cfg.np_dtype)
+    idx = state["index"]
+    w = _window(cfg)
+    fam = cfg.family
+
+    if fam in ("dense", "moe", "vlm"):
+        def body(h, xs):
+            blk, cache = xs
+            h, cache = _dense_block_decode(blk, h, cfg, cache, idx, w)
+            return h, cache
+        x, caches = jax.lax.scan(body, x, (params["blocks"], state["caches"]))
+        new_state = {"index": idx + 1, "caches": caches}
+    elif fam == "ssm":
+        def body(h, xs):
+            blk, st = xs
+            h, st = _ssm_block_decode(blk, h, cfg, st)
+            return h, st
+        x, caches = jax.lax.scan(body, x, (params["blocks"], state["caches"]))
+        new_state = {"index": idx + 1, "caches": caches}
+    elif fam == "hybrid":
+        pat, n_groups, rem = _hybrid_layout(cfg)
+
+        def gbody(h, xs):
+            grp, st = xs
+            new_st = {}
+            for i, t in enumerate(pat):
+                key = f"{i}_{t}"
+                if t == "rec":
+                    h, new_st[key] = _rec_block_decode(grp[key], h, cfg, st[key])
+                else:
+                    h, new_st[key] = _dense_block_decode(grp[key], h, cfg, st[key],
+                                                         idx, cfg.sliding_window)
+            return h, new_st
+        x, groups = jax.lax.scan(gbody, x, (params["groups"], state["groups"]))
+        new_state = {"index": idx + 1, "groups": groups}
+        if rem:
+            def tbody(h, xs):
+                blk, st = xs
+                h, st = _rec_block_decode(blk, h, cfg, st)
+                return h, st
+            x, tail = jax.lax.scan(tbody, x, (params["tail"], state["tail"]))
+            new_state["tail"] = tail
+    else:
+        raise ValueError(fam)
+
+    logits = unembed(cfg, params, x)
+    return logits, new_state
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Full-sequence prefill: returns last-position logits (KV caches are
+    exercised structurally via decode; prefill reuses the training path —
+    on TPU the same XLA program serves both)."""
+    logits, _ = forward(cfg, params, batch)
+    return logits[:, -1:, :]

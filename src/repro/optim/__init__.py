@@ -1,0 +1,9 @@
+from .optimizers import (
+    Optimizer,
+    sgd,
+    adam,
+    adamw,
+    yogi,
+    make_optimizer,
+)
+from .schedules import constant, inverse_decay, cosine, warmup_cosine, make_schedule

@@ -1,0 +1,122 @@
+"""Minimal optax-style optimizers built from scratch (no external deps).
+
+An :class:`Optimizer` is an (init, update) pair over arbitrary pytrees.
+``update(grads, state, params) -> (updates, state)`` returns *updates to be
+added* to the params (sign convention: pass pseudo-gradients ``Delta`` for
+FEDOPT server optimizers, or negative gradients are handled internally for
+client SGD — see ``apply_direction``).
+
+The FEDOPT family (Reddi et al. 2020), which the paper composes with
+(FedAvg = server SGD(lr=1), FedAdam = server Adam), is expressed by using
+these same optimizers server-side on the aggregated pseudo-gradient.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple]  # (direction, state, params) -> (updates, state)
+
+
+def _zeros_like(tree):
+    return jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), tree)
+
+
+def sgd(lr: float | Callable = 1.0, momentum: float = 0.0) -> Optimizer:
+    """SGD on a *descent direction*: updates = lr * direction (+ momentum).
+
+    With ``direction = Delta`` (aggregated pseudo-gradient, which already
+    points downhill) and lr = 1 this is exactly the paper's
+    SERVEROPT(w, Delta) = w + Delta.
+    """
+    sched = lr if callable(lr) else (lambda t: lr)
+
+    class SgdState(NamedTuple):
+        t: jnp.ndarray
+        mu: Any
+
+    def init(params):
+        mu = _zeros_like(params) if momentum else None
+        return SgdState(jnp.zeros((), jnp.int32), mu)
+
+    def update(direction, state, params=None):
+        step_lr = sched(state.t)
+        if momentum:
+            mu = jax.tree.map(lambda m, d: momentum * m + d, state.mu, direction)
+            upd = jax.tree.map(lambda m: step_lr * m, mu)
+            return upd, SgdState(state.t + 1, mu)
+        upd = jax.tree.map(lambda d: step_lr * d, direction)
+        return upd, SgdState(state.t + 1, None)
+
+    return Optimizer(init, update)
+
+
+def _adam_family(lr, b1, b2, eps, weight_decay, yogi_update):
+    sched = lr if callable(lr) else (lambda t: lr)
+
+    class AdamState(NamedTuple):
+        t: jnp.ndarray
+        m: Any
+        v: Any
+
+    def init(params):
+        return AdamState(jnp.zeros((), jnp.int32), _zeros_like(params), _zeros_like(params))
+
+    def update(direction, state, params=None):
+        t = state.t + 1
+        step_lr = sched(state.t)
+        m = jax.tree.map(lambda m_, d: b1 * m_ + (1 - b1) * d.astype(jnp.float32),
+                         state.m, direction)
+        if yogi_update:
+            # Yogi: v += -(1-b2) * sign(v - d^2) * d^2  (additive, sign-controlled)
+            v = jax.tree.map(
+                lambda v_, d: v_ - (1 - b2) * jnp.sign(v_ - jnp.square(d.astype(jnp.float32)))
+                * jnp.square(d.astype(jnp.float32)),
+                state.v, direction)
+        else:
+            v = jax.tree.map(lambda v_, d: b2 * v_ + (1 - b2) * jnp.square(d.astype(jnp.float32)),
+                             state.v, direction)
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1 ** t.astype(jnp.float32)), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2 ** t.astype(jnp.float32)), v)
+        upd = jax.tree.map(lambda mh, vh: step_lr * mh / (jnp.sqrt(vh) + eps), mhat, vhat)
+        if weight_decay and params is not None:
+            upd = jax.tree.map(lambda u, p: u - step_lr * weight_decay * p.astype(jnp.float32),
+                               upd, params)
+        upd = jax.tree.map(lambda u, d: u.astype(d.dtype), upd, direction)
+        return upd, AdamState(t, m, v)
+
+    return Optimizer(init, update)
+
+
+def adam(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8) -> Optimizer:
+    return _adam_family(lr, b1, b2, eps, weight_decay=0.0, yogi_update=False)
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01) -> Optimizer:
+    return _adam_family(lr, b1, b2, eps, weight_decay, yogi_update=False)
+
+
+def yogi(lr=1e-2, b1=0.9, b2=0.999, eps=1e-3) -> Optimizer:
+    return _adam_family(lr, b1, b2, eps, weight_decay=0.0, yogi_update=True)
+
+
+_REGISTRY = {"sgd": sgd, "adam": adam, "adamw": adamw, "yogi": yogi}
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return _REGISTRY[name.lower()](**kw)
+
+
+def apply_updates(params, updates):
+    """params + updates (FEDOPT server step: w <- w + Delta-derived update)."""
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def apply_gradient_descent(params, grads, lr):
+    """Plain client-side SGD step: w <- w - lr * g."""
+    return jax.tree.map(lambda p, g: (p - lr * g).astype(p.dtype), params, grads)

@@ -1,0 +1,40 @@
+"""Learning-rate schedules.
+
+``inverse_decay`` implements the paper's theoretical schedule
+eta_t = 2 / (mu * (gamma + t)) with gamma = max(8 L/mu, E) (Theorem 3.5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def inverse_decay(mu: float = 1.0, gamma: float = 8.0, scale: float = 2.0):
+    def sched(t):
+        return scale / (mu * (gamma + jnp.asarray(t, jnp.float32)))
+    return sched
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(t):
+        frac = jnp.clip(jnp.asarray(t, jnp.float32) / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return sched
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int, final_frac: float = 0.1):
+    cos = cosine(lr, max(total_steps - warmup, 1), final_frac)
+    def sched(t):
+        t = jnp.asarray(t, jnp.float32)
+        wu = lr * t / max(warmup, 1)
+        return jnp.where(t < warmup, wu, cos(t - warmup))
+    return sched
+
+
+def make_schedule(name: str, **kw):
+    return {"constant": constant, "inverse_decay": inverse_decay,
+            "cosine": cosine, "warmup_cosine": warmup_cosine}[name](**kw)

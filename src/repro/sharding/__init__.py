@@ -1,0 +1,2 @@
+from .rules import (param_shardings, batch_shardings, decode_state_shardings,
+                    spec_for_leaf, to_named_shardings)

@@ -1,0 +1,56 @@
+"""Logical-axis activation sharding hooks.
+
+Model code calls ``constrain(x, ("batch", None, "tensor"))`` at key
+intermediates; the launcher configures the logical->mesh mapping before
+tracing.  Unconfigured (tests, CPU smoke) it is a no-op.  Divisibility is
+checked per-dim with fallback to replication, mirroring the param rules.
+
+Pinning forward intermediates also pins their cotangents' layouts, which is
+what keeps backward-pass weight gradients sharded (observed: without the
+MoE hidden constraint, grad-of-w1 materializes with the full 32k d_ff on
+every device inside the layer scan).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, Tuple[str, ...], None]
+
+_STATE: Dict[str, object] = {"mesh": None, "axes": {}}
+
+
+def configure(mesh: Optional[Mesh], mapping: Dict[str, Axes]) -> None:
+    """Set the logical->mesh-axis mapping used by subsequent traces."""
+    _STATE["mesh"] = mesh
+    _STATE["axes"] = dict(mapping)
+
+
+def clear() -> None:
+    configure(None, {})
+
+
+def current_mesh():
+    return _STATE["mesh"]
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint by logical dim names; no-op if unconfigured."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    if x.ndim != len(logical):
+        return x   # rank changed (e.g. vmap) — skip rather than mis-pin
+    spec = []
+    for dim, name in zip(x.shape, logical):
+        ax = _STATE["axes"].get(name) if name else None
+        if ax is None:
+            spec.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        spec.append(ax if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

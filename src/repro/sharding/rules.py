@@ -1,0 +1,194 @@
+"""Sharding rules: logical-axis assignment with divisibility fallback.
+
+The rule engine assigns, per parameter leaf:
+  * a tensor-parallel dim for the ``model`` mesh axis — by name hint
+    (Megatron-style: in-projections shard their output dim, out-projections
+    their input dim, embeddings their vocab dim), falling back to the largest
+    divisible dim, falling back to replication;
+  * an FSDP dim for the ``data`` (and ``pod``) axes — largest remaining
+    divisible dim — only in ``sequential`` cohort mode (in ``parallel`` mode
+    params are replicated across data and the cohort axis carries the split).
+
+Leaves under stacked-layer collections ("blocks", "groups", "tail",
+"enc_blocks", "dec_blocks", "lstm") never shard their leading (layer) dim —
+it is scanned.
+
+Divisibility fallback example: recurrentgemma has 10 attention heads — not
+divisible by a 16-way model axis — so wq falls back to replication while its
+d_ff = 7680 MLP still splits 16 ways.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+STACKED_KEYS = ("blocks", "groups", "tail", "enc_blocks", "dec_blocks", "lstm")
+
+# name hint -> preferred model-parallel dim ("last" = output dim of an
+# in-projection, "first" = input dim of an out-projection)
+_MODEL_DIM_HINTS = [
+    (re.compile(r"(wq|wk|wv|w1|w3|wx|wy|w_i|w_a|in_proj|router|fc_w|out_w)$"), "last"),
+    (re.compile(r"(wo|w2|out_proj|proj)$"), "first"),
+    (re.compile(r"embed$"), "first"),       # vocab-parallel embedding
+    (re.compile(r"unembed$"), "last"),      # vocab-parallel unembedding
+]
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _pick_dim(shape, start, size, taken, prefer: Optional[str]) -> Optional[int]:
+    """Pick a dim >= start, divisible by size, not in taken."""
+    cands = [d for d in range(start, len(shape))
+             if d not in taken and shape[d] % size == 0 and shape[d] >= size]
+    if not cands:
+        return None
+    if prefer == "last":
+        return cands[-1] if (len(shape) - 1) in cands else max(cands, key=lambda d: (shape[d], d))
+    if prefer == "first":
+        return cands[0] if start in cands else max(cands, key=lambda d: (shape[d], -d))
+    return max(cands, key=lambda d: (shape[d], d))
+
+
+def spec_for_leaf(path, leaf, mesh: Mesh, *, model_axis: str = "model",
+                  fsdp_axes: Optional[Tuple[str, ...]] = None) -> P:
+    """PartitionSpec for one parameter leaf."""
+    ps = _path_str(path)
+    shape = leaf.shape
+    if len(shape) == 0:
+        return P()
+    stacked = any(k in ps.split("/") for k in STACKED_KEYS)
+    start = 1 if (stacked and len(shape) > 1) else 0
+    spec = [None] * len(shape)
+    taken = set()
+
+    # 1) model axis by hint
+    hint = None
+    for rx, pref in _MODEL_DIM_HINTS:
+        if rx.search(ps):
+            hint = pref
+            break
+    msize = _axis_size(mesh, model_axis)
+    # Only >=2-D weights get a tensor-parallel split; vectors (norm scales,
+    # biases) stay replicated — sharding them just forces reshards around
+    # every elementwise use.
+    if msize > 1 and len(shape) - start >= 2:
+        d = _pick_dim(shape, start, msize, taken, hint)
+        if d is not None:
+            spec[d] = model_axis
+            taken.add(d)
+
+    # 2) fsdp axes (sequential mode only).  Prefer FUSING the fsdp split onto
+    # the dim already carrying the model axis (P(..., ("model","data"))):
+    # every reshard between the stored layout and the compute layout
+    # (ff/model) is then a same-dim subgroup gather/slice.  Putting fsdp on a
+    # *different* dim makes grad-store reshards device-order-incompatible and
+    # XLA falls back to "replicate then partition" — a full all-gather of
+    # every stacked weight (observed: +60 GB/device on an 8B model).
+    if fsdp_axes:
+        fsize = _axis_size(mesh, fsdp_axes)
+        if fsize > 1:
+            fused = None
+            for d in taken:
+                if spec[d] == model_axis and shape[d] % (msize * fsize) == 0:
+                    fused = d
+                    break
+            if fused is not None:
+                spec[fused] = (model_axis,) + tuple(fsdp_axes)
+            else:
+                d = _pick_dim(shape, start, fsize, taken, None)
+                if d is not None:
+                    spec[d] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+                    taken.add(d)
+
+    return P(*spec)
+
+
+def param_shardings(params, mesh: Mesh, *, model_axis: str = "model",
+                    fsdp_axes: Optional[Tuple[str, ...]] = None):
+    """Pytree of NamedShardings matching ``params`` (works on
+    ShapeDtypeStructs too — no allocation)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [NamedSharding(mesh, spec_for_leaf(p, l, mesh, model_axis=model_axis,
+                                               fsdp_axes=fsdp_axes))
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_shardings(batch, mesh: Mesh, *, batch_dim_axes, batch_dim: int = 0):
+    """Shard every leaf's ``batch_dim`` over ``batch_dim_axes`` (with
+    divisibility fallback to replication)."""
+    size = _axis_size(mesh, batch_dim_axes)
+
+    def spec(path, leaf):
+        s = [None] * leaf.ndim
+        if leaf.ndim > batch_dim and leaf.shape[batch_dim] % size == 0 \
+                and leaf.shape[batch_dim] >= size:
+            s[batch_dim] = (batch_dim_axes if isinstance(batch_dim_axes, str)
+                            else tuple(batch_dim_axes))
+        return NamedSharding(mesh, P(*s))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
+    return jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+
+
+def decode_state_shardings(state, mesh: Mesh, *, data_axes, model_axis="model"):
+    """KV caches / recurrent states: shard batch dim over data axes when
+    divisible; otherwise shard the longest dim (sequence) over data; shard
+    kv-heads over model when divisible, else give model the sequence dim."""
+    dsize = _axis_size(mesh, data_axes)
+    msize = _axis_size(mesh, model_axis)
+    data_name = data_axes if isinstance(data_axes, str) else tuple(data_axes)
+
+    def spec(path, leaf):
+        ps = _path_str(path)
+        if leaf.ndim == 0 or "index" in ps:
+            return NamedSharding(mesh, P())
+        stacked = any(k in ps.split("/") for k in
+                      ("caches", "groups", "tail", "self_k", "self_v",
+                       "cross_k", "cross_v"))
+        start = 1 if (stacked and leaf.ndim > 1) else 0
+        s: list = [None] * leaf.ndim
+        taken = set()
+        # batch dim = first dim after stack offset
+        if leaf.ndim > start and leaf.shape[start] % dsize == 0 and dsize > 1 \
+                and leaf.shape[start] >= dsize:
+            s[start] = data_name
+            taken.add(start)
+        elif dsize > 1:
+            d = _pick_dim(leaf.shape, start, dsize, taken, "last")
+            # prefer the longest dim (sequence) for the data split
+            if d is not None:
+                d = max((i for i in range(start, leaf.ndim)
+                         if i not in taken and leaf.shape[i] % dsize == 0
+                         and leaf.shape[i] >= dsize),
+                        key=lambda i: leaf.shape[i])
+                s[d] = data_name
+                taken.add(d)
+        if msize > 1:
+            d = _pick_dim(leaf.shape, start, msize, taken, "last")
+            if d is not None:
+                s[d] = model_axis
+                taken.add(d)
+        return NamedSharding(mesh, P(*s))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+
+
+def to_named_shardings(spec_tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,84 @@
+"""Availability-process statistics (paper §4.1 / §D.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import CommBudget, make_availability
+
+
+def _mc_marginals(proc, T=800, t_offset=0):
+    key = jax.random.PRNGKey(0)
+    acc = np.zeros(proc.n_clients)
+    for t in range(T):
+        key, k1 = jax.random.split(key)
+        acc += np.asarray(proc.sample(k1, t + t_offset))
+    return acc / T
+
+
+def test_always():
+    proc = make_availability("always", 10)
+    assert _mc_marginals(proc, 10).min() == 1.0
+
+
+def test_scarce_marginal():
+    proc = make_availability("scarce", 50, q=0.2)
+    m = _mc_marginals(proc)
+    assert abs(m.mean() - 0.2) < 0.03
+
+
+def test_homedevices_heterogeneous():
+    proc = make_availability("homedevices", 50)
+    m = _mc_marginals(proc)
+    q = np.asarray(proc.probs(0))
+    assert q.max() == 1.0 and q.std() > 0.05
+    assert np.abs(m - q).mean() < 0.08
+
+
+def test_smartphones_time_varying():
+    proc = make_availability("smartphones", 20)
+    q_morning = np.asarray(proc.probs(6))    # sin peak
+    q_night = np.asarray(proc.probs(18))     # sin trough
+    assert q_morning.mean() > q_night.mean()
+
+
+def test_uneven_inverse_to_p():
+    p = np.asarray([0.5, 0.3, 0.15, 0.05], np.float32)
+    proc = make_availability("uneven", 4, p=p)
+    q = np.asarray(proc.probs(0))
+    assert q[0] < q[1] < q[2] < q[3]
+
+
+def test_nonempty_guarantee():
+    proc = make_availability("scarce", 5, q=0.01)
+    key = jax.random.PRNGKey(0)
+    for t in range(200):
+        key, k1 = jax.random.split(key)
+        assert bool(proc.sample(k1, t).any())
+
+
+def test_markov_clusters_correlated():
+    proc = make_availability("markov", 40, n_clusters=4)
+    key = jax.random.PRNGKey(0)
+    state = proc.init_state()
+    cluster = np.asarray(proc.cluster_of())
+    samples = []
+    for t in range(500):
+        key, k1 = jax.random.split(key)
+        state, mask = proc.step(k1, state)
+        samples.append(np.asarray(mask))
+    S = np.stack(samples).astype(float)
+    same, diff = [], []
+    for i in range(8):
+        for j in range(i + 1, 8):
+            c = np.corrcoef(S[:, i], S[:, j])[0, 1]
+            (same if cluster[i] == cluster[j] else diff).append(c)
+    assert np.mean(same) > np.mean(diff) + 0.1
+
+
+def test_comm_budget_jitter():
+    b = CommBudget(fixed=10, jitter=3)
+    key = jax.random.PRNGKey(0)
+    ks = [int(b.sample(jax.random.fold_in(key, t), t)) for t in range(200)]
+    assert min(ks) >= 7 and max(ks) <= 13 and len(set(ks)) > 1
+    b0 = CommBudget(fixed=5)
+    assert int(b0.sample(key, 0)) == 5

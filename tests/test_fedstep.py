@@ -1,0 +1,81 @@
+"""Federated round: mode equivalence, learning progress, server optimizers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_fed_round
+from repro.optim import adam, make_optimizer, sgd, yogi
+
+
+def _quad_loss(params, batch):
+    x, y = batch
+    pred = x @ params["w"] + params["b"]
+    return jnp.mean((pred - y) ** 2)
+
+
+def _mk_batch(key, K, E, B, d=5):
+    x = jax.random.normal(key, (K, E, B, d))
+    w_true = jnp.arange(1.0, d + 1)
+    y = x @ w_true
+    return (x, y)
+
+
+@pytest.mark.parametrize("opt_name", ["sgd", "adam", "yogi"])
+def test_parallel_equals_sequential(opt_name):
+    key = jax.random.PRNGKey(0)
+    params = {"w": jnp.zeros((5,)), "b": jnp.zeros(())}
+    opt = make_optimizer(opt_name, lr=0.5 if opt_name == "sgd" else 1e-2)
+    batch = _mk_batch(key, 4, 3, 8)
+    w = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    res = {}
+    for mode in ("parallel", "sequential"):
+        fr = jax.jit(make_fed_round(_quad_loss, opt, mode=mode))
+        p2, _, m = fr(params, opt.init(params), batch, w, jnp.asarray(0.05))
+        res[mode] = (np.asarray(p2["w"]), float(m.loss))
+    np.testing.assert_allclose(res["parallel"][0], res["sequential"][0],
+                               rtol=1e-5, atol=1e-6)
+    assert res["parallel"][1] == pytest.approx(res["sequential"][1], rel=1e-5)
+
+
+def test_rounds_reduce_loss():
+    key = jax.random.PRNGKey(1)
+    params = {"w": jnp.zeros((5,)), "b": jnp.zeros(())}
+    opt = sgd(1.0)
+    st = opt.init(params)
+    fr = jax.jit(make_fed_round(_quad_loss, opt, mode="parallel"))
+    losses = []
+    for t in range(30):
+        key, k1 = jax.random.split(key)
+        batch = _mk_batch(k1, 4, 2, 16)
+        params, st, m = fr(params, st, batch, jnp.full((4,), 0.25),
+                           jnp.asarray(0.05))
+        losses.append(float(m.loss))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_zero_weight_clients_do_not_contribute():
+    key = jax.random.PRNGKey(2)
+    params = {"w": jnp.zeros((5,)), "b": jnp.zeros(())}
+    opt = sgd(1.0)
+    batch = _mk_batch(key, 4, 2, 8)
+    fr = jax.jit(make_fed_round(_quad_loss, opt, mode="parallel"))
+    w_mask = jnp.asarray([0.5, 0.5, 0.0, 0.0])
+    p_a, _, _ = fr(params, opt.init(params), batch, w_mask, jnp.asarray(0.05))
+    sub = (batch[0][:2], batch[1][:2])
+    fr2 = jax.jit(make_fed_round(_quad_loss, opt, mode="parallel"))
+    p_b, _, _ = fr2(params, opt.init(params), sub, jnp.asarray([0.5, 0.5]),
+                    jnp.asarray(0.05))
+    np.testing.assert_allclose(np.asarray(p_a["w"]), np.asarray(p_b["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_metrics_finite_and_shapes():
+    key = jax.random.PRNGKey(3)
+    params = {"w": jnp.zeros((5,)), "b": jnp.zeros(())}
+    opt = adam(1e-2)
+    fr = jax.jit(make_fed_round(_quad_loss, opt, mode="sequential"))
+    p2, st2, m = fr(params, opt.init(params), _mk_batch(key, 3, 2, 4),
+                    jnp.full((3,), 1 / 3), jnp.asarray(0.05))
+    for v in (m.loss, m.delta_norm, m.grad_norm):
+        assert np.isfinite(float(v))

@@ -1,0 +1,55 @@
+"""Trip-count-aware HLO analyzer on a hand-written module."""
+import textwrap
+
+from repro.launch.hlo_costs import analyze, parse_hlo
+
+HLO = textwrap.dedent("""
+HloModule test
+
+%body.1 (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[8,16] get-tuple-element(%p), index=1
+  %w = f32[16,32] parameter(1)
+  %d = f32[8,32] dot(%g1, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,32] all-reduce(%d), replica_groups={}, to_apply=%sum.1
+  ROOT %t = (s32[], f32[8,16]) tuple(%g0, %g1)
+}
+
+%sum.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+
+%cond.1 (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main.1 (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16] parameter(0)
+  %init = (s32[], f32[8,16]) tuple(%c0, %x)
+  %w2 = (s32[], f32[8,16]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[8,16] get-tuple-element(%w2), index=1
+}
+""")
+
+
+def test_trip_count_multiplies_loop_body():
+    res = analyze(HLO)
+    # dot: 2 * 8*32 * 16 = 8192 flops, x 10 trips
+    assert res["flops"] == 8192 * 10
+    # all-reduce result bytes: 8*32*4 = 1024, x 10 trips
+    assert res["coll_all-reduce"] == 1024 * 10
+    assert res["coll_total"] == 1024 * 10
+
+
+def test_parse_structure():
+    comps, entry = parse_hlo(HLO)
+    assert entry == "main.1"
+    assert any(k.startswith("body") for k in comps)
+    body = comps["body.1"]
+    assert body.flops == 8192

@@ -1,0 +1,50 @@
+"""Activation sharding hooks: no-op unconfigured, divisibility-gated."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding import hooks
+
+
+def test_noop_when_unconfigured():
+    hooks.clear()
+    x = jnp.ones((4, 6))
+    y = hooks.constrain(x, ("batch", "tensor"))
+    assert y is x
+
+
+def test_configured_constrains_and_divisibility_gates():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    hooks.configure(mesh, {"batch": ("data",), "tensor": "model"})
+    try:
+        x = jnp.ones((4, 6))
+        # sizes 1 -> divisibility gate passes trivially but size>1 check
+        # replicates; mainly assert no crash and value preserved under jit
+        y = jax.jit(lambda a: hooks.constrain(a, ("batch", "tensor")))(x)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+        # rank mismatch skips
+        z = hooks.constrain(jnp.ones((2, 2, 2)), ("batch", "tensor"))
+        assert z.shape == (2, 2, 2)
+    finally:
+        hooks.clear()
+
+
+def test_values_unchanged_by_constraints():
+    """Constraints are layout-only: model outputs must be identical."""
+    from repro.models import ModelConfig, get_model_api
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=32,
+                      n_heads=4, n_kv_heads=2, head_dim=8, d_ff=64, vocab=50)
+    api = get_model_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 50)
+    hooks.clear()
+    base = np.asarray(api.forward(params, {"tokens": toks})[0])
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    hooks.configure(mesh, {"batch": ("data",), "tensor": "model",
+                           "sequence": "model", "heads": "model",
+                           "kv_heads": "model", "expert": None})
+    try:
+        out = np.asarray(api.forward(params, {"tokens": toks})[0])
+    finally:
+        hooks.clear()
+    np.testing.assert_allclose(base, out, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,118 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU), with
+shape/dtype sweeps per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.fed_aggregate import fed_aggregate, fed_aggregate_tree
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import ssd
+from repro.kernels.ssd_chunk import ssd_chunk
+
+_ATTN_SHAPES = [
+    # (B, S, H, KV, hd, bq, bk)
+    (1, 128, 4, 4, 64, 128, 128),     # MHA
+    (2, 256, 4, 2, 64, 128, 128),     # GQA 2:1
+    (1, 256, 8, 1, 32, 128, 128),     # MQA
+    (1, 512, 4, 2, 128, 128, 256),    # uneven blocks
+]
+
+
+@pytest.mark.parametrize("shape", _ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window,softcap",
+                         [(True, 0, 0.0), (True, 128, 0.0), (False, 0, 0.0),
+                          (True, 0, 30.0)])
+def test_flash_attention_allclose(shape, dtype, causal, window, softcap):
+    B, S, H, KV, hd, bq, bk = shape
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, S, H, hd), dtype)
+    k = jax.random.normal(k2, (B, S, KV, hd), dtype)
+    v = jax.random.normal(k3, (B, S, KV, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, bq=bq, bk=bk, interpret=True)
+    expect = ref.attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("K,D", [(1, 100), (4, 1000), (16, 8192), (32, 20000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fed_aggregate_allclose(K, D, dtype):
+    key = jax.random.PRNGKey(1)
+    deltas = jax.random.normal(key, (K, D), dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(2), (K,))
+    out = fed_aggregate(deltas, w, tile=1024, interpret=True)
+    expect = ref.fed_aggregate_ref(deltas, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_fed_aggregate_tree():
+    key = jax.random.PRNGKey(3)
+    tree = {"a": jax.random.normal(key, (4, 8, 16)),
+            "b": jax.random.normal(key, (4, 100))}
+    w = jnp.asarray([0.5, 0.25, 0.25, 0.0])
+    out = fed_aggregate_tree(tree, w)
+    for name, leaf in tree.items():
+        exp = (np.asarray(leaf) * np.asarray(w).reshape(4, 1, 1)[:, :, :1 if leaf.ndim == 2 else 1].reshape((4,) + (1,) * (leaf.ndim - 1))).sum(0)
+        np.testing.assert_allclose(np.asarray(out[name]), exp, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (1, 64, 2, 16, 8, 16),
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 128, 128),     # full-size state dims
+])
+def test_ssd_chunk_allclose(B, S, H, P, N, chunk):
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(5), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(7), (B, S, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(8), (B, S, N))
+    nc = S // chunk
+    xr = x.reshape(B, nc, chunk, H, P)
+    dtr = dt.reshape(B, nc, chunk, H)
+    Br = Bm.reshape(B, nc, chunk, N)
+    Cr = Cm.reshape(B, nc, chunk, N)
+    y, st, dec = ssd_chunk(xr, dtr, A, Br, Cr, interpret=True)
+    y_ref, st_ref, dec_ref = ref.ssd_chunk_ref(xr, dtr, A, Br, Cr)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(dec_ref), rtol=1e-5, atol=1e-6)
+
+
+def test_ssd_full_matches_model_reference():
+    """Kernel-composed SSD == the model's chunked reference == recurrence."""
+    B, S, H, P, N, chunk = 2, 64, 3, 16, 8, 16
+    key = jax.random.PRNGKey(9)
+    x = jax.random.normal(key, (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(10), (B, S, H)))
+    A = -jnp.exp(jax.random.normal(jax.random.PRNGKey(11), (H,)) * 0.3)
+    Bm = jax.random.normal(jax.random.PRNGKey(12), (B, S, N))
+    Cm = jax.random.normal(jax.random.PRNGKey(13), (B, S, N))
+    out_kernel = ssd(x, dt, A, Bm, Cm, chunk=chunk, use_kernel=True)
+    out_ref = ref.ssd_ref(x, dt, A, Bm, Cm, chunk)
+    np.testing.assert_allclose(np.asarray(out_kernel), np.asarray(out_ref),
+                               rtol=1e-4, atol=1e-4)
+    # sequential recurrence oracle
+    h = np.zeros((B, H, N, P))
+    ys = []
+    xn, dtn, An = map(np.asarray, (x, dt, A))
+    Bn, Cn = np.asarray(Bm), np.asarray(Cm)
+    for t in range(S):
+        dec = np.exp(dtn[:, t] * An[None, :])
+        h = h * dec[..., None, None] + np.einsum(
+            "bh,bn,bhp->bhnp", dtn[:, t], Bn[:, t], xn[:, t])
+        ys.append(np.einsum("bn,bhnp->bhp", Cn[:, t], h))
+    y_seq = np.stack(ys, 1)
+    np.testing.assert_allclose(np.asarray(out_ref), y_seq, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,132 @@
+"""Deeper model correctness: decode == forward, SSD duality, attention paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, get_model_api
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(7)
+
+CASES = [
+    ModelConfig(name="dense", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab=100),
+    ModelConfig(name="qknorm", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab=100, qk_norm=True),
+    ModelConfig(name="swa", family="dense", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab=100, sliding_window=8),
+    ModelConfig(name="moe", family="moe", n_layers=2, d_model=64, n_heads=4,
+                n_kv_heads=2, head_dim=16, d_ff=128, vocab=100, mlp="moe",
+                n_experts=4),
+    ModelConfig(name="ssm", family="ssm", n_layers=2, d_model=64, vocab=100,
+                ssm_state=16, ssm_head_dim=16, ssm_chunk=8),
+    ModelConfig(name="hybrid", family="hybrid", n_layers=5, d_model=64, n_heads=4,
+                n_kv_heads=1, head_dim=16, d_ff=128, vocab=100, lru_width=64,
+                sliding_window=8, hybrid_pattern=("rec", "rec", "attn")),
+]
+
+
+@pytest.mark.parametrize("cfg", CASES, ids=lambda c: c.name)
+def test_decode_matches_forward(cfg):
+    api = get_model_api(cfg)
+    params = api.init_params(KEY)
+    B, S = 2, 16
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    full, _ = api.forward(params, {"tokens": toks})
+    st = api.init_decode_state(B, S)
+    step = jax.jit(api.decode_step)
+    outs = []
+    for t in range(S):
+        lg, st = step(params, st, toks[:, t:t + 1])
+        outs.append(np.asarray(lg[:, 0], np.float32))
+    dec = np.stack(outs, 1)
+    tol = 5e-3 if cfg.name == "moe" else 2e-3   # moe capacity drops differ
+    err = np.abs(dec - np.asarray(full, np.float32)).max()
+    if cfg.name == "moe":
+        # token-dropping under capacity may legitimately differ between the
+        # batched and single-token paths; compare where both routed tokens
+        assert np.median(np.abs(dec - np.asarray(full, np.float32))) < 0.1
+    else:
+        assert err < tol, err
+
+
+def test_remat_equivalence():
+    cfg = CASES[0]
+    api0 = get_model_api(cfg)
+    api1 = get_model_api(cfg.replace(remat=True))
+    params = api0.init_params(KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, cfg.vocab)
+    l0 = float(api0.loss_fn(params, {"tokens": toks}))
+    l1 = float(api1.loss_fn(params, {"tokens": toks}))
+    assert abs(l0 - l1) < 1e-5
+    g0 = jax.grad(api0.loss_fn)(params, {"tokens": toks})
+    g1 = jax.grad(api1.loss_fn)(params, {"tokens": toks})
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-5)
+
+
+def test_long_context_variant_changes_window():
+    cfg = CASES[0].replace(long_context_window=8)
+    api = get_model_api(cfg)
+    params = api.init_params(KEY)
+    toks = jax.random.randint(KEY, (1, 32), 0, cfg.vocab)
+    lg_full, _ = get_model_api(CASES[0]).forward(params, {"tokens": toks})
+    lg_win, _ = api.forward(params, {"tokens": toks})
+    # early positions identical (window covers full history), late differ
+    assert np.allclose(np.asarray(lg_full)[:, :8], np.asarray(lg_win)[:, :8],
+                       atol=1e-4)
+    assert not np.allclose(np.asarray(lg_full)[:, -1], np.asarray(lg_win)[:, -1],
+                           atol=1e-4)
+
+
+def test_gqa_equals_repeated_mha():
+    """GQA with kv heads repeated == full MHA with duplicated k/v."""
+    B, S, H, KV, hd = 1, 12, 4, 2, 8
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(8), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.PRNGKey(9), (B, S, KV, hd))
+    out_gqa = L.sdpa(q, k, v, causal=True)
+    k_rep = jnp.repeat(k, H // KV, axis=2)
+    v_rep = jnp.repeat(v, H // KV, axis=2)
+    out_mha = L.sdpa(q, k_rep, v_rep, causal=True)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_load_balance_loss_range():
+    cfg = CASES[3]
+    api = get_model_api(cfg)
+    params = api.init_params(KEY)
+    toks = jax.random.randint(KEY, (2, 32), 0, cfg.vocab)
+    _, aux = api.forward(params, {"tokens": toks})
+    lb = float(aux["lb_loss"])
+    assert 0.0 < lb < 10.0     # ~n_layers at perfect balance
+
+
+def test_vlm_loss_masks_image_positions():
+    cfg = ModelConfig(name="vlm", family="vlm", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                      vocab=100, vit_dim=32, n_patches=8)
+    api = get_model_api(cfg)
+    params = api.init_params(KEY)
+    toks = jax.random.randint(KEY, (2, 16), 0, 100)
+    pe = jax.random.normal(KEY, (2, 8, 32))
+    loss = float(api.loss_fn(params, {"tokens": toks, "patch_embeds": pe}))
+    assert np.isfinite(loss) and loss > 0
+
+
+def test_whisper_cross_attention_sees_encoder():
+    cfg = ModelConfig(name="aud", family="audio", n_layers=2, n_enc_layers=2,
+                      d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                      d_ff=128, vocab=100, mlp="gelu", use_rope=False,
+                      enc_seq=16)
+    api = get_model_api(cfg)
+    params = api.init_params(KEY)
+    toks = jax.random.randint(KEY, (1, 8), 0, 100)
+    f1 = jax.random.normal(jax.random.PRNGKey(20), (1, 16, 64))
+    f2 = jax.random.normal(jax.random.PRNGKey(21), (1, 16, 64))
+    l1, _ = api.forward(params, {"tokens": toks, "frames": f1})
+    l2, _ = api.forward(params, {"tokens": toks, "frames": f2})
+    assert not np.allclose(np.asarray(l1), np.asarray(l2), atol=1e-4)

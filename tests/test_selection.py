@@ -1,0 +1,100 @@
+"""Property tests for selection policies (paper Alg. 1 line 4 + baselines)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (f3ast_select, fedavg_select, marginal_utility,
+                        poc_select, uniform_select)
+from repro.core.hfun import h_value
+
+
+@st.composite
+def _problem(draw):
+    n = draw(st.integers(3, 24))
+    avail = draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    if not any(avail):
+        avail[draw(st.integers(0, n - 1))] = True
+    k = draw(st.integers(1, n))
+    p_raw = draw(st.lists(st.floats(0.01, 1.0), min_size=n, max_size=n))
+    r_raw = draw(st.lists(st.floats(0.001, 1.0), min_size=n, max_size=n))
+    p = np.asarray(p_raw) / np.sum(p_raw)
+    return np.asarray(avail), k, p.astype(np.float32), np.asarray(r_raw, np.float32)
+
+
+@settings(max_examples=100, deadline=None)
+@given(_problem())
+def test_f3ast_respects_budget_and_availability(prob):
+    avail, k, p, r = prob
+    mask = np.asarray(f3ast_select(jnp.asarray(avail), jnp.asarray(k),
+                                   jnp.asarray(p), jnp.asarray(r)))
+    assert mask.sum() == min(k, avail.sum())
+    assert not np.any(mask & ~avail)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_problem())
+def test_f3ast_greedy_is_argmax_over_feasible_sets(prob):
+    """Eq. 4: greedy top-K equals brute-force argmax of −∇H(r)·1_S because
+    the objective is additive — verified exhaustively for small N."""
+    avail, k, p, r = prob
+    if avail.sum() > 12:
+        avail[12:] = False
+        if not avail.any():
+            avail[0] = True
+    mask = np.asarray(f3ast_select(jnp.asarray(avail), jnp.asarray(k),
+                                   jnp.asarray(p), jnp.asarray(r)))
+    util = np.asarray(marginal_utility(jnp.asarray(r), jnp.asarray(p), False))
+    chosen_val = util[mask].sum()
+    avail_ids = np.flatnonzero(avail)
+    k_eff = min(k, len(avail_ids))
+    best = max(util[list(S)].sum()
+               for S in itertools.combinations(avail_ids, k_eff))
+    assert chosen_val >= best - 1e-5
+
+
+def test_fedavg_sampling_proportional_to_p():
+    n = 10
+    p = np.arange(1, n + 1, dtype=np.float32)
+    p /= p.sum()
+    avail = jnp.ones((n,), bool)
+    counts = np.zeros(n)
+    key = jax.random.PRNGKey(0)
+    trials = 3000
+    for i in range(trials):
+        key, k1 = jax.random.split(key)
+        m = np.asarray(fedavg_select(k1, avail, jnp.asarray(1), jnp.asarray(p)))
+        counts += m
+    freq = counts / trials
+    assert np.abs(freq - p).max() < 0.04
+
+
+def test_poc_picks_highest_loss_among_candidates():
+    n = 12
+    p = np.full(n, 1 / n, np.float32)
+    losses = jnp.asarray(np.arange(n, dtype=np.float32))
+    avail = jnp.ones((n,), bool)
+    m = np.asarray(poc_select(jax.random.PRNGKey(0), avail, jnp.asarray(3),
+                              jnp.asarray(p), losses, d=n))
+    assert set(np.flatnonzero(m)) == {9, 10, 11}
+
+
+def test_uniform_select_budget():
+    avail = jnp.asarray([True, False, True, True, False])
+    m = np.asarray(uniform_select(jax.random.PRNGKey(0), avail, jnp.asarray(2)))
+    assert m.sum() == 2 and not m[1] and not m[4]
+
+
+@settings(max_examples=50, deadline=None)
+@given(_problem())
+def test_h_decreases_when_any_rate_increases(prob):
+    """H is elementwise decreasing in r — selecting more is never worse."""
+    _, _, p, r = prob
+    h0 = float(h_value(jnp.asarray(r), jnp.asarray(p), False))
+    r2 = r.copy()
+    r2[0] = min(1.0, r2[0] + 0.1)
+    h1 = float(h_value(jnp.asarray(r2), jnp.asarray(p), False))
+    assert h1 <= h0 + 1e-6

@@ -1,0 +1,104 @@
+"""Sharding rules: divisibility fallback, stacked-layer dims, hints."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.rules import spec_for_leaf
+
+jax.config.update("jax_platforms", "cpu")
+
+
+class _FakeMesh:
+    def __init__(self, sizes):
+        self.shape = sizes
+        self.axis_names = tuple(sizes)
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+MESH3 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class _Key:
+    def __init__(self, key):
+        self.key = key
+
+
+def _leaf(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _spec(path_parts, shape, mesh=MESH, fsdp=None):
+    path = tuple(_Key(p) for p in path_parts)
+    return spec_for_leaf(path, _leaf(shape), mesh, fsdp_axes=fsdp)
+
+
+def test_megatron_hints():
+    assert _spec(("blocks", "attn", "wq"), (16, 2048, 4096)) == P(None, None, "model")
+    assert _spec(("blocks", "attn", "wo"), (16, 4096, 2048)) == P(None, "model", None)
+    assert _spec(("blocks", "mlp", "w1"), (16, 2048, 8192)) == P(None, None, "model")
+    assert _spec(("blocks", "mlp", "w2"), (16, 8192, 2048)) == P(None, "model", None)
+    assert _spec(("embed",), (128256, 2048)) == P("model", None)
+
+
+def test_stacked_dim_never_sharded():
+    s = _spec(("blocks", "mlp", "w1"), (16, 64, 64))
+    assert s[0] is None
+
+
+def test_divisibility_fallback_recurrentgemma_heads():
+    # 10 heads * 256 hd = 2560 -> wq (2560, 2560): both dims divisible ->
+    # sharded; but a (2560, 10*17) style odd dim falls back
+    s = _spec(("groups", "2_attn", "attn", "wq"), (8, 2560, 2550))
+    assert s == P(None, "model", None) or s == P(None, None, None)
+    # nothing divisible -> fully replicated
+    s2 = _spec(("blocks", "attn", "wq"), (8, 30, 34))
+    assert s2 == P(None, None, None)
+
+
+def test_vectors_replicated():
+    assert _spec(("blocks", "ln1"), (16, 2048)) == P(None, None)
+    assert _spec(("ln_f",), (2048,)) == P(None,)
+
+
+def test_fsdp_assignment():
+    # FSDP is FUSED onto the model dim when divisible (P(..., ("model",
+    # "data"))): same-dim subgroup reshards instead of device-order-
+    # incompatible ones (EXPERIMENTS.md §Perf #8).
+    s = _spec(("blocks", "mlp", "w1"), (16, 2048, 8192), fsdp=("data",))
+    assert s == P(None, None, ("model", "data"))
+    s3 = _spec(("blocks", "mlp", "w1"), (16, 2048, 8192), mesh=MESH3,
+               fsdp=("pod", "data"))
+    assert s3 == P(None, None, ("model", "pod", "data"))
+    # not divisible by the fused size -> fsdp falls back to a separate dim
+    s4 = _spec(("blocks", "mlp", "w1"), (16, 2048, 16 * 300), fsdp=("data",))
+    assert s4 == P(None, "data", "model")
+
+
+def test_mamba_vocab_not_divisible():
+    # vocab 50280 not divisible by 16 -> model axis goes to d_model dim
+    s = _spec(("embed",), (50280, 2560))
+    assert s == P(None, "model")
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+       st.booleans())
+def test_any_shape_gets_valid_spec(shape, fsdp_on):
+    """Property: every spec is consistent — sharded dims are divisible by the
+    mesh-axis size and each mesh axis is used at most once."""
+    s = _spec(("blocks", "attn", "wq"), tuple(shape),
+              fsdp=("data",) if fsdp_on else None)
+    used = [a for a in s if a is not None]
+    flat_used = []
+    for a in used:
+        flat_used.extend(a if isinstance(a, tuple) else (a,))
+    assert len(flat_used) == len(set(flat_used))
+    for dim, axis in zip(shape, s):
+        if axis is None:
+            continue
+        size = int(np.prod([MESH.shape[a] for a in
+                            (axis if isinstance(axis, tuple) else (axis,))]))
+        assert dim % size == 0
