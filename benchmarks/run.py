@@ -37,6 +37,16 @@ def bench_table9(full: bool):
     vary_alpha.run(rounds=400 if full else 150, out_dir=OUT_DIR)
 
 
+def bench_scenarios(full: bool):
+    from repro.sim.sweep import run_sweep
+    scenarios = ("bernoulli", "markov", "gilbert_elliott", "diurnal", "drift",
+                 "trace", "bandwidth", "stepk") if full else \
+                ("bernoulli", "markov", "diurnal")
+    run_sweep(scenarios, ("f3ast", "fedavg"),
+              rounds=300 if full else 60,
+              out_dir=os.path.join(OUT_DIR, "scenario_sweep"))
+
+
 def bench_selection(full: bool):
     from . import selection_overhead
     selection_overhead.run(ns=(100, 1000, 10_000, 100_000) if full
@@ -57,6 +67,7 @@ BENCHES = {
     "tables23": bench_tables23,
     "fig5": bench_fig5,
     "table9": bench_table9,
+    "scenarios": bench_scenarios,
     "selection": bench_selection,
     "kernels": bench_kernels,
     "roofline": bench_roofline,

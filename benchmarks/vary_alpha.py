@@ -1,60 +1,29 @@
 """Table 9: Synthetic(alpha, alpha) heterogeneity sweep under SmartPhones
-availability — F3AST vs FedAvg accuracy as data heterogeneity grows."""
+availability — F3AST vs FedAvg accuracy as data heterogeneity grows.
+
+The heterogeneity level is a scenario ``task_kwargs`` override (it
+parameterizes the data maker), so each cell is pure config over the
+registered ``smartphones`` scenario instead of a hand-rolled training loop.
+"""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
-import jax
-import numpy as np
-
-from repro.core import CommBudget, make_algorithm, make_availability
-from repro.core.fedstep import make_fed_round
-from repro.data import CohortSampler, FederatedData
-from repro.data.synthetic import make_synthetic_federated
-from repro.models import softmax_reg
-from repro.models.softmax_reg import SoftmaxRegConfig
-from repro.optim import make_optimizer
-import jax.numpy as jnp
-
-
-def _run_one(alpha, algo_name, rounds, seed=0):
-    clients = make_synthetic_federated(100, alpha=alpha, beta=alpha,
-                                       samples_per_client=100, seed=seed)
-    fed = FederatedData(clients)
-    p = fed.p
-    cfg = SoftmaxRegConfig()
-    loss = lambda pr, b: softmax_reg.loss_fn(cfg, pr, b)
-    acc = jax.jit(lambda pr, b: softmax_reg.accuracy(cfg, pr, b))
-    opt = make_optimizer("sgd", lr=1.0)
-    params = softmax_reg.init_params(cfg, jax.random.PRNGKey(seed))
-    ost = opt.init(params)
-    fr = jax.jit(make_fed_round(loss, opt, mode="parallel"))
-    M = 10
-    algo = make_algorithm(algo_name, 100, p)
-    st = algo.init(r0=M / 100)
-    av = make_availability("smartphones", 100)
-    sampler = CohortSampler(fed, M, 5, 20, seed=seed)
-    key = jax.random.PRNGKey(seed + 1)
-    for t in range(rounds):
-        key, k1, k2 = jax.random.split(key, 3)
-        avail = av.sample(k1, t)
-        mask, w_full, st = algo.select(st, k2, avail, jnp.asarray(M))
-        ids = np.flatnonzero(np.asarray(mask))
-        batch, valid, idarr = sampler.cohort_batch(ids)
-        w = jnp.asarray(np.asarray(w_full)[idarr] * valid)
-        params, ost, _ = fr(params, ost,
-                            {k: jnp.asarray(v) for k, v in batch.items()},
-                            w, jnp.asarray(0.01, jnp.float32))
-    tb = {k: jnp.asarray(v) for k, v in fed.test_batch().items()}
-    return float(acc(params, tb))
+from repro.sim import get_scenario, run_scenario
 
 
 def run(alphas=(0.0, 0.5, 1.0), rounds=250, out_dir=None, log_fn=print):
+    base = get_scenario("smartphones")
     results = {}
     for a in alphas:
+        sc = dataclasses.replace(base, name=f"smartphones_a{a}",
+                                 task_kwargs={"alpha": a, "beta": a})
         for algo in ("f3ast", "fedavg"):
-            results[(a, algo)] = _run_one(a, algo, rounds)
+            res = run_scenario(sc, algo, rounds=rounds, eval_every=rounds,
+                               log_fn=lambda *_: None)
+            results[(a, algo)] = res.final_metrics["test_acc"]
             log_fn(f"vary_alpha,alpha={a},{algo},acc={results[(a, algo)]:.4f}")
     if out_dir:
         os.makedirs(out_dir, exist_ok=True)

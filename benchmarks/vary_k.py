@@ -1,21 +1,30 @@
 """Figure 5: impact of the communication level K (clients per round) on the
-Synthetic(1,1) task — the F3AST-vs-baselines gap vs K."""
+Synthetic(1,1) task — the F3AST-vs-baselines gap vs K.
+
+Each (K, algorithm) cell is the registered base scenario with its budget
+overridden to ``constant(k=K)`` — the budget is config, not a hand-rolled
+loop, so the same sweep runs under any availability regime by swapping
+``scenario``.
+"""
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 
-from repro.launch.train import run_federated
+from repro.sim import get_scenario, run_scenario
 
 
 def run(ks=(2, 5, 10, 20), rounds=250, algos=("f3ast", "fedavg", "poc"),
-        availability="homedevices", out_dir=None, log_fn=print):
+        scenario="homedevices", out_dir=None, log_fn=print):
+    base = get_scenario(scenario)
     results = {}
     for k in ks:
+        sc = dataclasses.replace(base, name=f"{base.name}_k{k}",
+                                 budget="constant", budget_kwargs={"k": k})
         for algo in algos:
-            res = run_federated("synthetic11", algo, availability,
-                                rounds=rounds, clients_per_round=k,
-                                eval_every=rounds, log_fn=lambda *_: None)
+            res = run_scenario(sc, algo, rounds=rounds, eval_every=rounds,
+                               log_fn=lambda *_: None)
             results[(k, algo)] = (res.final_metrics["test_acc"],
                                   res.final_metrics["test_loss"])
             log_fn(f"vary_k,K={k},{algo},acc={results[(k, algo)][0]:.4f},"

@@ -1,26 +1,32 @@
 """Compare client-selection algorithms across availability regimes
 (reproduces the structure of the paper's Table 2/3 at CPU scale).
 
-    PYTHONPATH=src python examples/intermittent_availability.py [--rounds N]
+Scenarios come from the registry (``python -m repro.sim.sweep --list``):
+any registered availability × budget regime works, including the correlated
+(markov, gilbert_elliott), periodic (diurnal) and non-stationary (drift)
+regimes beyond the paper's own five.
+
+    PYTHONPATH=src python examples/intermittent_availability.py \
+        [--rounds N] [--scenarios always scarce markov diurnal]
 """
 import argparse
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.train import run_federated
+from repro.sim import get_scenario, run_scenario
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=200)
-ap.add_argument("--availabilities", nargs="+",
+ap.add_argument("--scenarios", nargs="+",
                 default=["always", "scarce", "homedevices", "smartphones"])
+ap.add_argument("--algorithms", nargs="+", default=["f3ast", "fedavg", "poc"])
 args = ap.parse_args()
 
-print(f"{'availability':<14}{'algorithm':<12}{'test acc':>10}{'test loss':>11}")
-for av in args.availabilities:
-    for algo, opt, lr in (("f3ast", "sgd", 1.0), ("fedavg", "sgd", 1.0),
-                          ("poc", "sgd", 1.0)):
-        res = run_federated("synthetic11", algo, av, rounds=args.rounds,
-                            server_opt=opt, server_lr=lr,
-                            eval_every=args.rounds, log_fn=lambda *_: None)
+print(f"{'scenario':<17}{'algorithm':<12}{'test acc':>10}{'test loss':>11}")
+for sc_name in args.scenarios:
+    sc = get_scenario(sc_name)
+    for algo in args.algorithms:
+        res = run_scenario(sc, algo, rounds=args.rounds,
+                           eval_every=args.rounds, log_fn=lambda *_: None)
         m = res.final_metrics
-        print(f"{av:<14}{algo:<12}{m['test_acc']:>10.4f}{m['test_loss']:>11.4f}")
+        print(f"{sc.name:<17}{algo:<12}{m['test_acc']:>10.4f}{m['test_loss']:>11.4f}")

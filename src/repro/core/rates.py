@@ -19,16 +19,33 @@ class RateState(NamedTuple):
 
 
 def init_rates(n_clients: int, r0: float | jnp.ndarray = 0.5) -> RateState:
-    """Paper: r(0) initialized arbitrarily; we default to 0.5 * ones."""
+    """r(0) (Algorithm 1 line 1: "initialize r(0) arbitrarily").
+
+    Theorem 3.3 makes the limit independent of r0, so any value in (0, 1]
+    is admissible; we default to 0.5·1 and drivers pass the calibrated
+    guess r0 = M/N (the uniform feasible rate), which shortens the
+    stochastic-approximation burn-in (Thm B.1).
+    """
     r = jnp.broadcast_to(jnp.asarray(r0, jnp.float32), (n_clients,)).copy()
     return RateState(r=r, t=jnp.zeros((), jnp.int32))
 
 
 def update_rates(state: RateState, sel_mask: jnp.ndarray, beta: float) -> RateState:
+    """One EMA step of Algorithm 1 line 5:
+
+        r(t) = (1 − β) r(t−1) + β · 1_{S_t}
+
+    ``sel_mask`` is the (N,) boolean selection indicator 1_{S_t}.  β is the
+    paper's O(1/T) step size (1e-3 in all experiments); the update is the
+    stochastic-approximation iterate whose β→0 limit is argmin_R H(r).
+    """
     r = (1.0 - beta) * state.r + beta * sel_mask.astype(jnp.float32)
     return RateState(r=r, t=state.t + 1)
 
 
 def empirical_rate(sel_history: jnp.ndarray) -> jnp.ndarray:
-    """Time-average participation rate from a (T, N) selection history."""
+    """Time-average participation rate (1/T) Σ_t 1_{S_t} from a (T, N)
+    selection history — the Monte-Carlo estimate of the long-term rate r
+    that Theorem 3.3's tracked EMA should approach (asserted by
+    ``tests/test_system.py::test_e2e_rate_tracking``)."""
     return sel_history.astype(jnp.float32).mean(axis=0)

@@ -41,8 +41,17 @@ def _agg_kernel(w_ref, v_ref, o_ref, acc_ref, *, nk: int):
 @functools.partial(jax.jit, static_argnames=("tile", "interpret"))
 def fed_aggregate(deltas: jnp.ndarray, weights: jnp.ndarray, *,
                   tile: int = DEFAULT_TILE, interpret: bool = True):
-    """deltas: (K, D) — flattened cohort deltas; weights: (K,) f32.
-    Returns (D,) in deltas.dtype (f32 accumulation inside)."""
+    """Algorithm 1 line 9 as a fused reduction: Δ^{t+1} = Σ_k w_k v_k.
+
+    With w_k = p_k / r_k(t) this is the unbiased F3AST estimator (Lemma
+    C.1: E[Δ] equals the full-participation update); padded cohort slots
+    carry w_k = 0.  ``deltas``: (K, D) flattened cohort deltas; ``weights``:
+    (K,) f32.  Returns (D,) in ``deltas.dtype`` with f32 accumulation
+    inside the kernel.  Matches the jnp reference ``kernels.ref.
+    fed_aggregate_ref`` (asserted in ``tests/test_kernels.py``) and computes
+    the same sum as ``core.aggregation.weighted_aggregate`` — this is the
+    TPU-roofline spelling.
+    """
     K, D = deltas.shape
     pad = (-D) % tile
     if pad:
@@ -67,7 +76,10 @@ def fed_aggregate(deltas: jnp.ndarray, weights: jnp.ndarray, *,
 
 def fed_aggregate_tree(deltas_tree, weights: jnp.ndarray, *,
                        interpret: bool = True):
-    """Pytree version: flattens each (K, ...) leaf to (K, D) and aggregates."""
+    """Pytree spelling of Alg. 1 line 9: flattens each (K, ...) model leaf
+    to (K, D), applies :func:`fed_aggregate` with the same (K,) weight
+    vector (one w_k per cohort client spans every parameter leaf), and
+    restores the leaf shapes — the whole-model Δ^{t+1} in one call."""
     def one(leaf):
         K = leaf.shape[0]
         flat = leaf.reshape(K, -1)

@@ -10,8 +10,8 @@ for all-gather that is the gathered (full) tensor a device materializes,
 for all-reduce the reduced tensor, for reduce-scatter the shard it keeps.
 This approximates per-device link traffic to within the ring-algorithm
 factor 2(n-1)/n ≈ 2, uniformly across ops, which is adequate for
-bottleneck attribution (the roofline table reports the raw sums and the
-derivation is stated in EXPERIMENTS.md).
+bottleneck attribution (the roofline table reports the raw sums; the
+derivation is the one stated above).
 """
 from __future__ import annotations
 

@@ -6,71 +6,38 @@ round (local SGD + unbiased aggregation + server optimizer) -> metrics /
 checkpoints.  Works for the paper's tasks and for reduced assigned-arch
 configs on CPU; the same round program lowers to the production mesh.
 
-Usage (examples):
+The experiment loop itself lives in :mod:`repro.sim.runner`; this module is
+the CLI plus the availability-string compatibility wrapper.  Scenarios (an
+availability process × K_t budget × task bound together — DESIGN.md §7) are
+the preferred spelling:
+
+  python -m repro.launch.train --scenario diurnal --algo f3ast --rounds 200
   python -m repro.launch.train --task synthetic11 --algo f3ast --rounds 200
   python -m repro.launch.train --task shakespeare --algo fedavg \
       --availability homedevices --server-opt adam
   python -m repro.launch.train --arch llama3.2-1b --smoke --rounds 5
+
+For grids over scenarios × algorithms use ``python -m repro.sim.sweep``.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
-import os
-import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..checkpoint import save_checkpoint
 from ..configs import ARCHS, PAPER_TASKS, get_arch
-from ..core import CommBudget, make_algorithm, make_availability
+from ..core import make_algorithm, make_availability
 from ..core.fedstep import make_fed_round
-from ..data import CohortSampler, FederatedData
-from ..data.synthetic import (make_char_lm_federated, make_synthetic_federated,
-                              make_vision_federated)
-from ..models import (LstmConfig, ResNetConfig, SoftmaxRegConfig,
-                      get_model_api, resnet, rnn, softmax_reg)
+from ..models import get_model_api
 from ..optim import make_optimizer
+from ..sim.runner import TrainResult, run_scenario
+from ..sim.scenario import Scenario, list_scenarios
 
-
-@dataclasses.dataclass
-class TrainResult:
-    history: list            # per-round dicts
-    final_metrics: dict
-    rates: np.ndarray        # learned r(T)
-    empirical_rates: np.ndarray
-
-
-def _build_paper_task(task_id: str, seed: int):
-    task = PAPER_TASKS[task_id]
-    if task_id == "synthetic11":
-        # §D.1: "The samples are split evenly among 100 clients."
-        clients = make_synthetic_federated(n_clients=task.n_clients,
-                                           samples_per_client=100, seed=seed)
-        cfg = task.model_cfg
-        init = lambda key: softmax_reg.init_params(cfg, key)
-        loss = lambda p, b: softmax_reg.loss_fn(cfg, p, b)
-        acc = lambda p, b: softmax_reg.accuracy(cfg, p, b)
-    elif task_id == "shakespeare":
-        clients = make_char_lm_federated(n_clients=task.n_clients, seed=seed)
-        cfg = task.model_cfg
-        init = lambda key: rnn.init_params(cfg, key)
-        loss = lambda p, b: rnn.loss_fn(cfg, p, b)
-        acc = lambda p, b: rnn.accuracy(cfg, p, b)
-    elif task_id == "cifar":
-        clients = make_vision_federated(n_clients=task.n_clients, seed=seed)
-        cfg = task.model_cfg
-        params0, strides = resnet.init_params(cfg, jax.random.PRNGKey(seed))
-        init = lambda key: resnet.init_params(cfg, key)[0]
-        loss = resnet.make_loss_fn(cfg, strides)
-        acc = lambda p, b: resnet.accuracy(cfg, p, strides, b)
-    else:
-        raise KeyError(task_id)
-    return task, FederatedData(clients), init, loss, acc
+__all__ = ["TrainResult", "run_federated", "run_arch_smoke", "main"]
 
 
 def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
@@ -80,88 +47,21 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                   k_jitter: int = 0, beta: Optional[float] = None,
                   seed: int = 0, eval_every: int = 10,
                   ckpt_dir: Optional[str] = None, prox_mu: float = 0.0,
-                  log_fn: Callable = print, positively_correlated: bool = False
-                  ) -> TrainResult:
-    task, fed, init, loss, acc = _build_paper_task(task_id, seed)
-    rounds = rounds or task.rounds
-    M = clients_per_round or task.clients_per_round
-    beta = beta if beta is not None else task.beta
-    p = fed.p
-    N = fed.n_clients
-
-    avail_proc = make_availability(availability, N, p=p)
-    budget = CommBudget(fixed=M, jitter=k_jitter)
-    algo = make_algorithm(algo_name if algo_name != "fedadam" else "fedavg",
-                          N, p, beta=beta,
-                          positively_correlated=positively_correlated)
-    algo_state = algo.init(r0=M / N)   # calibrated arbitrary init (Thm B.1)
-
-    opt = make_optimizer(server_opt, lr=server_lr)
-    key = jax.random.PRNGKey(seed)
-    params = init(key)
-    opt_state = opt.init(params)
-    fed_round = jax.jit(make_fed_round(loss, opt, mode="parallel",
-                                       prox_mu=prox_mu))
-    eval_loss = jax.jit(loss)
-    eval_acc = jax.jit(acc)
-
-    sampler = CohortSampler(fed, cohort_size=M, local_steps=task.local_steps,
-                            local_batch=task.local_batch, seed=seed)
-    test_batch = {k: jnp.asarray(v) for k, v in fed.test_batch().items()}
-    markov_state = avail_proc.init_state() if availability == "markov" else None
-
-    # PoC: fresh per-client losses of the current global model (the paper's
-    # PoC sends the model to d candidates who report F_k(w_t); for the
-    # paper-scale tasks we evaluate every client's train sample directly).
-    def fresh_losses(params):
-        out = np.zeros(N, np.float32)
-        for k in range(N):
-            tr = fed.clients[k].train
-            sub = {key_: jnp.asarray(v[:64]) for key_, v in tr.items()}
-            out[k] = float(eval_loss(params, sub))
-        return out
-
-    history = []
-    sel_history = np.zeros((rounds, N), bool)
-    t_start = time.time()
-    for t in range(rounds):
-        key, k_av, k_sel, k_bud = jax.random.split(key, 4)
-        if markov_state is not None:
-            markov_state, avail = avail_proc.step(k_av, markov_state)
-        else:
-            avail = avail_proc.sample(k_av, t)
-        k_t = budget.sample(k_bud, t)
-        losses_in = jnp.asarray(fresh_losses(params)) if algo.name == "poc" else None
-        sel_mask, weights_full, algo_state = algo.select(
-            algo_state, k_sel, avail, k_t, losses_in)
-        sel_ids = np.flatnonzero(np.asarray(sel_mask))
-        sel_history[t, sel_ids] = True
-
-        batch_np, valid, ids = sampler.cohort_batch(sel_ids)
-        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-        w = jnp.asarray(np.asarray(weights_full)[ids] * valid)
-        lr_t = jnp.asarray(task.client_lr, jnp.float32)
-        params, opt_state, metrics = fed_round(params, opt_state, batch, w, lr_t)
-
-        if t % eval_every == 0 or t == rounds - 1:
-            te_loss = float(eval_loss(params, test_batch))
-            te_acc = float(eval_acc(params, test_batch))
-            history.append(dict(round=t, train_loss=float(metrics.loss),
-                                test_loss=te_loss, test_acc=te_acc,
-                                n_selected=int(len(sel_ids)),
-                                n_available=int(np.asarray(avail).sum())))
-            log_fn(f"[{algo_name}/{availability}] round {t:4d} "
-                   f"loss={te_loss:.4f} acc={te_acc:.4f} "
-                   f"sel={len(sel_ids)} avail={int(np.asarray(avail).sum())}")
-        if ckpt_dir and (t + 1) % 100 == 0:
-            save_checkpoint(ckpt_dir, t + 1,
-                            {"params": params, "rates": algo_state.rates.r})
-
-    final = history[-1] if history else {}
-    final["wall_s"] = time.time() - t_start
-    return TrainResult(history=history, final_metrics=final,
-                       rates=np.asarray(algo_state.rates.r),
-                       empirical_rates=sel_history.mean(0))
+                  log_fn: Callable = print, positively_correlated: bool = False,
+                  metrics_path: Optional[str] = None) -> TrainResult:
+    """Availability-string front-end: wraps the arguments into an ad-hoc
+    :class:`Scenario` and runs it through :func:`repro.sim.runner.run_scenario`.
+    """
+    sc = Scenario(name=availability, availability=availability,
+                  budget="jittered" if k_jitter else "constant",
+                  budget_kwargs={"jitter": k_jitter} if k_jitter else {},
+                  task=task_id)
+    return run_scenario(sc, algo_name, rounds=rounds, server_opt=server_opt,
+                        server_lr=server_lr, clients_per_round=clients_per_round,
+                        beta=beta, seed=seed, eval_every=eval_every,
+                        ckpt_dir=ckpt_dir, prox_mu=prox_mu,
+                        positively_correlated=positively_correlated,
+                        metrics_path=metrics_path, log_fn=log_fn)
 
 
 def run_arch_smoke(arch_id: str, rounds: int = 3, seed: int = 0,
@@ -211,6 +111,9 @@ def main():
     ap.add_argument("--task", default=None, choices=list(PAPER_TASKS))
     ap.add_argument("--arch", default=None, choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--scenario", default=None, choices=list_scenarios(),
+                    help="registered scenario key (overrides --availability; "
+                         "see python -m repro.sim.sweep --list)")
     ap.add_argument("--algo", default="f3ast",
                     choices=["f3ast", "fedavg", "fedadam", "poc", "uniform"])
     ap.add_argument("--availability", default="homedevices")
@@ -219,6 +122,8 @@ def main():
     ap.add_argument("--clients-per-round", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics-jsonl", default=None,
+                    help="stream per-round metrics to this JSONL file")
     ap.add_argument("--prox-mu", type=float, default=0.0,
                     help="FedProx proximal coefficient (0 = plain local SGD)")
     args = ap.parse_args()
@@ -228,12 +133,22 @@ def main():
         return
     server_opt = args.server_opt or ("adam" if args.algo == "fedadam" else "sgd")
     server_lr = 1e-2 if server_opt in ("adam", "yogi") else 1.0
-    res = run_federated(task_id=args.task or "synthetic11", algo_name=args.algo,
-                        availability=args.availability, rounds=args.rounds,
-                        server_opt=server_opt, server_lr=server_lr,
-                        clients_per_round=args.clients_per_round,
-                        seed=args.seed, ckpt_dir=args.ckpt_dir,
-                        prox_mu=args.prox_mu)
+    if args.scenario:
+        res = run_scenario(args.scenario, args.algo, rounds=args.rounds,
+                           server_opt=server_opt, server_lr=server_lr,
+                           clients_per_round=args.clients_per_round,
+                           seed=args.seed, ckpt_dir=args.ckpt_dir,
+                           prox_mu=args.prox_mu,
+                           metrics_path=args.metrics_jsonl)
+    else:
+        res = run_federated(task_id=args.task or "synthetic11",
+                            algo_name=args.algo,
+                            availability=args.availability, rounds=args.rounds,
+                            server_opt=server_opt, server_lr=server_lr,
+                            clients_per_round=args.clients_per_round,
+                            seed=args.seed, ckpt_dir=args.ckpt_dir,
+                            prox_mu=args.prox_mu,
+                            metrics_path=args.metrics_jsonl)
     print(json.dumps(res.final_metrics, indent=1))
 
 

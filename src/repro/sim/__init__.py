@@ -1,0 +1,28 @@
+"""Scenario engine: registry-driven availability × communication-budget
+simulation harness (DESIGN.md §7).
+
+Composes three registries into one experiment spec:
+
+* :mod:`repro.sim.processes` — availability processes A_t (paper §4.1 plus
+  correlated / periodic / non-stationary / trace-driven regimes) behind one
+  stateful ``init()/step()`` interface.
+* :mod:`repro.sim.budgets`   — communication-budget schedules K_t (constant,
+  jittered, step, diurnal, bandwidth-coupled).
+* :mod:`repro.sim.scenario`  — the :class:`Scenario` dataclass binding
+  process × budget × task × algorithm grid, resolvable by string key.
+
+Run a scenario grid with streaming per-round JSONL metrics:
+
+    python -m repro.sim.sweep --scenarios bernoulli,markov,diurnal \
+        --algorithms f3ast,fedavg --rounds 3
+"""
+from .processes import (PROCESS_REGISTRY, AvailabilityModel, Bernoulli,
+                        ClusterMarkov, Diurnal, GilbertElliott,
+                        NonStationaryDrift, Stateless, TraceDriven,
+                        make_process)
+from .budgets import (BUDGET_REGISTRY, BandwidthCoupled, BudgetSchedule,
+                      Constant, DiurnalBudget, Jittered, StepBudget,
+                      make_budget)
+from .scenario import (SCENARIO_REGISTRY, Scenario, get_scenario,
+                       list_scenarios, register_scenario)
+from .runner import TrainResult, build_task, run_scenario

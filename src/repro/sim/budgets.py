@@ -1,0 +1,165 @@
+"""Communication-budget schedule registry — the K_t half of the engine.
+
+A schedule produces, per round ``t``, the communication budget K_t: the
+maximum number of clients the server may select this round (paper
+Assumption 1's |S| ≤ K_t constraint; §4 uses a constant M = 10).
+
+Contract (enforced by tests/test_sim.py):
+  * ``sample(key, t)`` is a pure function returning an int32 scalar;
+  * 1 ≤ sample(key, t) ≤ ``k_max`` for every (key, t);
+  * ``k_max`` is a static Python int — the training loop sizes the jitted
+    cohort (and therefore every compiled batch shape) to it, so time-varying
+    budgets never trigger recompilation: rounds with K_t < k_max simply run
+    with zero-weighted padding slots.
+
+Registered schedules
+  constant    — K_t = k (the paper's main setting).
+  jittered    — uniform on [max(1, k-jitter), k+jitter] (wraps
+                ``core.availability.CommBudget``).
+  step        — k_before until t_switch, then k_after (abrupt capacity
+                change, e.g. a link upgrade or outage).
+  diurnal     — sinusoidal between k_min and k_max over a period (server
+                bandwidth tracks the same day/night cycle as availability).
+  bandwidth   — K_t = clip(floor(capacity_t / bytes_per_client), 1, k_max)
+                with lognormal-noisy, diurnally-modulated capacity: couples
+                the budget to a fluctuating uplink instead of a client count.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..core.availability import CommBudget
+
+
+class BudgetSchedule:
+    """Interface contract (duck-typed): ``sample(key, t)`` + ``k_max``."""
+
+    k_max: int
+
+    def sample(self, key: jax.Array, t) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Constant(BudgetSchedule):
+    """K_t = k for all t."""
+
+    k: int = 10
+
+    @property
+    def k_max(self) -> int:
+        return self.k
+
+    def sample(self, key, t):
+        return jnp.asarray(self.k, jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Jittered(BudgetSchedule):
+    """Uniform K_t ∈ [max(1, k-jitter), k+jitter] — thin wrapper over the
+    original ``CommBudget`` sampler so both spellings stay in lockstep."""
+
+    k: int = 10
+    jitter: int = 3
+
+    def __post_init__(self):
+        object.__setattr__(self, "_budget",
+                           CommBudget(fixed=self.k, jitter=self.jitter))
+
+    @property
+    def k_max(self) -> int:
+        return self.k + self.jitter
+
+    def sample(self, key, t):
+        return self._budget.sample(key, t)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBudget(BudgetSchedule):
+    """K_t = k_before for t < t_switch, else k_after."""
+
+    k_before: int = 10
+    k_after: int = 3
+    t_switch: int = 100
+
+    @property
+    def k_max(self) -> int:
+        return max(self.k_before, self.k_after)
+
+    def sample(self, key, t):
+        return jnp.where(jnp.asarray(t) < self.t_switch,
+                         self.k_before, self.k_after).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalBudget(BudgetSchedule):
+    """Sinusoidal K_t between k_min and k_hi over ``period`` rounds:
+    K_t = round(k_min + (k_hi - k_min) * (0.5 + 0.5 sin(2π (t+phase)/p)))."""
+
+    k_min: int = 2
+    k_hi: int = 10
+    period: int = 24
+    phase: float = 0.0
+
+    @property
+    def k_max(self) -> int:
+        return self.k_hi
+
+    def sample(self, key, t):
+        ang = 2.0 * jnp.pi * (jnp.asarray(t, jnp.float32) + self.phase) / self.period
+        frac = 0.5 + 0.5 * jnp.sin(ang)
+        k = jnp.round(self.k_min + (self.k_hi - self.k_min) * frac)
+        return jnp.clip(k, 1, self.k_hi).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BandwidthCoupled(BudgetSchedule):
+    """Budget derived from a fluctuating uplink capacity.
+
+    capacity_t = mean_mbps * diurnal(t) * lognormal(sigma)  [per-round draw]
+    K_t        = clip(floor(capacity_t / mbps_per_client), 1, k_cap)
+
+    ``diurnal(t)`` dips to (1 - diurnal_depth) at the trough, modelling
+    peak-hour contention; the lognormal term adds round-to-round jitter.
+    """
+
+    k_cap: int = 10
+    mean_mbps: float = 100.0
+    mbps_per_client: float = 12.5
+    sigma: float = 0.25
+    period: int = 24
+    diurnal_depth: float = 0.5
+
+    @property
+    def k_max(self) -> int:
+        return self.k_cap
+
+    def sample(self, key, t):
+        ang = 2.0 * jnp.pi * jnp.asarray(t, jnp.float32) / self.period
+        diurnal = 1.0 - self.diurnal_depth * (0.5 + 0.5 * jnp.sin(ang))
+        noise = jnp.exp(self.sigma * jax.random.normal(key))
+        capacity = self.mean_mbps * diurnal * noise
+        k = jnp.floor(capacity / self.mbps_per_client)
+        return jnp.clip(k, 1, self.k_cap).astype(jnp.int32)
+
+
+BUDGET_REGISTRY: Dict[str, Callable[..., BudgetSchedule]] = {
+    "constant": Constant,
+    "jittered": Jittered,
+    "step": StepBudget,
+    "diurnal": DiurnalBudget,
+    "bandwidth": BandwidthCoupled,
+}
+
+
+def make_budget(name: str, **kw) -> BudgetSchedule:
+    """Build a registered K_t schedule by string key."""
+    key = name.lower()
+    if key not in BUDGET_REGISTRY:
+        raise KeyError(f"unknown budget schedule {name!r}; "
+                       f"known: {sorted(BUDGET_REGISTRY)}")
+    return BUDGET_REGISTRY[key](**kw)

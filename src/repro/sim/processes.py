@@ -1,0 +1,381 @@
+"""Availability-process registry — the A_t half of the scenario engine.
+
+Every model realizes the client-availability side of the feasible-
+configuration process C_t = {S ⊆ A_t : |S| ≤ K_t} (paper Assumption 1)
+behind one *stateful* interface, so the training loop never special-cases
+i.i.d. vs correlated processes:
+
+    model = make_process("gilbert_elliott", n_clients=100)
+    state = model.init()
+    for t in range(T):
+        state, mask = model.step(key_t, state, t)     # mask: (N,) bool
+
+``init()`` returns a (possibly empty) pytree of JAX arrays and ``step`` is a
+pure function of (key, state, t), so a scenario can be rolled inside
+``lax.scan`` as well as from the host loop.  ``marginals(t)`` reports the
+per-client expected availability (exact for i.i.d. models, stationary for
+Markov models) — used for diagnostics and for calibrating r(0).
+
+Registered regimes
+  always / scarce / homedevices / smartphones / uneven
+                    — the paper's five §4.1 / §D.4 models (re-exported from
+                      ``repro.core.availability`` through the Stateless
+                      adapter).
+  bernoulli         — i.i.d. Bernoulli with optional lognormal heterogeneity
+                      across clients (generalizes scarce + homedevices).
+  markov            — cluster-level 2-state Markov chains (correlated
+                      availability across clients, arXiv:2301.04632 regime).
+  gilbert_elliott   — independent per-client 2-state (up/down) chains: the
+                      classic Gilbert-Elliott channel, temporally correlated
+                      but cross-client independent.
+  diurnal           — sinusoidal day/night cycle with per-client phase
+                      (timezone) offsets.
+  drift             — non-stationary marginals interpolating q0 → q1 over a
+                      horizon (arXiv:2409.17446 regime).
+  trace             — replay of an explicit (T, N) boolean availability
+                      trace, cycled; defaults to a synthesized duty-cycle
+                      trace when none is given.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import availability as core_av
+
+
+def _nonempty(mask: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Force a non-empty available set (paper assumes A_t ≠ ∅): if every
+    client is down, wake the one with the highest marginal probability."""
+    fallback = jnp.zeros_like(mask).at[jnp.argmax(q)].set(True)
+    return jnp.where(mask.any(), mask, fallback)
+
+
+class AvailabilityModel:
+    """Interface contract (duck-typed; subclassing is optional).
+
+    Attributes / methods every registered model provides:
+      n_clients       — N
+      init()          — initial state pytree (``()`` for memoryless models)
+      step(key, state, t) -> (state', mask)   mask: (N,) bool, non-empty
+      marginals(t)    — (N,) expected availability probabilities
+    """
+
+    n_clients: int
+
+    def init(self):
+        return ()
+
+    def step(self, key: jax.Array, state, t):
+        raise NotImplementedError
+
+    def marginals(self, t) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Stateless(AvailabilityModel):
+    """Adapter: a stateless ``core.availability.AvailabilityProcess`` (pure
+    ``sample(key, t)``) exposed through the stateful scenario interface."""
+
+    proc: core_av.AvailabilityProcess
+
+    @property
+    def n_clients(self) -> int:
+        return self.proc.n_clients
+
+    def init(self):
+        return ()
+
+    def step(self, key, state, t):
+        return state, self.proc.sample(key, jnp.asarray(t))
+
+    def marginals(self, t):
+        return self.proc.probs(jnp.asarray(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterMarkov(AvailabilityModel):
+    """Adapter for ``core.availability.MarkovClusters`` (correlated
+    availability: clients share cluster-level up/down chains)."""
+
+    proc: core_av.MarkovClusters
+
+    @property
+    def n_clients(self) -> int:
+        return self.proc.n_clients
+
+    def init(self):
+        return self.proc.init_state()
+
+    def step(self, key, state, t):
+        return self.proc.step(key, state)
+
+    def marginals(self, t):
+        return self.proc.probs(jnp.asarray(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class Bernoulli(AvailabilityModel):
+    """I.i.d. Bernoulli availability with optional heterogeneity.
+
+    ``sigma = 0`` gives homogeneous q (the paper's Scarce model); ``sigma >
+    0`` modulates per-client probabilities by a normalized lognormal draw
+    (the HomeDevices construction) scaled so the most available client has
+    probability ``q``.
+    """
+
+    n_clients: int
+    q: float = 0.5
+    sigma: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.sigma > 0:
+            rng = np.random.default_rng(self.seed)
+            t_k = rng.lognormal(0.0, self.sigma, self.n_clients)
+            qs = self.q * t_k / t_k.max()
+        else:
+            qs = np.full(self.n_clients, self.q)
+        object.__setattr__(self, "_q", jnp.asarray(qs, jnp.float32))
+
+    def marginals(self, t):
+        return self._q
+
+    def step(self, key, state, t):
+        mask = jax.random.bernoulli(key, self._q)
+        return state, _nonempty(mask, self._q)
+
+
+@dataclasses.dataclass(frozen=True)
+class GilbertElliott(AvailabilityModel):
+    """Independent per-client Gilbert-Elliott chains.
+
+    Each client carries its own 2-state (up/down) Markov chain with
+    transition probabilities ``p_up`` (down→up) and ``p_down`` (up→down);
+    while up it answers with probability ``q_up``, while down with ``q_down``.
+    Temporally correlated (sticky) but independent across clients — the
+    complement of the cluster-correlated ``markov`` model.  The chain is
+    finite and irreducible, so Assumption 1 holds; the stationary up-mass is
+    pi_up = p_up / (p_up + p_down).
+    """
+
+    n_clients: int
+    p_up: float = 0.25
+    p_down: float = 0.08
+    q_up: float = 0.95
+    q_down: float = 0.05
+    init_up_fraction: float = 1.0
+
+    @property
+    def stationary_up(self) -> float:
+        return self.p_up / (self.p_up + self.p_down)
+
+    def init(self):
+        n_up = int(round(self.init_up_fraction * self.n_clients))
+        return jnp.arange(self.n_clients) < n_up
+
+    def step(self, key, state, t):
+        k_up, k_down, k_avail = jax.random.split(key, 3)
+        go_up = jax.random.bernoulli(k_up, self.p_up, state.shape)
+        go_down = jax.random.bernoulli(k_down, self.p_down, state.shape)
+        new = jnp.where(state, ~go_down, go_up)
+        q = jnp.where(new, self.q_up, self.q_down)
+        mask = jax.random.bernoulli(k_avail, q)
+        return new, _nonempty(mask, q)
+
+    def marginals(self, t):
+        pi = self.stationary_up
+        q = pi * self.q_up + (1.0 - pi) * self.q_down
+        return jnp.full((self.n_clients,), q, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Diurnal(AvailabilityModel):
+    """Periodic day/night availability with per-client phase offsets.
+
+    q_{k,t} = clip(base + amplitude * sin(2π (t + φ_k) / period), q_floor, 1)
+
+    With ``phase_spread=True`` the phases φ_k are drawn uniformly over the
+    period (clients scattered across timezones — availability waves travel
+    through the population); with ``False`` all clients share one clock,
+    recovering the paper's SmartPhones-style global modulation.
+    """
+
+    n_clients: int
+    period: int = 24
+    base: float = 0.5
+    amplitude: float = 0.4
+    q_floor: float = 0.02
+    phase_spread: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        phase = (rng.uniform(0.0, self.period, self.n_clients)
+                 if self.phase_spread else np.zeros(self.n_clients))
+        object.__setattr__(self, "_phase", jnp.asarray(phase, jnp.float32))
+
+    def marginals(self, t):
+        ang = 2.0 * jnp.pi * (jnp.asarray(t, jnp.float32) + self._phase) / self.period
+        return jnp.clip(self.base + self.amplitude * jnp.sin(ang),
+                        self.q_floor, 1.0)
+
+    def step(self, key, state, t):
+        q = self.marginals(t)
+        mask = jax.random.bernoulli(key, q)
+        return state, _nonempty(mask, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class NonStationaryDrift(AvailabilityModel):
+    """Non-stationary availability: per-client marginals drift linearly from
+    a start profile q0 to an end profile q1 over ``horizon`` rounds and stay
+    at q1 afterwards.  Models fleet-composition shift (e.g. a cohort of
+    high-availability clients churns out while low-availability clients
+    churn in) — the regime of arXiv:2409.17446.
+
+    By default q0 is drawn from [q0_lo, q0_hi] and q1 from [q1_lo, q1_hi]
+    i.i.d. per client, so individual clients' trajectories cross.
+    """
+
+    n_clients: int
+    horizon: int = 200
+    q0_lo: float = 0.6
+    q0_hi: float = 0.9
+    q1_lo: float = 0.05
+    q1_hi: float = 0.4
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        q0 = rng.uniform(self.q0_lo, self.q0_hi, self.n_clients)
+        q1 = rng.uniform(self.q1_lo, self.q1_hi, self.n_clients)
+        object.__setattr__(self, "_q0", jnp.asarray(q0, jnp.float32))
+        object.__setattr__(self, "_q1", jnp.asarray(q1, jnp.float32))
+
+    def marginals(self, t):
+        s = jnp.clip(jnp.asarray(t, jnp.float32) / self.horizon, 0.0, 1.0)
+        return (1.0 - s) * self._q0 + s * self._q1
+
+    def step(self, key, state, t):
+        q = self.marginals(t)
+        mask = jax.random.bernoulli(key, q)
+        return state, _nonempty(mask, q)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceDriven(AvailabilityModel):
+    """Replay an explicit (T, N) boolean availability trace, cycled.
+
+    Deterministic given the trace — the PRNG key is unused.  ``trace`` is a
+    tuple-of-tuples (hashable, jit-safe as a captured constant); build from a
+    numpy array with :meth:`from_array`, or synthesize a duty-cycle trace
+    with :meth:`synthetic`.
+    """
+
+    n_clients: int
+    trace: tuple = ()
+
+    def __post_init__(self):
+        arr = np.asarray(self.trace, bool)
+        assert arr.ndim == 2 and arr.shape[1] == self.n_clients, arr.shape
+        assert arr.any(axis=1).all(), "trace has an all-unavailable round"
+        object.__setattr__(self, "_trace", jnp.asarray(arr))
+
+    @classmethod
+    def from_array(cls, trace: np.ndarray) -> "TraceDriven":
+        trace = np.asarray(trace, bool)
+        return cls(n_clients=trace.shape[1],
+                   trace=tuple(map(tuple, trace.tolist())))
+
+    @classmethod
+    def synthetic(cls, n_clients: int, length: int = 48, duty_lo: float = 0.2,
+                  duty_hi: float = 0.9, seed: int = 0) -> "TraceDriven":
+        """Duty-cycle trace: each client is up for a contiguous fraction of
+        the cycle (drawn from [duty_lo, duty_hi]) starting at a random
+        offset — a crude but deterministic stand-in for real device logs."""
+        rng = np.random.default_rng(seed)
+        duty = rng.uniform(duty_lo, duty_hi, n_clients)
+        offset = rng.integers(0, length, n_clients)
+        t_idx = np.arange(length)[:, None]
+        up_len = np.maximum(1, (duty * length).astype(int))[None, :]
+        rel = (t_idx - offset[None, :]) % length
+        trace = rel < up_len
+        # guarantee non-empty rounds (duty >= 1 step each ensures some are up)
+        assert trace.any(axis=1).all()
+        return cls.from_array(trace)
+
+    @property
+    def length(self) -> int:
+        return self._trace.shape[0]
+
+    def step(self, key, state, t):
+        mask = self._trace[jnp.asarray(t, jnp.int32) % self.length]
+        return state, mask
+
+    def marginals(self, t):
+        return self._trace.astype(jnp.float32).mean(axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def _stateless(cls):
+    def make(n_clients: int, p=None, **kw):
+        return Stateless(cls(n_clients=n_clients, **kw))
+    return make
+
+
+def _make_uneven(n_clients: int, p=None, **kw):
+    assert p is not None, "uneven availability needs client data fractions p"
+    return Stateless(core_av.Uneven(n_clients=n_clients,
+                                    p=tuple(np.asarray(p).tolist()), **kw))
+
+
+def _make_markov(n_clients: int, p=None, **kw):
+    return ClusterMarkov(core_av.MarkovClusters(n_clients=n_clients, **kw))
+
+
+def _make_trace(n_clients: int, p=None, trace=None, **kw):
+    if trace is None:
+        return TraceDriven.synthetic(n_clients, **kw)
+    return TraceDriven.from_array(np.asarray(trace))
+
+
+def _direct(cls):
+    def make(n_clients: int, p=None, **kw):
+        return cls(n_clients=n_clients, **kw)
+    return make
+
+
+PROCESS_REGISTRY: Dict[str, Callable[..., AvailabilityModel]] = {
+    # the paper's five §4.1 / §D.4 models
+    "always": _stateless(core_av.Always),
+    "scarce": _stateless(core_av.Scarce),
+    "homedevices": _stateless(core_av.HomeDevices),
+    "smartphones": _stateless(core_av.SmartPhones),
+    "uneven": _make_uneven,
+    # scenario-engine regimes
+    "bernoulli": _direct(Bernoulli),
+    "markov": _make_markov,
+    "gilbert_elliott": _direct(GilbertElliott),
+    "diurnal": _direct(Diurnal),
+    "drift": _direct(NonStationaryDrift),
+    "trace": _make_trace,
+}
+
+
+def make_process(name: str, n_clients: int, p: Optional[np.ndarray] = None,
+                 **kw) -> AvailabilityModel:
+    """Build a registered availability model by string key."""
+    key = name.lower()
+    if key not in PROCESS_REGISTRY:
+        raise KeyError(f"unknown availability process {name!r}; "
+                       f"known: {sorted(PROCESS_REGISTRY)}")
+    return PROCESS_REGISTRY[key](n_clients, p=p, **kw)

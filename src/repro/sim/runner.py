@@ -1,0 +1,201 @@
+"""Scenario executor: one (scenario, algorithm) cell end-to-end.
+
+This is the host loop behind both ``repro.launch.train`` and
+``repro.sim.sweep``: availability step → selection (F3AST / FedAvg / PoC /
+fixed-policy) → static-shape cohort batch → jitted federated round → metrics.
+The loop is scenario-agnostic — the availability model's ``init()/step()``
+interface and the budget schedule's static ``k_max`` mean no per-regime
+branches and no shape-driven recompiles (DESIGN.md §7).
+
+Per-round metrics stream to JSONL when ``metrics_path`` is given: one
+self-describing record per round (scenario, algorithm, K_t, availability and
+selection counts, train loss) plus test metrics on eval rounds, flushed as
+written so long sweeps are tail-able and crash-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+from ..configs import PAPER_TASKS
+from ..core import make_algorithm
+from ..core.fedstep import make_fed_round
+from ..data import CohortSampler, FederatedData
+from ..data.synthetic import (make_char_lm_federated, make_synthetic_federated,
+                              make_vision_federated)
+from ..models import resnet, rnn, softmax_reg
+from ..optim import make_optimizer
+from .scenario import Scenario, get_scenario
+
+
+@dataclasses.dataclass
+class TrainResult:
+    history: list            # per-eval-round dicts
+    final_metrics: dict
+    rates: np.ndarray        # learned r(T)
+    empirical_rates: np.ndarray
+
+
+def build_task(task_id: str, seed: int, **task_kwargs):
+    """Resolve a PAPER_TASKS key into (task, data, init, loss, acc).
+
+    ``task_kwargs`` are forwarded to the federated data maker — e.g.
+    ``alpha``/``beta`` select the Synthetic(α, β) heterogeneity level.
+    """
+    task = PAPER_TASKS[task_id]
+    if task_id == "synthetic11":
+        # §D.1: "The samples are split evenly among 100 clients."
+        kw = dict(samples_per_client=100)
+        kw.update(task_kwargs)
+        clients = make_synthetic_federated(n_clients=task.n_clients,
+                                           seed=seed, **kw)
+        cfg = task.model_cfg
+        init = lambda key: softmax_reg.init_params(cfg, key)
+        loss = lambda p, b: softmax_reg.loss_fn(cfg, p, b)
+        acc = lambda p, b: softmax_reg.accuracy(cfg, p, b)
+    elif task_id == "shakespeare":
+        clients = make_char_lm_federated(n_clients=task.n_clients, seed=seed,
+                                         **task_kwargs)
+        cfg = task.model_cfg
+        init = lambda key: rnn.init_params(cfg, key)
+        loss = lambda p, b: rnn.loss_fn(cfg, p, b)
+        acc = lambda p, b: rnn.accuracy(cfg, p, b)
+    elif task_id == "cifar":
+        clients = make_vision_federated(n_clients=task.n_clients, seed=seed,
+                                        **task_kwargs)
+        cfg = task.model_cfg
+        _, strides = resnet.init_params(cfg, jax.random.PRNGKey(seed))
+        init = lambda key: resnet.init_params(cfg, key)[0]
+        loss = resnet.make_loss_fn(cfg, strides)
+        acc = lambda p, b: resnet.accuracy(cfg, p, strides, b)
+    else:
+        raise KeyError(task_id)
+    return task, FederatedData(clients), init, loss, acc
+
+
+def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
+                 rounds: Optional[int] = None, server_opt: str = "sgd",
+                 server_lr: float = 1.0, clients_per_round: Optional[int] = None,
+                 beta: Optional[float] = None, seed: int = 0,
+                 eval_every: int = 10, ckpt_dir: Optional[str] = None,
+                 prox_mu: float = 0.0, positively_correlated: bool = False,
+                 metrics_path: Optional[str] = None,
+                 log_fn: Callable = print) -> TrainResult:
+    """Run one (scenario × algorithm) cell and return its TrainResult.
+
+    ``scenario`` is a registry key or a Scenario object.  Precedence for the
+    round count: explicit ``rounds`` > ``scenario.rounds`` > task default.
+    """
+    sc = get_scenario(scenario)
+    algo_label = algo_name          # requested name, kept for metrics/logs
+    if algo_name == "fedadam":      # FedAdam = FedAvg selection + Adam server
+        algo_name, server_opt = "fedavg", "adam"
+        server_lr = 1e-2 if server_lr == 1.0 else server_lr
+    task, fed, init, loss, acc = build_task(sc.task, seed, **dict(sc.task_kwargs))
+    rounds = rounds or sc.rounds or task.rounds
+    M = clients_per_round or task.clients_per_round
+    beta = beta if beta is not None else task.beta
+    p = fed.p
+    N = fed.n_clients
+
+    avail_model = sc.build_availability(N, p=p)
+    budget = sc.build_budget(default_k=M)
+    K_cohort = budget.k_max          # static cohort size: jit never resizes
+    algo = make_algorithm(algo_name, N, p, beta=beta,
+                          positively_correlated=positively_correlated)
+    algo_state = algo.init(r0=M / N)   # calibrated arbitrary init (Thm B.1)
+
+    opt = make_optimizer(server_opt, lr=server_lr)
+    key = jax.random.PRNGKey(seed)
+    params = init(key)
+    opt_state = opt.init(params)
+    fed_round = jax.jit(make_fed_round(loss, opt, mode="parallel",
+                                       prox_mu=prox_mu))
+    eval_loss = jax.jit(loss)
+    eval_acc = jax.jit(acc)
+
+    sampler = CohortSampler(fed, cohort_size=K_cohort,
+                            local_steps=task.local_steps,
+                            local_batch=task.local_batch, seed=seed)
+    test_batch = {k: jnp.asarray(v) for k, v in fed.test_batch().items()}
+    avail_state = avail_model.init()
+
+    # PoC: fresh per-client losses of the current global model (the paper's
+    # PoC sends the model to d candidates who report F_k(w_t); at paper scale
+    # we evaluate every client's train sample directly).
+    def fresh_losses(params):
+        out = np.zeros(N, np.float32)
+        for k in range(N):
+            tr = fed.clients[k].train
+            sub = {key_: jnp.asarray(v[:64]) for key_, v in tr.items()}
+            out[k] = float(eval_loss(params, sub))
+        return out
+
+    metrics_file = None
+    if metrics_path:
+        os.makedirs(os.path.dirname(os.path.abspath(metrics_path)), exist_ok=True)
+        metrics_file = open(metrics_path, "w")
+
+    history = []
+    sel_history = np.zeros((rounds, N), bool)
+    t_start = time.time()
+    try:
+        for t in range(rounds):
+            key, k_av, k_sel, k_bud = jax.random.split(key, 4)
+            avail_state, avail = avail_model.step(k_av, avail_state, t)
+            k_t = budget.sample(k_bud, t)
+            losses_in = (jnp.asarray(fresh_losses(params))
+                         if algo.name == "poc" else None)
+            sel_mask, weights_full, algo_state = algo.select(
+                algo_state, k_sel, avail, k_t, losses_in)
+            sel_ids = np.flatnonzero(np.asarray(sel_mask))
+            sel_history[t, sel_ids] = True
+
+            batch_np, valid, ids = sampler.cohort_batch(sel_ids)
+            batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            w = jnp.asarray(np.asarray(weights_full)[ids] * valid)
+            lr_t = jnp.asarray(task.client_lr, jnp.float32)
+            params, opt_state, metrics = fed_round(params, opt_state, batch,
+                                                   w, lr_t)
+
+            record = dict(scenario=sc.name, algorithm=algo_label, round=t,
+                          k_t=int(k_t), n_available=int(np.asarray(avail).sum()),
+                          n_selected=int(len(sel_ids)),
+                          train_loss=float(metrics.loss),
+                          delta_norm=float(metrics.delta_norm))
+            if t % eval_every == 0 or t == rounds - 1:
+                record["test_loss"] = float(eval_loss(params, test_batch))
+                record["test_acc"] = float(eval_acc(params, test_batch))
+                history.append(dict(round=t, train_loss=record["train_loss"],
+                                    test_loss=record["test_loss"],
+                                    test_acc=record["test_acc"],
+                                    n_selected=record["n_selected"],
+                                    n_available=record["n_available"]))
+                log_fn(f"[{sc.name}/{algo_label}] round {t:4d} "
+                       f"loss={record['test_loss']:.4f} "
+                       f"acc={record['test_acc']:.4f} k_t={record['k_t']} "
+                       f"sel={record['n_selected']} "
+                       f"avail={record['n_available']}")
+            if metrics_file:
+                metrics_file.write(json.dumps(record) + "\n")
+                metrics_file.flush()
+            if ckpt_dir and (t + 1) % 100 == 0:
+                save_checkpoint(ckpt_dir, t + 1,
+                                {"params": params, "rates": algo_state.rates.r})
+    finally:
+        if metrics_file:
+            metrics_file.close()
+
+    final = dict(history[-1]) if history else {}
+    final["wall_s"] = time.time() - t_start
+    return TrainResult(history=history, final_metrics=final,
+                       rates=np.asarray(algo_state.rates.r),
+                       empirical_rates=sel_history.mean(0))

@@ -1,0 +1,107 @@
+"""Scenario × algorithm grid sweep with streaming JSONL metrics.
+
+One command regenerates a paper-figure-style grid (Figs. 2–4 structure:
+algorithms compared across availability/budget regimes):
+
+    python -m repro.sim.sweep --scenarios bernoulli,markov,diurnal \
+        --algorithms f3ast,fedavg --rounds 3
+
+Each (scenario, algorithm) cell streams per-round records to
+``<out>/<scenario>__<algorithm>.jsonl`` while it runs; a ``summary.json``
+with every cell's final metrics is written at the end.  ``--scenarios all``
+sweeps the whole registry; ``--list`` prints the registry and exits.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, Optional, Sequence
+
+from .runner import run_scenario
+from .scenario import SCENARIO_REGISTRY, get_scenario, list_scenarios
+
+# universe for --algorithms all (fixed_f3ast is excluded: it needs an
+# explicit r_target to differ from plain f3ast)
+ALGORITHMS = ("f3ast", "fedavg", "fedadam", "poc", "uniform")
+
+
+def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = None,
+              *, rounds: Optional[int] = None, out_dir: str = "experiments/sweep",
+              seed: int = 0, server_opt: str = "sgd", server_lr: float = 1.0,
+              eval_every: Optional[int] = None,
+              log_fn: Callable = print) -> dict:
+    """Run the grid; returns {(scenario, algorithm): final_metrics}.
+
+    ``algorithms=None`` uses each scenario's own default grid.  ``rounds``
+    overrides every cell (otherwise scenario/task defaults apply) and
+    ``eval_every`` defaults to evaluating only first + last round for short
+    sweeps.
+    """
+    os.makedirs(out_dir, exist_ok=True)
+    results = {}
+    for sc_key in scenarios:
+        sc = get_scenario(sc_key)
+        algos = tuple(algorithms) if algorithms else sc.algorithms
+        for algo in algos:
+            cell = f"{sc.name}__{algo}"
+            path = os.path.join(out_dir, f"{cell}.jsonl")
+            ev = eval_every or max(1, (rounds or sc.rounds or 150) // 5)
+            res = run_scenario(sc, algo, rounds=rounds, seed=seed,
+                               server_opt=server_opt, server_lr=server_lr,
+                               eval_every=ev, metrics_path=path,
+                               log_fn=lambda *_: None)
+            results[(sc.name, algo)] = res.final_metrics
+            fm = res.final_metrics
+            log_fn(f"sweep,{sc.name},{algo},"
+                   f"acc={fm.get('test_acc', float('nan')):.4f},"
+                   f"loss={fm.get('test_loss', float('nan')):.4f},"
+                   f"wall_s={fm['wall_s']:.1f} -> {path}")
+    with open(os.path.join(out_dir, "summary.json"), "w") as f:
+        json.dump({f"{s}|{a}": m for (s, a), m in results.items()}, f, indent=1)
+    return results
+
+
+def _parse_list(arg: str, universe: Sequence[str]) -> list:
+    if arg == "all":
+        return list(universe)
+    return [x.strip() for x in arg.split(",") if x.strip()]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Scenario × algorithm sweep (see repro/sim/scenario.py)")
+    ap.add_argument("--scenarios", default="bernoulli,markov,diurnal",
+                    help="comma-separated scenario keys, or 'all'")
+    ap.add_argument("--algorithms", default=None,
+                    help="comma-separated algorithm names, or 'all' "
+                         f"({','.join(ALGORITHMS)}); default: each "
+                         "scenario's own grid")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--out", default="experiments/sweep")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--server-opt", default="sgd")
+    ap.add_argument("--eval-every", type=int, default=None)
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in list_scenarios():
+            sc = SCENARIO_REGISTRY[name]
+            print(f"{name:<16} avail={sc.availability:<16} "
+                  f"budget={sc.budget:<9} task={sc.task:<12} "
+                  f"{sc.description}")
+        return
+
+    scenarios = _parse_list(args.scenarios, list_scenarios())
+    algorithms = (_parse_list(args.algorithms, ALGORITHMS) if args.algorithms
+                  else None)
+    server_lr = 1e-2 if args.server_opt in ("adam", "yogi") else 1.0
+    run_sweep(scenarios, algorithms, rounds=args.rounds, out_dir=args.out,
+              seed=args.seed, server_opt=args.server_opt,
+              server_lr=server_lr, eval_every=args.eval_every)
+
+
+if __name__ == "__main__":
+    main()

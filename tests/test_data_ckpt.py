@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional [dev] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # optional [dev] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hfun import R_MIN, h_grad, h_value, marginal_utility

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional [dev] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (empirical_rate, init_rates, unbiased_weights,

@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional [dev] extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (f3ast_select, fedavg_select, marginal_utility,

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")  # optional [dev] extra
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -66,7 +67,7 @@ def test_vectors_replicated():
 def test_fsdp_assignment():
     # FSDP is FUSED onto the model dim when divisible (P(..., ("model",
     # "data"))): same-dim subgroup reshards instead of device-order-
-    # incompatible ones (EXPERIMENTS.md §Perf #8).
+    # incompatible ones (DESIGN.md §6).
     s = _spec(("blocks", "mlp", "w1"), (16, 2048, 8192), fsdp=("data",))
     assert s == P(None, None, ("model", "data"))
     s3 = _spec(("blocks", "mlp", "w1"), (16, 2048, 8192), mesh=MESH3,

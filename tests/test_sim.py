@@ -1,0 +1,213 @@
+"""Scenario engine: registries, budget bounds, Markov stationarity, sweep."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sim import (BUDGET_REGISTRY, PROCESS_REGISTRY, SCENARIO_REGISTRY,
+                       GilbertElliott, Scenario, TraceDriven, get_scenario,
+                       list_scenarios, make_budget, make_process,
+                       register_scenario, run_scenario)
+from repro.sim.sweep import run_sweep
+
+N = 24
+
+
+# ---------------------------------------------------------------------------
+# Registry round-trips
+# ---------------------------------------------------------------------------
+
+def test_every_process_key_builds_and_steps():
+    p = np.full(N, 1.0 / N, np.float32)
+    key = jax.random.PRNGKey(0)
+    for name in PROCESS_REGISTRY:
+        model = make_process(name, N, p=p)
+        assert model.n_clients == N, name
+        state = model.init()
+        for t in range(3):
+            key, k1 = jax.random.split(key)
+            state, mask = model.step(k1, state, t)
+            assert mask.shape == (N,) and mask.dtype == jnp.bool_, name
+            assert bool(mask.any()), f"{name}: empty available set"
+        q = np.asarray(model.marginals(0))
+        assert q.shape == (N,) and (q >= 0).all() and (q <= 1).all(), name
+
+
+def test_every_budget_key_builds():
+    for name in BUDGET_REGISTRY:
+        sched = make_budget(name)
+        assert sched.k_max >= 1, name
+
+
+def test_every_scenario_key_resolves_and_builds():
+    p = np.full(N, 1.0 / N, np.float32)
+    for name in list_scenarios():
+        sc = get_scenario(name)
+        assert sc is SCENARIO_REGISTRY[name]
+        assert sc.name == name
+        model = sc.build_availability(N, p=p)
+        budget = sc.build_budget(default_k=5)
+        assert model.n_clients == N
+        assert budget.k_max >= 1
+
+
+def test_unknown_keys_raise():
+    with pytest.raises(KeyError):
+        make_process("no_such_process", N)
+    with pytest.raises(KeyError):
+        make_budget("no_such_budget")
+    with pytest.raises(KeyError):
+        get_scenario("no_such_scenario")
+
+
+def test_register_scenario_roundtrip_and_collision():
+    sc = Scenario(name="_tmp_test_scenario", availability="scarce")
+    register_scenario(sc)
+    try:
+        assert get_scenario("_tmp_test_scenario") is sc
+        with pytest.raises(KeyError):
+            register_scenario(sc)          # duplicate without overwrite
+        register_scenario(sc, overwrite=True)
+    finally:
+        del SCENARIO_REGISTRY["_tmp_test_scenario"]
+
+
+def test_default_k_injection():
+    sc = get_scenario("bernoulli")          # constant budget, no pinned k
+    assert sc.build_budget(default_k=7).k_max == 7
+    pinned = Scenario(name="x", availability="scarce",
+                      budget_kwargs={"k": 4})
+    assert pinned.build_budget(default_k=7).k_max == 4   # pinned wins
+
+
+# ---------------------------------------------------------------------------
+# Budget schedules respect 1 <= K_t <= k_max
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,kw", [
+    ("constant", {"k": 10}),
+    ("jittered", {"k": 10, "jitter": 4}),
+    ("step", {"k_before": 10, "k_after": 3, "t_switch": 40}),
+    ("diurnal", {"k_min": 2, "k_hi": 10, "period": 24}),
+    ("bandwidth", {"k_cap": 10, "sigma": 0.5}),
+])
+def test_budget_bounds(name, kw):
+    sched = make_budget(name, **kw)
+    key = jax.random.PRNGKey(0)
+    ks = []
+    for t in range(120):
+        key, k1 = jax.random.split(key)
+        k_t = int(sched.sample(k1, t))
+        assert 1 <= k_t <= sched.k_max, (name, t, k_t, sched.k_max)
+        ks.append(k_t)
+    if name != "constant":
+        assert len(set(ks)) > 1, f"{name} never varied"
+
+
+def test_step_budget_switches_exactly():
+    sched = make_budget("step", k_before=8, k_after=2, t_switch=10)
+    key = jax.random.PRNGKey(0)
+    assert int(sched.sample(key, 9)) == 8
+    assert int(sched.sample(key, 10)) == 2
+
+
+# ---------------------------------------------------------------------------
+# Markov availability matches its stationary distribution
+# ---------------------------------------------------------------------------
+
+def test_gilbert_elliott_matches_stationary_marginal():
+    model = GilbertElliott(n_clients=60, p_up=0.3, p_down=0.1,
+                           q_up=0.9, q_down=0.05)
+    pi = model.stationary_up
+    expected = pi * model.q_up + (1 - pi) * model.q_down
+    key = jax.random.PRNGKey(1)
+    state = model.init()
+    acc = np.zeros(60)
+    T, burn = 1200, 100
+    for t in range(T + burn):
+        key, k1 = jax.random.split(key)
+        state, mask = model.step(k1, state, t)
+        if t >= burn:
+            acc += np.asarray(mask)
+    emp = acc / T
+    assert abs(emp.mean() - expected) < 0.03, (emp.mean(), expected)
+    np.testing.assert_allclose(np.asarray(model.marginals(0)),
+                               np.full(60, expected), atol=1e-6)
+
+
+def test_cluster_markov_matches_stationary_marginal():
+    model = make_process("markov", 40, n_clusters=4)
+    expected = float(np.asarray(model.marginals(0)).mean())
+    key = jax.random.PRNGKey(2)
+    state = model.init()
+    acc = np.zeros(40)
+    T, burn = 1500, 100
+    for t in range(T + burn):
+        key, k1 = jax.random.split(key)
+        state, mask = model.step(k1, state, t)
+        if t >= burn:
+            acc += np.asarray(mask)
+    emp = acc / T
+    # cluster chains mix slowly; population mean should still track the
+    # stationary marginal within a loose tolerance
+    assert abs(emp.mean() - expected) < 0.08, (emp.mean(), expected)
+
+
+# ---------------------------------------------------------------------------
+# Regime-specific behaviours
+# ---------------------------------------------------------------------------
+
+def test_drift_is_nonstationary():
+    model = make_process("drift", N, horizon=100)
+    q_start = np.asarray(model.marginals(0)).mean()
+    q_end = np.asarray(model.marginals(100)).mean()
+    q_past = np.asarray(model.marginals(400)).mean()
+    assert q_start > q_end + 0.1                # marginals actually drift
+    assert abs(q_past - q_end) < 1e-6           # and pin at the end profile
+
+
+def test_trace_driven_is_deterministic_and_cyclic():
+    model = make_process("trace", N, length=12, seed=3)
+    assert isinstance(model, TraceDriven)
+    key = jax.random.PRNGKey(0)
+    _, m0 = model.step(key, (), 4)
+    _, m1 = model.step(jax.random.PRNGKey(9), (), 4)     # key-independent
+    _, m2 = model.step(key, (), 4 + 12)                  # cycles
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m1))
+    np.testing.assert_array_equal(np.asarray(m0), np.asarray(m2))
+
+
+def test_diurnal_phase_spread_waves():
+    model = make_process("diurnal", 200, phase_spread=True, seed=0)
+    qs = np.stack([np.asarray(model.marginals(t)) for t in range(24)])
+    # with spread phases the population mean stays roughly flat...
+    assert qs.mean(axis=1).std() < 0.05
+    # ...while each client's own availability swings
+    assert qs.std(axis=0).mean() > 0.2
+
+
+# ---------------------------------------------------------------------------
+# End-to-end sweep smoke test (3 rounds, 2 cells)
+# ---------------------------------------------------------------------------
+
+def test_sweep_smoke_end_to_end(tmp_path):
+    out = str(tmp_path / "sweep")
+    results = run_sweep(["bernoulli", "stepk"], ["f3ast"], rounds=3,
+                        out_dir=out, eval_every=1, log_fn=lambda *_: None)
+    assert set(results) == {("bernoulli", "f3ast"), ("stepk", "f3ast")}
+    for (sc, algo), fm in results.items():
+        assert np.isfinite(fm["test_loss"]) and np.isfinite(fm["test_acc"])
+        path = os.path.join(out, f"{sc}__{algo}.jsonl")
+        records = [json.loads(l) for l in open(path)]
+        assert len(records) == 3
+        for t, rec in enumerate(records):
+            assert rec["round"] == t
+            assert rec["scenario"] == sc and rec["algorithm"] == algo
+            assert 1 <= rec["k_t"] <= 10
+            assert rec["n_selected"] <= rec["k_t"]
+            assert np.isfinite(rec["train_loss"])
+    summary = json.load(open(os.path.join(out, "summary.json")))
+    assert len(summary) == 2

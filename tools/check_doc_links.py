@@ -1,0 +1,109 @@
+#!/usr/bin/env python
+"""Docs link-check: fail on references to nonexistent files.
+
+Checked, repo-wide:
+  1. Markdown links ``[text](target)`` with relative targets, in every
+     tracked ``*.md`` file — resolved against the file's directory and the
+     repo root (anchors/queries stripped; http(s)/mailto ignored).
+  2. Doc-file mentions (all-caps ``*.md`` names) anywhere in tracked
+     ``*.md`` and ``*.py`` sources — this is what catches a docstring
+     citing a design doc that does not exist.
+  3. Backticked repo paths like ``src/repro/sim/sweep.py`` or
+     ``tests/test_sim.py`` in markdown files, resolved against the file's
+     directory, the repo root, and the source roots ``src/`` and
+     ``src/repro/``.
+
+Usage: python tools/check_doc_links.py [repo_root]
+Exit status 1 if any broken reference is found.
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+DOC_MENTION = re.compile(r"\b([A-Z][A-Z0-9_]*\.md)\b")
+BACKTICK_PATH = re.compile(r"`([A-Za-z0-9_./-]+?\.(?:py|md|toml|yml|yaml|json))`")
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+# transient / generated files that may legitimately be referenced before
+# they exist in a checkout
+IGNORED_TARGETS = {"ISSUE.md"}
+# transient files not worth checking (per-PR task briefs, change log)
+SKIP_FILES = {"ISSUE.md", "CHANGES.md"}
+# extra bases backticked/module-relative paths resolve against
+SOURCE_ROOTS = ("src", os.path.join("src", "repro"))
+
+
+def tracked_files(root: str):
+    try:
+        out = subprocess.run(["git", "ls-files"], cwd=root, check=True,
+                             capture_output=True, text=True).stdout
+        return [l for l in out.splitlines() if l]
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        found = []
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = [d for d in dirnames
+                           if d not in (".git", "__pycache__", ".pytest_cache")]
+            for f in filenames:
+                found.append(os.path.relpath(os.path.join(dirpath, f), root))
+        return found
+
+
+def exists_in_repo(root: str, base_dir: str, target: str) -> bool:
+    target = target.split("#", 1)[0].split("?", 1)[0]
+    if not target:
+        return True
+    bases = [base_dir, root] + [os.path.join(root, s) for s in SOURCE_ROOTS]
+    for base in bases:
+        if os.path.exists(os.path.normpath(os.path.join(base, target))):
+            return True
+    return False
+
+
+def check(root: str) -> int:
+    files = [f for f in tracked_files(root)
+             if os.path.basename(f) not in SKIP_FILES]
+    md_files = [f for f in files if f.endswith(".md")]
+    py_files = [f for f in files if f.endswith(".py")]
+    errors = []
+
+    for rel in md_files:
+        path = os.path.join(root, rel)
+        text = open(path, encoding="utf-8").read()
+        base = os.path.dirname(path)
+        for m in MD_LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(SKIP_SCHEMES) or target in IGNORED_TARGETS:
+                continue
+            if not exists_in_repo(root, base, target):
+                errors.append(f"{rel}: broken markdown link -> {target}")
+        for m in BACKTICK_PATH.finditer(text):
+            target = m.group(1)
+            if "/" not in target or target in IGNORED_TARGETS:
+                continue
+            if not exists_in_repo(root, base, target):
+                errors.append(f"{rel}: backticked path does not exist -> {target}")
+
+    for rel in md_files + py_files:
+        path = os.path.join(root, rel)
+        text = open(path, encoding="utf-8").read()
+        for m in DOC_MENTION.finditer(text):
+            target = m.group(1)
+            if target in IGNORED_TARGETS:
+                continue
+            if not exists_in_repo(root, os.path.dirname(path), target):
+                errors.append(f"{rel}: references nonexistent doc -> {target}")
+
+    if errors:
+        print(f"check_doc_links: {len(errors)} broken reference(s)")
+        for e in sorted(set(errors)):
+            print("  " + e)
+        return 1
+    print(f"check_doc_links: OK ({len(md_files)} md, {len(py_files)} py files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")))
