@@ -1,0 +1,128 @@
+"""Round-engine throughput: host loop vs device-resident vs vmapped cells.
+
+Measures steady-state rounds/sec (first round / first chunk excluded — that
+is where XLA compiles) for the three execution paths of one
+(scenario × algorithm) cell on ``synthetic11``:
+
+* ``host``     — the reference Python loop (``sim/runner.py``,
+                 ``engine="host"``): per-round host↔device syncs.
+* ``device``   — the chunked ``lax.scan`` engine (``sim/engine.py``): one
+                 sync per chunk.
+* ``vmapped8`` — 8 cells (seeds 0..7) in one vmapped program
+                 (``run_cells_vmapped``); rounds/sec counts all cells.
+
+Writes a ``BENCH_engine.json`` consumed by ``tools/check_bench_regression.py``
+in CI (fails the build on a >30% rounds/sec regression vs the committed
+baseline, or if the device engine loses its speedup over the host loop).
+
+    PYTHONPATH=src python benchmarks/bench_engine.py --quick
+    PYTHONPATH=src python benchmarks/bench_engine.py --out BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+
+import jax
+
+sys.path.insert(0, "src")
+
+from repro.sim import run_cells_vmapped, run_scenario
+from repro.sim.engine import run_scenario_device
+
+
+def _silent(*args, **kwargs):
+    pass
+
+
+def bench_host(scenario: str, algo: str, rounds: int, seed: int) -> dict:
+    res = run_scenario(scenario, algo, rounds=rounds, seed=seed,
+                       eval_every=rounds, engine="host", log_fn=_silent)
+    return dict(rounds=rounds,
+                wall_s=round(res.final_metrics["wall_s"], 4),
+                rounds_per_s=round(res.final_metrics["steady_rounds_per_s"], 2))
+
+
+def bench_device(scenario: str, algo: str, rounds: int, seed: int,
+                 chunk_size: int) -> dict:
+    res = run_scenario_device(scenario, algo, rounds=rounds, seed=seed,
+                              eval_every=rounds, chunk_size=chunk_size,
+                              log_fn=_silent)
+    return dict(rounds=rounds, chunk_size=chunk_size,
+                wall_s=round(res.final_metrics["wall_s"], 4),
+                rounds_per_s=round(res.final_metrics["steady_rounds_per_s"], 2))
+
+
+def bench_vmapped(scenario: str, algo: str, rounds: int, cells: int,
+                  chunk_size: int) -> dict:
+    res = run_cells_vmapped(scenario, algo, seeds=list(range(cells)),
+                            rounds=rounds, chunk_size=chunk_size)
+    return dict(rounds=rounds, cells=cells, chunk_size=chunk_size,
+                wall_s=round(res["wall_s"], 4),
+                rounds_per_s=round(res["steady_rounds_per_s"], 2))
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(
+        description="host vs device-resident vs vmapped round-engine bench")
+    ap.add_argument("--scenario", default="scarce")
+    ap.add_argument("--algo", default="f3ast")
+    ap.add_argument("--quick", action="store_true",
+                    help="short CI-sized run (fewer rounds)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cells", type=int, default=8,
+                    help="vmapped cell count (seeds 0..cells-1)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args(argv)
+
+    if args.quick:
+        host_rounds, dev_rounds, chunk = 80, 240, 40
+    else:
+        host_rounds, dev_rounds, chunk = 200, 600, 60
+
+    result = dict(
+        benchmark="engine",
+        scenario=args.scenario, algorithm=args.algo, task="synthetic11",
+        quick=bool(args.quick),
+        platform=dict(backend=jax.default_backend(),
+                      device_count=jax.device_count(),
+                      jax=jax.__version__,
+                      python=platform.python_version(),
+                      machine=platform.machine()),
+    )
+    print(f"benching host loop        ({host_rounds} rounds) ...")
+    result["host"] = bench_host(args.scenario, args.algo, host_rounds,
+                                args.seed)
+    print(f"  -> {result['host']['rounds_per_s']:.1f} rounds/s")
+    print(f"benching device engine    ({dev_rounds} rounds, "
+          f"chunk={chunk}) ...")
+    result["device"] = bench_device(args.scenario, args.algo, dev_rounds,
+                                    args.seed, chunk)
+    print(f"  -> {result['device']['rounds_per_s']:.1f} rounds/s")
+    print(f"benching vmapped x{args.cells}       ({dev_rounds} rounds) ...")
+    result[f"vmapped{args.cells}"] = bench_vmapped(
+        args.scenario, args.algo, dev_rounds, args.cells, chunk)
+    print(f"  -> {result[f'vmapped{args.cells}']['rounds_per_s']:.1f} "
+          f"cell-rounds/s")
+
+    host_rps = result["host"]["rounds_per_s"]
+    result["speedup_device_over_host"] = round(
+        result["device"]["rounds_per_s"] / host_rps, 2)
+    result["speedup_vmapped_over_host"] = round(
+        result[f"vmapped{args.cells}"]["rounds_per_s"] / host_rps, 2)
+
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=1)
+        f.write("\n")
+    print(f"device engine speedup over host: "
+          f"{result['speedup_device_over_host']:.2f}x")
+    print(f"vmapped x{args.cells} speedup over host: "
+          f"{result['speedup_vmapped_over_host']:.2f}x")
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,6 @@ from __future__ import annotations
 import itertools
 import json
 import os
-import time
 
 import numpy as np
 
@@ -34,7 +33,6 @@ def run(task_id="synthetic11", rounds=300, seeds=(0,), out_dir=None,
     for av, algo in itertools.product(availabilities, algos):
         accs, losses = [], []
         for seed in seeds:
-            t0 = time.time()
             res = run_federated(task_id=task_id, rounds=rounds,
                                 availability=av, seed=seed,
                                 eval_every=max(rounds // 4, 1),

@@ -13,8 +13,6 @@ import glob
 import json
 import os
 
-import numpy as np
-
 from repro.configs import ARCHS, INPUT_SHAPES
 from repro.launch.specs import count_params
 

@@ -63,6 +63,13 @@ def bench_roofline(full: bool):
     roofline.run()
 
 
+def bench_engine(full: bool):
+    from . import bench_engine as eng
+    out = os.path.join(OUT_DIR, "BENCH_engine.json")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    eng.main(([] if full else ["--quick"]) + ["--out", out])
+
+
 BENCHES = {
     "tables23": bench_tables23,
     "fig5": bench_fig5,
@@ -71,6 +78,7 @@ BENCHES = {
     "selection": bench_selection,
     "kernels": bench_kernels,
     "roofline": bench_roofline,
+    "engine": bench_engine,
 }
 
 

@@ -7,8 +7,6 @@ burn-in phase (paper Thm B.1: re-mixing costs O(log eps / log alpha) rounds).
 """
 from __future__ import annotations
 
-import io
-import json
 import os
 import re
 from typing import Any

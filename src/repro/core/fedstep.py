@@ -25,7 +25,6 @@ cohort × local-steps × per-step minibatch.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple
 
 import jax

@@ -85,3 +85,20 @@ def poc_select(key: jax.Array, avail: jnp.ndarray, m: jnp.ndarray,
     available pool, then the top-m candidates by current loss are selected."""
     cand = fedavg_select(key, avail, jnp.asarray(d, jnp.int32), p)
     return _topk_mask(losses, cand, m)
+
+
+def cohort_ids_from_mask(mask: jnp.ndarray, cohort_size: int):
+    """Selection mask (N,) bool → padded cohort (ids (K,) i32, valid (K,) bool).
+
+    Jit-safe replacement for the host loop's ``np.flatnonzero`` + pad:
+    selected ids in ascending order, slots past |S| repeating the first
+    selected client with ``valid=False`` — the exact layout
+    ``CohortSampler.cohort_batch`` produces, so the two paths stay
+    batch-compatible (asserted by the engine parity tests).
+    """
+    n = mask.shape[0]
+    ranked = jnp.sort(jnp.where(mask, jnp.arange(n, dtype=jnp.int32), n))
+    ids = ranked[:cohort_size]
+    valid = ids < n
+    first = jnp.minimum(ranked[0], n - 1)   # mask is never empty in practice
+    return jnp.where(valid, ids, first), valid

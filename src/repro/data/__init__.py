@@ -1,4 +1,5 @@
 from .partition import dirichlet_partition, size_skewed_partition, client_fractions
 from .synthetic import (SyntheticDataset, make_synthetic_federated,
                         make_char_lm_federated, make_vision_federated)
-from .pipeline import FederatedData, CohortSampler
+from .pipeline import (FederatedData, CohortSampler, StagedData,
+                       staged_cohort_batch)

@@ -1,20 +1,32 @@
 """Client dataset registry + cohort batch assembly.
 
-The driver keeps data host-side (numpy); each round it gathers the selected
-clients' minibatches into one stacked cohort batch with static shapes
-(K, E, B, ...) — K = max cohort size, E = local steps, B = local batch —
-and ships it to the mesh together with the (K,) aggregation weights.
+Two batch paths feed the jitted round, both producing stacked cohort
+batches with static shapes (K, E, B, ...) — K = max cohort size, E = local
+steps, B = local batch — alongside the (K,) aggregation weights.
 Unselected cohort slots are filled by repeating a valid client but receive
 zero aggregation weight, so shapes never change across rounds (jit-stable).
+
+* **host path** (`CohortSampler.cohort_batch`): data stays numpy; each
+  round gathers the selected clients' minibatches on the host and ships the
+  stacked batch to the device.  When given a PRNG ``key`` the minibatch
+  indices come from ``jax.random.randint`` — bit-identical to the device
+  path below, which is what the engine-parity tests assert.
+* **device path** (`CohortSampler.stage_device` + `staged_cohort_batch`):
+  every client's train split is staged once into padded device arrays
+  (N, S, ...) with per-client sample counts; the pure gather
+  ``staged_cohort_batch(staged, key, ids)`` then assembles a cohort batch
+  *inside jit* — no host↔device traffic per round, which is what lets the
+  whole round live in ``lax.scan`` (DESIGN.md §7, `sim/engine.py`).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, NamedTuple, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from .partition import client_fractions
 from .synthetic import SyntheticDataset
 
 
@@ -42,6 +54,36 @@ class FederatedData:
         return [c.test for c in self.clients]
 
 
+class StagedData(NamedTuple):
+    """All clients' train splits as padded device arrays.
+
+    ``arrays``: {feature: (N, S, ...)} with S = max samples over clients,
+    zero-padded past each client's count; ``counts``: (N,) int32 per-client
+    sample counts.  Minibatch indices are always drawn < count, so the
+    padding is never read.
+    """
+
+    arrays: dict
+    counts: jnp.ndarray
+
+
+def staged_cohort_batch(staged: StagedData, key: jax.Array,
+                        ids: jnp.ndarray, local_steps: int,
+                        local_batch: int) -> dict:
+    """Pure device-side cohort gather: {feature: (K, E, B, ...)}.
+
+    ``ids``: (K,) int32 client ids (padded cohort).  Jit/scan/vmap-safe; the
+    single ``randint`` draw with per-row bounds matches the host path's
+    keyed sampling bit-for-bit (same key ⇒ same batch).
+    """
+    k = ids.shape[0]
+    counts = staged.counts[ids]
+    idx = jax.random.randint(key, (k, local_steps, local_batch), 0,
+                             counts[:, None, None])
+    return {name: arr[ids[:, None, None], idx]
+            for name, arr in staged.arrays.items()}
+
+
 @dataclasses.dataclass
 class CohortSampler:
     """Assembles static-shape cohort batches for the jitted round."""
@@ -54,12 +96,38 @@ class CohortSampler:
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
 
-    def cohort_batch(self, selected: Sequence[int]):
+    def stage_device(self) -> StagedData:
+        """Stage every client's train split onto the device (padded stack).
+
+        One-time host→device transfer; afterwards `staged_cohort_batch`
+        assembles cohort batches entirely on-device.  Cost is N × S × sample
+        size — a few MB for the paper tasks (synthetic/char-LM/vision
+        stand-ins), which is the workload the device engine targets.
+        """
+        clients = self.data.clients
+        counts = np.asarray(
+            [len(next(iter(c.train.values()))) for c in clients], np.int32)
+        s_max = int(counts.max())
+        arrays = {}
+        for name, leaf in clients[0].train.items():
+            stacked = np.zeros((len(clients), s_max) + leaf.shape[1:],
+                               leaf.dtype)
+            for i, c in enumerate(clients):
+                stacked[i, :counts[i]] = c.train[name]
+            arrays[name] = jnp.asarray(stacked)
+        return StagedData(arrays=arrays, counts=jnp.asarray(counts))
+
+    def cohort_batch(self, selected: Sequence[int],
+                     key: Optional[jax.Array] = None):
         """selected: client ids (any length <= cohort_size).
 
         Returns (batch dict with leaves (K, E, B, ...), valid (K,) bool,
         client_ids (K,) int) — slots beyond len(selected) are repeats of the
         first selected client with valid=False.
+
+        With ``key`` given, minibatch indices are drawn via
+        ``jax.random.randint`` exactly as the device path does (bit-identical
+        batches for the same key); without it, the legacy numpy RNG path.
         """
         K, E, B = self.cohort_size, self.local_steps, self.local_batch
         sel = list(selected)
@@ -68,12 +136,19 @@ class CohortSampler:
         valid = np.zeros(K, bool)
         valid[:min(len(sel), K)] = True
         keys = self.data.clients[0].train.keys()
+        counts = np.asarray(
+            [len(next(iter(self.data.clients[c].train.values())))
+             for c in ids])
+        if key is None:
+            idx = np.stack([self._rng.integers(0, n, size=(E, B))
+                            for n in counts])
+        else:
+            idx = np.asarray(jax.random.randint(
+                key, (K, E, B), 0, jnp.asarray(counts)[:, None, None]))
         out = {k: [] for k in keys}
-        for cid in ids:
+        for i, cid in enumerate(ids):
             tr = self.data.clients[cid].train
-            n = len(next(iter(tr.values())))
-            idx = self._rng.integers(0, n, size=(E, B))
             for k in keys:
-                out[k].append(tr[k][idx])
+                out[k].append(tr[k][idx[i]])
         return ({k: np.stack(v) for k, v in out.items()},
                 valid, np.asarray(ids, np.int32))

@@ -19,7 +19,7 @@ from typing import List
 
 import numpy as np
 
-from .partition import client_fractions, dirichlet_partition, size_skewed_partition
+from .partition import dirichlet_partition
 
 
 @dataclasses.dataclass

@@ -38,9 +38,20 @@ def _agg_kernel(w_ref, v_ref, o_ref, acc_ref, *, nk: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _default_interpret() -> bool:
+    """Interpret off TPU, compiled Pallas on TPU.
+
+    Resolved per call (not at import) so backend selection via
+    ``JAX_PLATFORMS`` / ``jax.config`` is honored; on TPU the kernel must
+    never silently run under the interpreter — that is a ~100× slowdown on
+    the round's hot reduction.
+    """
+    return jax.default_backend() != "tpu"
+
+
 def fed_aggregate(deltas: jnp.ndarray, weights: jnp.ndarray, *,
-                  tile: int = DEFAULT_TILE, interpret: bool = True):
+                  tile: int = DEFAULT_TILE,
+                  interpret: bool | None = None):
     """Algorithm 1 line 9 as a fused reduction: Δ^{t+1} = Σ_k w_k v_k.
 
     With w_k = p_k / r_k(t) this is the unbiased F3AST estimator (Lemma
@@ -51,7 +62,18 @@ def fed_aggregate(deltas: jnp.ndarray, weights: jnp.ndarray, *,
     fed_aggregate_ref`` (asserted in ``tests/test_kernels.py``) and computes
     the same sum as ``core.aggregation.weighted_aggregate`` — this is the
     TPU-roofline spelling.
+
+    ``interpret=None`` (default) auto-detects: compiled Pallas on TPU,
+    interpreter elsewhere.
     """
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fed_aggregate(deltas, weights, tile=tile, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def _fed_aggregate(deltas: jnp.ndarray, weights: jnp.ndarray, *,
+                   tile: int, interpret: bool):
     K, D = deltas.shape
     pad = (-D) % tile
     if pad:
@@ -75,11 +97,12 @@ def fed_aggregate(deltas: jnp.ndarray, weights: jnp.ndarray, *,
 
 
 def fed_aggregate_tree(deltas_tree, weights: jnp.ndarray, *,
-                       interpret: bool = True):
+                       interpret: bool | None = None):
     """Pytree spelling of Alg. 1 line 9: flattens each (K, ...) model leaf
     to (K, D), applies :func:`fed_aggregate` with the same (K,) weight
     vector (one w_k per cohort client spans every parameter leaf), and
-    restores the leaf shapes — the whole-model Δ^{t+1} in one call."""
+    restores the leaf shapes — the whole-model Δ^{t+1} in one call.
+    ``interpret=None`` auto-detects the backend like :func:`fed_aggregate`."""
     def one(leaf):
         K = leaf.shape[0]
         flat = leaf.reshape(K, -1)

@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from . import ref as _ref
 from .fed_aggregate import fed_aggregate as _fed_aggregate_kernel
-from .fed_aggregate import fed_aggregate_tree
+from .fed_aggregate import fed_aggregate_tree as fed_aggregate_tree  # noqa: PLC0414 — re-export
 from .flash_attention import flash_attention as _flash_kernel
 from .ssd_chunk import ssd_chunk as _ssd_chunk_kernel
 
@@ -34,7 +34,9 @@ def fed_aggregate(deltas, weights, *, use_kernel: bool | None = None):
     if use_kernel is None:
         use_kernel = _on_tpu()
     if use_kernel:
-        return _fed_aggregate_kernel(deltas, weights, interpret=not _on_tpu())
+        # backend auto-detect inside the kernel wrapper: compiled on TPU,
+        # interpreter elsewhere
+        return _fed_aggregate_kernel(deltas, weights)
     return _ref.fed_aggregate_ref(deltas, weights)
 
 

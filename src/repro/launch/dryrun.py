@@ -28,10 +28,9 @@ import traceback
 import jax
 
 from ..configs import ARCHS, INPUT_SHAPES, get_arch
-from .hlo_analysis import collective_bytes, dominant_term, roofline_terms
+from .hlo_analysis import collective_bytes, dominant_term
 from .hlo_costs import analyze as hlo_analyze
-from .mesh import (CHIPS_PER_POD, HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
-                   make_production_mesh)
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
 from .specs import count_params
 from .steps import build_step
 

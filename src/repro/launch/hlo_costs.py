@@ -93,7 +93,6 @@ def parse_hlo(hlo: str):
     comps: Dict[str, Comp] = {}
     entry: Optional[str] = None
     cur: Optional[Comp] = None
-    cur_name = None
     symtab: Dict[str, str] = {}
     pending: List[Tuple[str, str, str]] = []  # (opname_line fields) for dots
 

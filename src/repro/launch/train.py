@@ -48,7 +48,8 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                   seed: int = 0, eval_every: int = 10,
                   ckpt_dir: Optional[str] = None, prox_mu: float = 0.0,
                   log_fn: Callable = print, positively_correlated: bool = False,
-                  metrics_path: Optional[str] = None) -> TrainResult:
+                  metrics_path: Optional[str] = None,
+                  engine: str = "device") -> TrainResult:
     """Availability-string front-end: wraps the arguments into an ad-hoc
     :class:`Scenario` and runs it through :func:`repro.sim.runner.run_scenario`.
     """
@@ -61,7 +62,8 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                         beta=beta, seed=seed, eval_every=eval_every,
                         ckpt_dir=ckpt_dir, prox_mu=prox_mu,
                         positively_correlated=positively_correlated,
-                        metrics_path=metrics_path, log_fn=log_fn)
+                        metrics_path=metrics_path, engine=engine,
+                        log_fn=log_fn)
 
 
 def run_arch_smoke(arch_id: str, rounds: int = 3, seed: int = 0,
@@ -126,6 +128,9 @@ def main():
                     help="stream per-round metrics to this JSONL file")
     ap.add_argument("--prox-mu", type=float, default=0.0,
                     help="FedProx proximal coefficient (0 = plain local SGD)")
+    ap.add_argument("--engine", default="device", choices=["device", "host"],
+                    help="device-resident scan engine (default) or the "
+                         "reference host loop (DESIGN.md §7.1)")
     args = ap.parse_args()
 
     if args.arch:
@@ -138,7 +143,7 @@ def main():
                            server_opt=server_opt, server_lr=server_lr,
                            clients_per_round=args.clients_per_round,
                            seed=args.seed, ckpt_dir=args.ckpt_dir,
-                           prox_mu=args.prox_mu,
+                           prox_mu=args.prox_mu, engine=args.engine,
                            metrics_path=args.metrics_jsonl)
     else:
         res = run_federated(task_id=args.task or "synthetic11",
@@ -147,7 +152,7 @@ def main():
                             server_opt=server_opt, server_lr=server_lr,
                             clients_per_round=args.clients_per_round,
                             seed=args.seed, ckpt_dir=args.ckpt_dir,
-                            prox_mu=args.prox_mu,
+                            prox_mu=args.prox_mu, engine=args.engine,
                             metrics_path=args.metrics_jsonl)
     print(json.dumps(res.final_metrics, indent=1))
 

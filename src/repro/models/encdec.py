@@ -137,7 +137,6 @@ def loss_fn(cfg: ModelConfig, params, batch):
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
     shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
-    zeros = lambda: jnp.zeros(shape, cfg.np_dtype)
     L = cfg.n_layers
     return {
         "index": jnp.zeros((), jnp.int32),

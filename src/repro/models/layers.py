@@ -9,7 +9,6 @@ path with KV cache (decode).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -208,7 +207,7 @@ def _chunked_sdpa(q, k, v, *, causal: bool, window: int, softcap: float,
         qpos = qi * _Q_CHUNK + jnp.arange(_Q_CHUNK) + q_offset
 
         def kv_step(carry, xs):
-            acc, m, l = carry
+            acc, m, denom = carry
             ki, kc, vc = xs
             kpos = ki * _KV_CHUNK + jnp.arange(_KV_CHUNK)
             s = jnp.einsum("bqkgh,bskh->bkgqs", qc.astype(jnp.float32),
@@ -226,17 +225,17 @@ def _chunked_sdpa(q, k, v, *, causal: bool, window: int, softcap: float,
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
-            l = l * corr + p.sum(axis=-1)
+            denom = denom * corr + p.sum(axis=-1)
             acc = acc * corr[..., None] + jnp.einsum(
                 "bkgqs,bskh->bkgqh", p, vc.astype(jnp.float32))
-            return (acc, m_new, l), None
+            return (acc, m_new, denom), None
 
         acc0 = jnp.zeros((B, KV, g, _Q_CHUNK, hd), jnp.float32)
         m0 = jnp.full((B, KV, g, _Q_CHUNK), -jnp.inf, jnp.float32)
-        l0 = jnp.zeros((B, KV, g, _Q_CHUNK), jnp.float32)
-        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0),
+        denom0 = jnp.zeros((B, KV, g, _Q_CHUNK), jnp.float32)
+        (acc, m, denom), _ = jax.lax.scan(kv_step, (acc0, m0, denom0),
                                       (jnp.arange(nk), ks, vs))
-        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = acc / jnp.maximum(denom[..., None], 1e-30)
         return out.transpose(0, 3, 1, 2, 4)            # (B, Qc, KV, g, hd)
 
     out = jax.lax.map(per_q_chunk, (jnp.arange(nq), qs))

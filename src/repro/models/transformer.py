@@ -14,7 +14,6 @@ Public API (family-dispatched; encoder-decoder lives in ``encdec.py``):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax

@@ -20,7 +20,7 @@ d_ff = 7680 MLP still splits 16 ways.
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
@@ -122,9 +122,10 @@ def param_shardings(params, mesh: Mesh, *, model_axis: str = "model",
     """Pytree of NamedShardings matching ``params`` (works on
     ShapeDtypeStructs too — no allocation)."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    specs = [NamedSharding(mesh, spec_for_leaf(p, l, mesh, model_axis=model_axis,
+    specs = [NamedSharding(mesh, spec_for_leaf(p, leaf, mesh,
+                                               model_axis=model_axis,
                                                fsdp_axes=fsdp_axes))
-             for p, l in flat]
+             for p, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
@@ -142,7 +143,8 @@ def batch_shardings(batch, mesh: Mesh, *, batch_dim_axes, batch_dim: int = 0):
         return NamedSharding(mesh, P(*s))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(batch)
-    return jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec(p, leaf) for p, leaf in flat])
 
 
 def decode_state_shardings(state, mesh: Mesh, *, data_axes, model_axis="model"):
@@ -186,7 +188,8 @@ def decode_state_shardings(state, mesh: Mesh, *, data_axes, model_axis="model"):
         return NamedSharding(mesh, P(*s))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)
-    return jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+    return jax.tree_util.tree_unflatten(treedef,
+                                        [spec(p, leaf) for p, leaf in flat])
 
 
 def to_named_shardings(spec_tree, mesh: Mesh):

@@ -26,3 +26,5 @@ from .budgets import (BUDGET_REGISTRY, BandwidthCoupled, BudgetSchedule,
 from .scenario import (SCENARIO_REGISTRY, Scenario, get_scenario,
                        list_scenarios, register_scenario)
 from .runner import TrainResult, build_task, run_scenario
+from .engine import (DeviceEngine, build_engine, run_cells_vmapped,
+                     run_scenario_device)

@@ -1,0 +1,409 @@
+"""Device-resident round engine: the whole federated round inside lax.scan.
+
+``sim/runner.py`` executes rounds from a Python host loop — availability
+step, selection, cohort gather, and metrics each cross the host↔device
+boundary every round (``float(...)`` syncs, ``np.flatnonzero`` selection,
+numpy batch assembly).  That is the right *reference* semantics, but on
+small paper-scale models the host overhead dominates wall-clock and
+serializes sweep cells.
+
+This module compiles the entire round — availability ``step``, K_t budget
+draw, F3AST/FedAvg selection (r_k EMA update + top-k under the budget
+included), device-side cohort gather from pre-staged client data
+(``data.pipeline.staged_cohort_batch``), and the jitted federated round —
+into one ``lax.scan`` over a *chunk* of rounds.  Metrics stream out
+per-chunk as stacked arrays instead of per-round scalars, so the host
+touches the device once per chunk, not four times per round.
+
+Parity with the host loop is exact by construction: both paths split the
+round key the same way (avail / select / budget / batch) and draw minibatch
+indices from the same ``jax.random.randint`` call, so the same seed yields
+the same availability masks, K_t draws, selection masks, rate trajectories,
+and batches (asserted in ``tests/test_engine.py``).
+
+``run_cells_vmapped`` goes one step further: it vmaps the chunk program
+over a (seed × budget-cap) batch axis, so one compiled executable runs an
+entire sweep column of cells in lockstep — the workload shape of the
+availability-regime grids in the paper's §4 and the related Markovian-
+availability studies (PAPERS.md).
+
+Not supported on the device path (falls back to the host loop via
+``run_scenario(engine="host")``): Power-of-Choice (needs fresh per-client
+host losses) and per-100-round checkpointing (the engine checkpoints at
+chunk boundaries instead).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import NamedTuple, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import save_checkpoint
+from ..core import make_algorithm
+from ..core.fedstep import make_fed_round
+from ..core.selection import cohort_ids_from_mask
+from ..data import CohortSampler
+from ..data.pipeline import staged_cohort_batch
+from ..optim import make_optimizer
+from .scenario import Scenario, get_scenario
+
+__all__ = ["DeviceEngine", "build_engine", "run_scenario_device",
+           "run_cells_vmapped"]
+
+# Algorithms whose select() is a pure function of (state, key, avail, k_t) —
+# everything except PoC, which needs fresh per-client losses from the host.
+DEVICE_ALGORITHMS = ("f3ast", "fixed_f3ast", "fedavg", "fedavg_weighted",
+                     "uniform")
+
+
+class EngineCarry(NamedTuple):
+    """The lax.scan carry: everything that persists across rounds."""
+    key: jax.Array
+    params: object
+    opt_state: object
+    algo_state: object
+    avail_state: object
+
+
+class RoundStream(NamedTuple):
+    """Per-round outputs stacked along the chunk axis by lax.scan.
+
+    Per-round rate trajectories are deliberately not streamed: r(t) is a
+    deterministic EMA of the streamed selection masks, so consumers can
+    reconstruct it exactly, and the final r(T) lives in the carry.
+    """
+    sel_mask: jnp.ndarray      # (C, N) bool
+    k_t: jnp.ndarray           # (C,) int32
+    n_available: jnp.ndarray   # (C,) int32
+    train_loss: jnp.ndarray    # (C,) f32
+    delta_norm: jnp.ndarray    # (C,) f32
+
+
+class DeviceEngine:
+    """One compiled (scenario × algorithm × task) cell.
+
+    ``chunk(carry, ts, k_cap)`` advances ``len(ts)`` rounds in one XLA
+    program; ``init_carry(key)`` builds the round-0 state for a cell seed.
+    ``k_cap`` is a traced scalar upper bound on K_t (pass ``k_max`` for a
+    no-op) — it is the scenario-parameter axis `run_cells_vmapped` sweeps.
+    """
+
+    def __init__(self, *, avail_model, budget, algo, staged, fed_round,
+                 init_params, opt, client_lr, local_steps, local_batch):
+        self.avail_model = avail_model
+        self.budget = budget
+        self.algo = algo
+        self.k_max = budget.k_max
+
+        def round_step(carry, t, k_cap):
+            # Same split order as the host loop in runner.py — parity.
+            key, k_av, k_sel, k_bud, k_batch = jax.random.split(carry.key, 5)
+            avail_state, avail = avail_model.step(k_av, carry.avail_state, t)
+            k_t = jnp.minimum(budget.sample(k_bud, t),
+                              jnp.asarray(k_cap, jnp.int32))
+            sel_mask, w_full, algo_state = algo.select(
+                carry.algo_state, k_sel, avail, k_t)
+            ids, valid = cohort_ids_from_mask(sel_mask, budget.k_max)
+            batch = staged_cohort_batch(staged, k_batch, ids, local_steps,
+                                        local_batch)
+            w = w_full[ids] * valid
+            params, opt_state, m = fed_round(
+                carry.params, carry.opt_state, batch, w,
+                jnp.asarray(client_lr, jnp.float32))
+            out = RoundStream(sel_mask=sel_mask, k_t=k_t,
+                              n_available=avail.sum().astype(jnp.int32),
+                              train_loss=m.loss, delta_norm=m.delta_norm)
+            return EngineCarry(key, params, opt_state, algo_state,
+                               avail_state), out
+
+        def chunk(carry, ts, k_cap):
+            return jax.lax.scan(lambda c, t: round_step(c, t, k_cap),
+                                carry, ts)
+
+        self._chunk = jax.jit(chunk)
+        self._vchunk = jax.jit(jax.vmap(chunk, in_axes=(0, None, 0)))
+
+        def _make_init(r0):
+            def init_carry(key):
+                params = init_params(key)
+                return EngineCarry(key=key, params=params,
+                                   opt_state=opt.init(params),
+                                   algo_state=algo.init(r0=r0),
+                                   avail_state=avail_model.init())
+            return init_carry
+
+        self._make_init = _make_init
+        self.init_carry = _make_init(None)
+
+    def set_r0(self, r0: float) -> None:
+        """Pin the rate-EMA initialization (runner uses the calibrated M/N)."""
+        self.init_carry = self._make_init(r0)
+
+    def chunk(self, carry, ts, k_cap=None):
+        """Advance one chunk of rounds; returns (carry', RoundStream)."""
+        if k_cap is None:
+            k_cap = self.k_max
+        return self._chunk(carry, ts, jnp.asarray(k_cap, jnp.int32))
+
+    def vmapped_chunk(self, carries, ts, k_caps):
+        """Batched chunk over the leading cell axis of ``carries``/``k_caps``."""
+        return self._vchunk(carries, ts, jnp.asarray(k_caps, jnp.int32))
+
+
+def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
+                 seed: int = 0, clients_per_round: Optional[int] = None,
+                 beta: Optional[float] = None, server_opt: str = "sgd",
+                 server_lr: float = 1.0, prox_mu: float = 0.0,
+                 positively_correlated: bool = False,
+                 fed_mode: str = "parallel"):
+    """Build the compiled cell for one (scenario × algorithm).
+
+    Returns ``(engine, ctx)`` where ``ctx`` carries the task pieces the
+    drivers need host-side (eval fns, test batch, rounds default, N).
+    ``seed`` here selects the *data* realization; per-cell model seeds are
+    what ``init_carry`` takes.
+    """
+    from .runner import build_task   # local import: runner ↔ engine
+
+    sc = get_scenario(scenario)
+    if algo_name == "fedadam":
+        algo_name, server_opt = "fedavg", "adam"
+        server_lr = 1e-2 if server_lr == 1.0 else server_lr
+    if algo_name not in DEVICE_ALGORITHMS:
+        raise ValueError(
+            f"algorithm {algo_name!r} is host-only (needs per-round host "
+            f"state); use run_scenario(engine='host')")
+    task, fed, init, loss, acc = build_task(sc.task, seed,
+                                            **dict(sc.task_kwargs))
+    n = fed.n_clients
+    p = fed.p
+    m = clients_per_round or task.clients_per_round
+    beta = beta if beta is not None else task.beta
+
+    avail_model = sc.build_availability(n, p=p)
+    budget = sc.build_budget(default_k=m)
+    algo = make_algorithm(algo_name, n, p, beta=beta,
+                          positively_correlated=positively_correlated)
+    opt = make_optimizer(server_opt, lr=server_lr)
+    fed_round = make_fed_round(loss, opt, mode=fed_mode, prox_mu=prox_mu)
+
+    sampler = CohortSampler(fed, cohort_size=budget.k_max,
+                            local_steps=task.local_steps,
+                            local_batch=task.local_batch, seed=seed)
+    staged = sampler.stage_device()
+
+    engine = DeviceEngine(avail_model=avail_model, budget=budget, algo=algo,
+                          staged=staged, fed_round=fed_round,
+                          init_params=init, opt=opt,
+                          client_lr=task.client_lr,
+                          local_steps=task.local_steps,
+                          local_batch=task.local_batch)
+    engine.set_r0(m / n)
+
+    ctx = dict(scenario=sc, task=task, n_clients=n,
+               rounds_default=sc.rounds or task.rounds,
+               eval_loss=jax.jit(loss), eval_acc=jax.jit(acc),
+               test_batch={k: jnp.asarray(v)
+                           for k, v in fed.test_batch().items()})
+    return engine, ctx
+
+
+def _chunk_spans(rounds: int, chunk_size: int):
+    """Split [0, rounds) into contiguous spans of at most chunk_size."""
+    spans = []
+    t0 = 0
+    while t0 < rounds:
+        t1 = min(t0 + chunk_size, rounds)
+        spans.append((t0, t1))
+        t0 = t1
+    return spans
+
+
+def run_scenario_device(scenario: Union[str, Scenario],
+                        algo_name: str = "f3ast", *,
+                        rounds: Optional[int] = None,
+                        server_opt: str = "sgd", server_lr: float = 1.0,
+                        clients_per_round: Optional[int] = None,
+                        beta: Optional[float] = None, seed: int = 0,
+                        eval_every: int = 10,
+                        chunk_size: Optional[int] = None,
+                        ckpt_dir: Optional[str] = None,
+                        prox_mu: float = 0.0,
+                        positively_correlated: bool = False,
+                        metrics_path: Optional[str] = None,
+                        fed_mode: str = "parallel",
+                        log_fn=print):
+    """Device-resident drop-in for ``runner.run_scenario``.
+
+    Semantics differences vs. the host loop (documented, tested):
+      * evaluation happens at the end of any chunk containing an
+        ``eval_every`` round, plus always after the final round
+        (``chunk_size`` defaults to ``eval_every``, so the cadence matches
+        the host up to a one-round offset: the host evals after rounds
+        0, 10, ...; the engine after rounds 9, 19, ...);
+      * ``chunk_size`` is a performance knob, not a semantic one: params
+        only materialize on the host at chunk boundaries, so it is capped
+        at ``eval_every`` to keep the requested eval cadence intact;
+      * checkpoints (if ``ckpt_dir``) are written at chunk boundaries.
+    Selection masks, rates, and losses match the host loop exactly for the
+    same seed (``tests/test_engine.py``).
+    """
+    engine, ctx = build_engine(scenario, algo_name, seed=seed,
+                               clients_per_round=clients_per_round,
+                               beta=beta, server_opt=server_opt,
+                               server_lr=server_lr, prox_mu=prox_mu,
+                               positively_correlated=positively_correlated,
+                               fed_mode=fed_mode)
+    sc, task = ctx["scenario"], ctx["task"]
+    rounds = rounds or ctx["rounds_default"]
+    chunk_size = max(1, min(chunk_size or eval_every, eval_every, rounds))
+    algo_label = algo_name
+
+    carry = engine.init_carry(jax.random.PRNGKey(seed))
+
+    metrics_file = None
+    if metrics_path:
+        os.makedirs(os.path.dirname(os.path.abspath(metrics_path)),
+                    exist_ok=True)
+        metrics_file = open(metrics_path, "w")
+
+    history = []
+    streams = []
+    t_start = time.time()
+    t_first_chunk = None
+    try:
+        for (t0, t1) in _chunk_spans(rounds, chunk_size):
+            ts = jnp.arange(t0, t1, dtype=jnp.int32)
+            carry, out = engine.chunk(carry, ts)
+            # One host↔device sync per chunk: pull the streamed metrics.
+            out_np = jax.tree.map(np.asarray, out)
+            if t_first_chunk is None:
+                t_first_chunk = time.time()
+            streams.append(out_np)
+
+            # eval_every sets the cadence; the chunk boundary only sets
+            # where within the cadence the eval lands.
+            do_eval = (t1 == rounds
+                       or any(t % eval_every == 0 for t in range(t0, t1)))
+            if do_eval:
+                test_loss = float(ctx["eval_loss"](carry.params,
+                                                   ctx["test_batch"]))
+                test_acc = float(ctx["eval_acc"](carry.params,
+                                                 ctx["test_batch"]))
+                history.append(dict(round=t1 - 1,
+                                    train_loss=float(out_np.train_loss[-1]),
+                                    test_loss=test_loss, test_acc=test_acc,
+                                    n_selected=int(out_np.sel_mask[-1].sum()),
+                                    n_available=int(out_np.n_available[-1])))
+                log_fn(f"[{sc.name}/{algo_label}] round {t1 - 1:4d} "
+                       f"loss={test_loss:.4f} acc={test_acc:.4f} "
+                       f"k_t={int(out_np.k_t[-1])} "
+                       f"sel={history[-1]['n_selected']} "
+                       f"avail={history[-1]['n_available']}")
+            if metrics_file:
+                for i, t in enumerate(range(t0, t1)):
+                    record = dict(scenario=sc.name, algorithm=algo_label,
+                                  round=t, k_t=int(out_np.k_t[i]),
+                                  n_available=int(out_np.n_available[i]),
+                                  n_selected=int(out_np.sel_mask[i].sum()),
+                                  train_loss=float(out_np.train_loss[i]),
+                                  delta_norm=float(out_np.delta_norm[i]))
+                    if do_eval and t == t1 - 1:
+                        record["test_loss"] = test_loss
+                        record["test_acc"] = test_acc
+                    metrics_file.write(json.dumps(record) + "\n")
+                metrics_file.flush()
+            if ckpt_dir:
+                save_checkpoint(ckpt_dir, t1,
+                                {"params": carry.params,
+                                 "rates": carry.algo_state.rates.r})
+    finally:
+        if metrics_file:
+            metrics_file.close()
+
+    from .runner import TrainResult   # local import: runner ↔ engine
+    sel_history = np.concatenate([s.sel_mask for s in streams], axis=0)
+    t_end = time.time()
+    final = dict(history[-1])
+    final["wall_s"] = t_end - t_start
+    # steady-state throughput: exclude the first chunk (XLA compile)
+    steady_rounds = rounds - min(chunk_size, rounds)
+    if steady_rounds > 0 and t_end > t_first_chunk:
+        final["steady_rounds_per_s"] = steady_rounds / (t_end - t_first_chunk)
+    return TrainResult(history=history, final_metrics=final,
+                       rates=np.asarray(carry.algo_state.rates.r),
+                       empirical_rates=sel_history.mean(0),
+                       sel_history=sel_history)
+
+
+def run_cells_vmapped(scenario: Union[str, Scenario],
+                      algo_name: str = "f3ast", *,
+                      seeds: Sequence[int] = (0,),
+                      k_caps: Optional[Sequence[int]] = None,
+                      rounds: Optional[int] = None,
+                      chunk_size: int = 32, data_seed: Optional[int] = None,
+                      **build_kwargs):
+    """Run a batch of cells as ONE compiled vmapped program.
+
+    The batch axis is (seed × budget-cap): cell ``i`` runs with model/PRNG
+    seed ``seeds[i]`` under K_t capped at ``k_caps[i]`` (default: no cap).
+    All cells share one data realization (``data_seed``, default
+    ``seeds[0]``) and one availability/budget/task spec — the sweep column
+    of a (scenario-param × seed) grid.  Returns a dict of stacked per-cell
+    results; wall-clock is one chunk-program execution per chunk span, not
+    per cell.
+    """
+    seeds = list(seeds)
+    n_cells = len(seeds)
+    if k_caps is None:
+        k_caps_arr = None
+    else:
+        assert len(k_caps) == n_cells, (len(k_caps), n_cells)
+        k_caps_arr = jnp.asarray(list(k_caps), jnp.int32)
+
+    engine, ctx = build_engine(scenario, algo_name,
+                               seed=seeds[0] if data_seed is None
+                               else data_seed,
+                               **build_kwargs)
+    if k_caps_arr is None:
+        k_caps_arr = jnp.full((n_cells,), engine.k_max, jnp.int32)
+    rounds = rounds or ctx["rounds_default"]
+
+    carries = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[engine.init_carry(jax.random.PRNGKey(s)) for s in seeds])
+
+    streams = []
+    t_start = time.time()
+    t_first_chunk = None
+    for (t0, t1) in _chunk_spans(rounds, chunk_size):
+        ts = jnp.arange(t0, t1, dtype=jnp.int32)
+        carries, out = engine.vmapped_chunk(carries, ts, k_caps_arr)
+        streams.append(jax.tree.map(np.asarray, out))
+        if t_first_chunk is None:
+            t_first_chunk = time.time()
+    t_end = time.time()
+
+    test_loss = np.asarray(jax.vmap(ctx["eval_loss"], in_axes=(0, None))(
+        carries.params, ctx["test_batch"]))
+    test_acc = np.asarray(jax.vmap(ctx["eval_acc"], in_axes=(0, None))(
+        carries.params, ctx["test_batch"]))
+    sel_history = np.concatenate([s.sel_mask for s in streams], axis=1)
+    train_loss = np.concatenate([s.train_loss for s in streams], axis=1)
+    result = dict(seeds=list(seeds), k_caps=np.asarray(k_caps_arr).tolist(),
+                  rounds=rounds, test_loss=test_loss, test_acc=test_acc,
+                  train_loss=train_loss,             # (cells, T)
+                  sel_history=sel_history,           # (cells, T, N)
+                  rates=np.asarray(carries.algo_state.rates.r),
+                  empirical_rates=sel_history.mean(axis=1),
+                  wall_s=t_end - t_start)
+    steady_rounds = rounds - min(chunk_size, rounds)
+    if steady_rounds > 0 and t_end > t_first_chunk:
+        result["steady_rounds_per_s"] = (
+            steady_rounds * n_cells / (t_end - t_first_chunk))
+    return result

@@ -1,11 +1,23 @@
 """Scenario executor: one (scenario, algorithm) cell end-to-end.
 
-This is the host loop behind both ``repro.launch.train`` and
-``repro.sim.sweep``: availability step → selection (F3AST / FedAvg / PoC /
-fixed-policy) → static-shape cohort batch → jitted federated round → metrics.
-The loop is scenario-agnostic — the availability model's ``init()/step()``
-interface and the budget schedule's static ``k_max`` mean no per-regime
-branches and no shape-driven recompiles (DESIGN.md §7).
+This is the execution front-end behind both ``repro.launch.train`` and
+``repro.sim.sweep``.  Two engines implement the same cell semantics
+(DESIGN.md §7):
+
+* ``engine="device"`` (default) — the device-resident chunked-``lax.scan``
+  engine in :mod:`repro.sim.engine`: availability step, selection, budget,
+  cohort gather, and the federated round all compile into one program;
+  metrics stream out per-chunk.
+* ``engine="host"`` — the reference Python loop below: availability step →
+  selection (F3AST / FedAvg / PoC / fixed-policy) → static-shape cohort
+  batch → jitted federated round → per-round metrics.  Kept as the
+  readable, debuggable ground truth the engine is parity-tested against,
+  and as the only path for host-state algorithms (PoC).
+
+Both paths split the per-round PRNG key identically (avail / select /
+budget / batch) and draw minibatch indices from the same
+``jax.random.randint``, so selection masks, rates, and batches match
+bit-for-bit for the same seed (``tests/test_engine.py``).
 
 Per-round metrics stream to JSONL when ``metrics_path`` is given: one
 self-describing record per round (scenario, algorithm, K_t, availability and
@@ -15,6 +27,7 @@ written so long sweeps are tail-able and crash-safe.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import os
 import time
@@ -42,6 +55,7 @@ class TrainResult:
     final_metrics: dict
     rates: np.ndarray        # learned r(T)
     empirical_rates: np.ndarray
+    sel_history: Optional[np.ndarray] = None   # (T, N) bool selection masks
 
 
 def build_task(task_id: str, seed: int, **task_kwargs):
@@ -58,24 +72,29 @@ def build_task(task_id: str, seed: int, **task_kwargs):
         clients = make_synthetic_federated(n_clients=task.n_clients,
                                            seed=seed, **kw)
         cfg = task.model_cfg
-        init = lambda key: softmax_reg.init_params(cfg, key)
-        loss = lambda p, b: softmax_reg.loss_fn(cfg, p, b)
-        acc = lambda p, b: softmax_reg.accuracy(cfg, p, b)
+        init = functools.partial(softmax_reg.init_params, cfg)
+        loss = functools.partial(softmax_reg.loss_fn, cfg)
+        acc = functools.partial(softmax_reg.accuracy, cfg)
     elif task_id == "shakespeare":
         clients = make_char_lm_federated(n_clients=task.n_clients, seed=seed,
                                          **task_kwargs)
         cfg = task.model_cfg
-        init = lambda key: rnn.init_params(cfg, key)
-        loss = lambda p, b: rnn.loss_fn(cfg, p, b)
-        acc = lambda p, b: rnn.accuracy(cfg, p, b)
+        init = functools.partial(rnn.init_params, cfg)
+        loss = functools.partial(rnn.loss_fn, cfg)
+        acc = functools.partial(rnn.accuracy, cfg)
     elif task_id == "cifar":
         clients = make_vision_federated(n_clients=task.n_clients, seed=seed,
                                         **task_kwargs)
         cfg = task.model_cfg
         _, strides = resnet.init_params(cfg, jax.random.PRNGKey(seed))
-        init = lambda key: resnet.init_params(cfg, key)[0]
+
+        def init(key):
+            return resnet.init_params(cfg, key)[0]
+
+        def acc(p, b):
+            return resnet.accuracy(cfg, p, strides, b)
+
         loss = resnet.make_loss_fn(cfg, strides)
-        acc = lambda p, b: resnet.accuracy(cfg, p, strides, b)
     else:
         raise KeyError(task_id)
     return task, FederatedData(clients), init, loss, acc
@@ -88,13 +107,29 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  eval_every: int = 10, ckpt_dir: Optional[str] = None,
                  prox_mu: float = 0.0, positively_correlated: bool = False,
                  metrics_path: Optional[str] = None,
+                 engine: str = "device", chunk_size: Optional[int] = None,
                  log_fn: Callable = print) -> TrainResult:
     """Run one (scenario × algorithm) cell and return its TrainResult.
 
     ``scenario`` is a registry key or a Scenario object.  Precedence for the
     round count: explicit ``rounds`` > ``scenario.rounds`` > task default.
+
+    ``engine`` selects the execution path: ``"device"`` (default) compiles
+    the whole round loop via :mod:`repro.sim.engine`; ``"host"`` runs the
+    reference Python loop.  Host-only features (PoC's fresh per-client
+    losses) fall back to the host loop automatically.
     """
+    assert engine in ("device", "host"), engine
     sc = get_scenario(scenario)
+    if engine == "device" and algo_name not in ("poc",):
+        from .engine import run_scenario_device   # lazy: engine ↔ runner
+        return run_scenario_device(
+            sc, algo_name, rounds=rounds, server_opt=server_opt,
+            server_lr=server_lr, clients_per_round=clients_per_round,
+            beta=beta, seed=seed, eval_every=eval_every,
+            chunk_size=chunk_size, ckpt_dir=ckpt_dir, prox_mu=prox_mu,
+            positively_correlated=positively_correlated,
+            metrics_path=metrics_path, log_fn=log_fn)
     algo_label = algo_name          # requested name, kept for metrics/logs
     if algo_name == "fedadam":      # FedAdam = FedAvg selection + Adam server
         algo_name, server_opt = "fedavg", "adam"
@@ -147,9 +182,12 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     history = []
     sel_history = np.zeros((rounds, N), bool)
     t_start = time.time()
+    t_first_round = None
     try:
         for t in range(rounds):
-            key, k_av, k_sel, k_bud = jax.random.split(key, 4)
+            # Split order shared with sim/engine.py — keep in lockstep or
+            # the engine parity tests will catch the divergence.
+            key, k_av, k_sel, k_bud, k_batch = jax.random.split(key, 5)
             avail_state, avail = avail_model.step(k_av, avail_state, t)
             k_t = budget.sample(k_bud, t)
             losses_in = (jnp.asarray(fresh_losses(params))
@@ -159,12 +197,15 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
             sel_ids = np.flatnonzero(np.asarray(sel_mask))
             sel_history[t, sel_ids] = True
 
-            batch_np, valid, ids = sampler.cohort_batch(sel_ids)
+            batch_np, valid, ids = sampler.cohort_batch(sel_ids, key=k_batch)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
             w = jnp.asarray(np.asarray(weights_full)[ids] * valid)
             lr_t = jnp.asarray(task.client_lr, jnp.float32)
             params, opt_state, metrics = fed_round(params, opt_state, batch,
                                                    w, lr_t)
+            if t == 0:
+                jax.block_until_ready(metrics.loss)
+                t_first_round = time.time()
 
             record = dict(scenario=sc.name, algorithm=algo_label, round=t,
                           k_t=int(k_t), n_available=int(np.asarray(avail).sum()),
@@ -194,8 +235,13 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
         if metrics_file:
             metrics_file.close()
 
+    t_end = time.time()
     final = dict(history[-1]) if history else {}
-    final["wall_s"] = time.time() - t_start
+    final["wall_s"] = t_end - t_start
+    # steady-state throughput: exclude round 0 (XLA compile of fed_round)
+    if rounds > 1 and t_first_round is not None and t_end > t_first_round:
+        final["steady_rounds_per_s"] = (rounds - 1) / (t_end - t_first_round)
     return TrainResult(history=history, final_metrics=final,
                        rates=np.asarray(algo_state.rates.r),
-                       empirical_rates=sel_history.mean(0))
+                       empirical_rates=sel_history.mean(0),
+                       sel_history=sel_history)

@@ -29,14 +29,15 @@ ALGORITHMS = ("f3ast", "fedavg", "fedadam", "poc", "uniform")
 def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = None,
               *, rounds: Optional[int] = None, out_dir: str = "experiments/sweep",
               seed: int = 0, server_opt: str = "sgd", server_lr: float = 1.0,
-              eval_every: Optional[int] = None,
+              eval_every: Optional[int] = None, engine: str = "device",
               log_fn: Callable = print) -> dict:
     """Run the grid; returns {(scenario, algorithm): final_metrics}.
 
     ``algorithms=None`` uses each scenario's own default grid.  ``rounds``
     overrides every cell (otherwise scenario/task defaults apply) and
     ``eval_every`` defaults to evaluating only first + last round for short
-    sweeps.
+    sweeps.  ``engine`` routes every cell through the device-resident
+    engine (default) or the reference host loop (DESIGN.md §7).
     """
     os.makedirs(out_dir, exist_ok=True)
     results = {}
@@ -50,7 +51,7 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
             res = run_scenario(sc, algo, rounds=rounds, seed=seed,
                                server_opt=server_opt, server_lr=server_lr,
                                eval_every=ev, metrics_path=path,
-                               log_fn=lambda *_: None)
+                               engine=engine, log_fn=lambda *_: None)
             results[(sc.name, algo)] = res.final_metrics
             fm = res.final_metrics
             log_fn(f"sweep,{sc.name},{algo},"
@@ -82,6 +83,9 @@ def main(argv=None) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--server-opt", default="sgd")
     ap.add_argument("--eval-every", type=int, default=None)
+    ap.add_argument("--engine", default="device", choices=["device", "host"],
+                    help="device-resident scan engine (default) or the "
+                         "reference host loop")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -100,7 +104,8 @@ def main(argv=None) -> None:
     server_lr = 1e-2 if args.server_opt in ("adam", "yogi") else 1.0
     run_sweep(scenarios, algorithms, rounds=args.rounds, out_dir=args.out,
               seed=args.seed, server_opt=args.server_opt,
-              server_lr=server_lr, eval_every=args.eval_every)
+              server_lr=server_lr, eval_every=args.eval_every,
+              engine=args.engine)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,5 @@
 """Availability-process statistics (paper §4.1 / §D.4)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import CommBudget, make_availability

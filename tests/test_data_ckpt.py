@@ -1,7 +1,6 @@
 """Data pipeline + checkpointing substrate."""
 import os
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import make_fed_round
-from repro.optim import adam, make_optimizer, sgd, yogi
+from repro.optim import adam, make_optimizer, sgd
 
 
 def _quad_loss(params, batch):

@@ -10,7 +10,7 @@ import pytest
 from repro.sim import (BUDGET_REGISTRY, PROCESS_REGISTRY, SCENARIO_REGISTRY,
                        GilbertElliott, Scenario, TraceDriven, get_scenario,
                        list_scenarios, make_budget, make_process,
-                       register_scenario, run_scenario)
+                       register_scenario)
 from repro.sim.sweep import run_sweep
 
 N = 24
@@ -201,7 +201,7 @@ def test_sweep_smoke_end_to_end(tmp_path):
     for (sc, algo), fm in results.items():
         assert np.isfinite(fm["test_loss"]) and np.isfinite(fm["test_acc"])
         path = os.path.join(out, f"{sc}__{algo}.jsonl")
-        records = [json.loads(l) for l in open(path)]
+        records = [json.loads(line) for line in open(path)]
         assert len(records) == 3
         for t, rec in enumerate(records):
             assert rec["round"] == t

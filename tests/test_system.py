@@ -1,6 +1,4 @@
 """End-to-end behaviour tests for the F3AST federated learning system."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

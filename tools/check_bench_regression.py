@@ -1,0 +1,104 @@
+#!/usr/bin/env python
+"""Fail CI when round-engine throughput regresses against the baseline.
+
+Compares a freshly measured ``BENCH_engine.json`` (see
+``benchmarks/bench_engine.py``) against the committed baseline:
+
+1. Per-engine absolute throughput: each of ``host`` / ``device`` /
+   ``vmapped*`` must reach at least ``(1 - threshold)`` of the baseline
+   rounds/sec (default threshold 0.30, i.e. a >30% regression fails).
+2. Relative speedup: ``speedup_device_over_host`` in the current run must
+   stay above ``--min-speedup``.  This check is machine-independent (both
+   numbers come from the same run), so it stays meaningful even when the CI
+   runner is a different machine class than the baseline's.
+
+Usage:
+    python tools/check_bench_regression.py \
+        --baseline BENCH_engine.json --current BENCH_engine.current.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def engine_keys(result: dict) -> list:
+    keys = []
+    for name, value in result.items():
+        if isinstance(value, dict) and "rounds_per_s" in value:
+            keys.append(name)
+    return keys
+
+
+def check(baseline: dict, current: dict, threshold: float, min_speedup: float) -> list:
+    errors = []
+    for name in engine_keys(baseline):
+        if name not in current:
+            errors.append(f"engine {name!r} missing from current results")
+            continue
+        base_rps = baseline[name]["rounds_per_s"]
+        cur_rps = current[name]["rounds_per_s"]
+        floor = (1.0 - threshold) * base_rps
+        if cur_rps < floor:
+            errors.append(
+                f"{name}: {cur_rps:.1f} rounds/s is a "
+                f"{100.0 * (1.0 - cur_rps / base_rps):.0f}% regression vs the "
+                f"baseline {base_rps:.1f} (floor {floor:.1f})"
+            )
+    speedup = current.get("speedup_device_over_host", 0.0)
+    if speedup < min_speedup:
+        errors.append(
+            f"device engine speedup over host is {speedup:.2f}x, "
+            f"below the required {min_speedup:.2f}x"
+        )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_engine.json")
+    ap.add_argument("--current", required=True)
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.30,
+        help="max tolerated fractional rounds/sec regression (default 0.30)",
+    )
+    ap.add_argument(
+        "--min-speedup",
+        type=float,
+        default=2.0,
+        help="required device-over-host speedup in the current run",
+    )
+    args = ap.parse_args(argv)
+
+    baseline = load(args.baseline)
+    current = load(args.current)
+    errors = check(baseline, current, args.threshold, args.min_speedup)
+    if errors:
+        print(f"check_bench_regression: FAIL ({len(errors)} issue(s))")
+        for e in errors:
+            print("  " + e)
+        return 1
+    for name in engine_keys(current):
+        print(
+            f"check_bench_regression: {name}: "
+            f"{current[name]['rounds_per_s']:.1f} rounds/s "
+            f"(baseline {baseline.get(name, {}).get('rounds_per_s', 0.0):.1f})"
+        )
+    print(
+        f"check_bench_regression: OK (device speedup "
+        f"{current.get('speedup_device_over_host', 0.0):.2f}x)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -40,7 +40,7 @@ def tracked_files(root: str):
     try:
         out = subprocess.run(["git", "ls-files"], cwd=root, check=True,
                              capture_output=True, text=True).stdout
-        return [l for l in out.splitlines() if l]
+        return [line for line in out.splitlines() if line]
     except (subprocess.CalledProcessError, FileNotFoundError):
         found = []
         for dirpath, dirnames, filenames in os.walk(root):
