@@ -1,4 +1,5 @@
-"""Round-engine throughput: host loop vs device-resident vs vmapped cells.
+"""Round-engine throughput: host loop vs device-resident vs vmapped cells,
+plus the client-sharded N-scaling column.
 
 Measures steady-state rounds/sec (first round / first chunk excluded — that
 is where XLA compiles) for the three execution paths of one
@@ -11,26 +12,53 @@ is where XLA compiles) for the three execution paths of one
 * ``vmapped8`` — 8 cells (seeds 0..7) in one vmapped program
                  (``run_cells_vmapped``); rounds/sec counts all cells.
 
-Writes a ``BENCH_engine.json`` consumed by ``tools/check_bench_regression.py``
-in CI (fails the build on a >30% rounds/sec regression vs the committed
-baseline, or if the device engine loses its speedup over the host loop).
+``--nscale`` adds the client-scaling column: a vectorized synthetic task at
+N up to 100k clients, run through the unsharded engine and the
+client-sharded engine (``sim/engine_sharded.py``, all visible devices —
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU).  The
+unsharded cell is attempted and recorded as ``oom`` if the single-device
+path cannot stage/run it.
+
+Writes the JSON consumed by ``tools/check_bench_regression.py`` in CI
+(fails the build on a >30% rounds/sec regression vs the committed baseline
+in ``experiments/bench/BENCH_engine.json``, or if the device engine loses
+its speedup over the host loop, or if the sharded N=100k cell stops
+completing).
 
     PYTHONPATH=src python benchmarks/bench_engine.py --quick
-    PYTHONPATH=src python benchmarks/bench_engine.py --out BENCH_engine.json
+    PYTHONPATH=src python benchmarks/bench_engine.py   # refresh the baseline
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python benchmarks/bench_engine.py --quick \\
+        --nscale-only --out experiments/bench/BENCH_engine_nscale.json
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import platform
 import sys
+import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 sys.path.insert(0, "src")
 
+from repro.core import make_algorithm
+from repro.core.fedstep import make_fed_round
+from repro.data.pipeline import stage_client_arrays
+from repro.data.synthetic import make_synthetic_client_arrays
+from repro.launch.mesh import make_client_mesh
+from repro.models import softmax_reg
+from repro.models.softmax_reg import SoftmaxRegConfig
+from repro.optim import make_optimizer
 from repro.sim import run_cells_vmapped, run_scenario
-from repro.sim.engine import run_scenario_device
+from repro.sim.budgets import make_budget
+from repro.sim.engine import DeviceEngine, run_scenario_device
+from repro.sim.engine_sharded import ShardedEngine
+from repro.sim.processes import make_process
 
 
 def _silent(*args, **kwargs):
@@ -64,6 +92,87 @@ def bench_vmapped(scenario: str, algo: str, rounds: int, cells: int,
                 rounds_per_s=round(res["steady_rounds_per_s"], 2))
 
 
+def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
+                         n_classes: int = 10, samples: int = 64,
+                         k: int = 10, seed: int = 0):
+    """One synthetic N-scaling cell (vectorized data, no per-client loop)."""
+    arrays, counts = make_synthetic_client_arrays(
+        n_clients, dim=dim, n_classes=n_classes, samples_per_client=samples,
+        seed=seed)
+    staged = stage_client_arrays(arrays, counts, mesh=mesh)
+    cfg = SoftmaxRegConfig(dim=dim, n_classes=n_classes)
+    loss = functools.partial(softmax_reg.loss_fn, cfg)
+    opt = make_optimizer("sgd", lr=1.0)
+    common = dict(
+        avail_model=make_process("bernoulli", n_clients, q=0.3),
+        budget=make_budget("constant", k=k),
+        algo=make_algorithm("f3ast", n_clients,
+                            np.full(n_clients, 1.0 / n_clients, np.float32)),
+        init_params=functools.partial(softmax_reg.init_params, cfg),
+        opt=opt, client_lr=0.05, local_steps=5, local_batch=20)
+    if mesh is None:
+        engine = DeviceEngine(
+            staged=staged, fed_round=make_fed_round(loss, opt), **common)
+    else:
+        engine = ShardedEngine(
+            mesh=mesh, axis="clients", staged=staged, n_clients=n_clients,
+            fed_round=make_fed_round(loss, opt, cohort_axis="clients",
+                                     cohort_slots=k), **common)
+    engine.set_r0(k / n_clients)
+    return engine
+
+
+def _time_engine(engine, rounds: int, chunk: int) -> dict:
+    """Steady-state rounds/s of engine.chunk (first chunk = compile, excluded)."""
+    carry = engine.init_carry(jax.random.PRNGKey(0))
+    t0 = 0
+    t_first = None
+    t_start = time.time()
+    while t0 < rounds:
+        t1 = min(t0 + chunk, rounds)
+        carry, out = engine.chunk(carry, jnp.arange(t0, t1, dtype=jnp.int32))
+        jax.block_until_ready(out.train_loss)
+        if t_first is None:
+            t_first = time.time()
+        t0 = t1
+    t_end = time.time()
+    steady = rounds - min(chunk, rounds)
+    rps = steady / (t_end - t_first) if steady and t_end > t_first else 0.0
+    return dict(rounds=rounds, chunk_size=chunk,
+                wall_s=round(t_end - t_start, 4),
+                rounds_per_s=round(rps, 2))
+
+
+def bench_nscale(n_values, rounds: int, chunk: int) -> dict:
+    """Unsharded vs client-sharded engine across client counts N."""
+    mesh = make_client_mesh(axis_name="clients")
+    out = dict(devices=jax.device_count(),
+               task=dict(dim=32, n_classes=10, samples_per_client=64, k=10),
+               cells=[])
+    for n in n_values:
+        cell = dict(n_clients=n)
+        for label, m in (("device", None), ("sharded", mesh)):
+            print(f"  N={n:>7d} {label:>8s} ...", end=" ", flush=True)
+            engine = None
+            try:
+                engine = _build_nscale_engine(n, m)
+                cell[label] = _time_engine(engine, rounds, chunk)
+                print(f"{cell[label]['rounds_per_s']:.1f} rounds/s")
+            except (MemoryError, RuntimeError) as e:   # XLA OOM surfaces as
+                cell[label] = dict(status="oom",       # RuntimeError on CPU
+                                   error=str(e)[:200])
+                print("OOM")
+            del engine   # release staged arrays before the next cell
+        if "rounds_per_s" in cell.get("device", {}) \
+                and "rounds_per_s" in cell.get("sharded", {}) \
+                and cell["device"]["rounds_per_s"] > 0:
+            cell["speedup_sharded_over_device"] = round(
+                cell["sharded"]["rounds_per_s"]
+                / cell["device"]["rounds_per_s"], 2)
+        out["cells"].append(cell)
+    return out
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(
         description="host vs device-resident vs vmapped round-engine bench")
@@ -74,13 +183,25 @@ def main(argv=None) -> dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--cells", type=int, default=8,
                     help="vmapped cell count (seeds 0..cells-1)")
-    ap.add_argument("--out", default="BENCH_engine.json")
+    ap.add_argument("--nscale", action="store_true",
+                    help="also run the client-scaling column (unsharded vs "
+                         "sharded engine up to --n-max clients)")
+    ap.add_argument("--nscale-only", action="store_true",
+                    help="run only the client-scaling column (use with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--n-max", type=int, default=100_000,
+                    help="largest client count in the N-scaling column")
+    ap.add_argument("--out", default="experiments/bench/BENCH_engine.json",
+                    help="output path (the default overwrites the committed "
+                         "CI baseline — pass an explicit path to compare)")
     args = ap.parse_args(argv)
 
     if args.quick:
         host_rounds, dev_rounds, chunk = 80, 240, 40
+        nscale_rounds, nscale_chunk = 24, 8
     else:
         host_rounds, dev_rounds, chunk = 200, 600, 60
+        nscale_rounds, nscale_chunk = 48, 12
 
     result = dict(
         benchmark="engine",
@@ -92,6 +213,18 @@ def main(argv=None) -> dict:
                       python=platform.python_version(),
                       machine=platform.machine()),
     )
+    if args.nscale or args.nscale_only:
+        n_values = [n for n in (1_000, 10_000, 100_000) if n <= args.n_max]
+        print(f"benching N-scaling column (unsharded vs sharded, "
+              f"{jax.device_count()} devices, {nscale_rounds} rounds) ...")
+        result["nscale"] = bench_nscale(n_values, nscale_rounds, nscale_chunk)
+    if args.nscale_only:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+            f.write("\n")
+        print(f"wrote {args.out}")
+        return result
+
     print(f"benching host loop        ({host_rounds} rounds) ...")
     result["host"] = bench_host(args.scenario, args.algo, host_rounds,
                                 args.seed)

@@ -30,7 +30,7 @@ import jax.numpy as jnp
 
 from . import selection as sel
 from .aggregation import fedavg_weights, unbiased_weights, uniform_weights
-from .hfun import R_MIN
+from .hfun import R_MIN, marginal_utility
 from .rates import RateState, init_rates, update_rates
 
 
@@ -94,6 +94,71 @@ class Algorithm:
             w = uniform_weights(mask)
         else:
             raise ValueError(f"unknown algorithm {name!r}")
+
+        new_rates = update_rates(state.rates, mask, self.beta)
+        return mask, w, AlgoState(rates=new_rates)
+
+    # -- client-sharded path (inside shard_map over the clients axis) -------
+
+    def select_sharded(self, state: AlgoState, key: jax.Array,
+                       avail_blk: jnp.ndarray, k_t: jnp.ndarray, *,
+                       axis: str, k_max: int, n_pad: int):
+        """Blockwise :meth:`select` for the mesh-partitioned engine.
+
+        ``state.rates.r`` and ``avail_blk`` are this shard's block of the
+        client dimension padded to ``n_pad`` (= shards × block); the
+        returned (mask, weights, state) are blocks too.  Random tie-break /
+        sampling fields are drawn at the full (N,) shape from the same key
+        and sliced per shard, and the top-k cut is the distributed one, so
+        the assembled global mask is bit-identical to :meth:`select`
+        (asserted in ``tests/test_engine_sharded.py``).  PoC is host-only
+        and not supported here.
+        """
+        n_local = avail_blk.shape[0]
+        i = jax.lax.axis_index(axis)
+        off = i * n_local
+        assert n_pad % n_local == 0 and n_pad >= self.n_clients, \
+            (n_pad, n_local, self.n_clients)
+
+        def blk(full):
+            """Slice this shard's block out of a full (N,) field."""
+            full = jnp.pad(full, (0, n_pad - full.shape[0]))
+            return jax.lax.dynamic_slice_in_dim(full, off, n_local)
+
+        p_blk = blk(self.p)
+        r_blk = state.rates.r
+        name = self.name
+        if name == "f3ast":
+            util = marginal_utility(r_blk, p_blk, self.positively_correlated)
+            jitter = jax.random.uniform(key, (self.n_clients,))
+            util = util * (1.0 + 1e-6 * blk(jitter))
+            mask = sel.sharded_topk_mask(util, avail_blk, k_t, axis, k_max)
+            new_rates = update_rates(state.rates, mask, self.beta)
+            w = unbiased_weights(p_blk, jnp.maximum(new_rates.r, R_MIN), mask)
+            return mask, w, AlgoState(rates=new_rates)
+        elif name == "fixed_f3ast":
+            rt = blk(self.r_target) if self.r_target is not None else r_blk
+            util = marginal_utility(rt, p_blk, self.positively_correlated)
+            mask = sel.sharded_topk_mask(util, avail_blk, k_t, axis, k_max)
+            w = unbiased_weights(p_blk, jnp.maximum(rt, R_MIN), mask)
+        elif name in ("fedavg", "fedavg_weighted"):
+            g = jax.random.gumbel(key, (self.n_clients,))
+            scores = jnp.log(jnp.maximum(p_blk, 1e-12)) + blk(g)
+            mask = sel.sharded_topk_mask(scores, avail_blk, k_t, axis, k_max)
+            if name == "fedavg":
+                v = mask.astype(jnp.float32)
+                w = v / jnp.maximum(jax.lax.psum(v.sum(), axis), 1.0)
+            else:
+                w0 = jnp.where(mask, p_blk, 0.0)
+                w = w0 / jnp.maximum(jax.lax.psum(w0.sum(), axis), 1e-12)
+        elif name == "uniform":
+            scores = blk(jax.random.uniform(key, (self.n_clients,)))
+            mask = sel.sharded_topk_mask(scores, avail_blk, k_t, axis, k_max)
+            v = mask.astype(jnp.float32)
+            w = v / jnp.maximum(jax.lax.psum(v.sum(), axis), 1.0)
+        else:
+            raise ValueError(f"algorithm {name!r} has no sharded select "
+                             f"(host-only state); use engine='host'")
 
         new_rates = update_rates(state.rates, mask, self.beta)
         return mask, w, AlgoState(rates=new_rates)

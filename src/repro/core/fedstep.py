@@ -86,7 +86,8 @@ def _local_sgd(loss_fn: Callable, params, client_batch, lr, remat: bool,
 def make_fed_round(loss_fn: Callable, server_opt: Optimizer, *,
                    mode: str = "parallel", remat: bool = False,
                    param_shardings=None, acc_dtype=jnp.float32,
-                   prox_mu: float = 0.0):
+                   prox_mu: float = 0.0, cohort_axis: str = None,
+                   cohort_slots: int = None):
     """Build the jittable round function.
 
     fed_round(params, opt_state, cohort_batch, weights, client_lr)
@@ -95,8 +96,43 @@ def make_fed_round(loss_fn: Callable, server_opt: Optimizer, *,
     ``param_shardings``: optional pytree of NamedShardings matching params —
     pins the sequential-mode scan carries (local params, grads, delta
     accumulator) to the FSDP layout.
+
+    ``cohort_axis``: mesh axis name for the client-sharded engine.  When
+    set, the returned function runs *inside* ``shard_map``: it takes this
+    shard's slice of the cohort (batch, weights, plus a ``slot_mask`` arg
+    flagging which local slots belong to the real K-slot cohort vs. the
+    shard-count padding), trains it data-parallel, and ``psum``s the
+    weighted delta and metrics across shards.  ``cohort_slots`` is the real
+    cohort size K the loss/grad-norm means are normalized by, matching the
+    single-device ``losses.mean()`` over K slots.
     """
     assert mode in ("parallel", "sequential"), mode
+
+    if cohort_axis is not None:
+        assert mode == "parallel", "sharded cohort execution is parallel-mode"
+        assert cohort_slots is not None, "cohort_axis needs cohort_slots=K"
+
+        def fed_round_sharded(params, opt_state, cohort_batch, weights,
+                              client_lr, slot_mask):
+            deltas, losses, gnorms = jax.vmap(
+                lambda b: _local_sgd(loss_fn, params, b, client_lr, remat,
+                                     prox_mu=prox_mu)
+            )(cohort_batch)
+            delta = jax.lax.psum(weighted_aggregate(deltas, weights),
+                                 cohort_axis)
+            loss = jax.lax.psum((losses * slot_mask).sum(),
+                                cohort_axis) / cohort_slots
+            gnorm = jax.lax.psum((gnorms * slot_mask).sum(),
+                                 cohort_axis) / cohort_slots
+            dnorm = jnp.sqrt(sum(jnp.sum(x * x).astype(jnp.float32)
+                                 for x in jax.tree.leaves(delta)))
+            updates, opt_state = server_opt.update(delta, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, RoundMetrics(loss=loss,
+                                                   delta_norm=dnorm,
+                                                   grad_norm=gnorm)
+
+        return fed_round_sharded
 
     def fed_round(params, opt_state, cohort_batch, weights, client_lr):
         if mode == "parallel":

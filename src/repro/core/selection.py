@@ -87,6 +87,37 @@ def poc_select(key: jax.Array, avail: jnp.ndarray, m: jnp.ndarray,
     return _topk_mask(losses, cand, m)
 
 
+def sharded_topk_mask(scores: jnp.ndarray, avail: jnp.ndarray,
+                      k: jnp.ndarray, axis: str, k_max: int) -> jnp.ndarray:
+    """Distributed :func:`_topk_mask` for use inside ``shard_map``.
+
+    ``scores``/``avail`` are this shard's block of the client dimension.
+    Per-shard top-``min(k_max, n_local)`` candidates are all-gathered and cut
+    globally at ``k_eff = min(k, |avail|)``, sorting by (−score, global id) —
+    the exact tie-break of the single-device ``argsort`` path (stable sort ⇒
+    equal scores resolve to the lower client id; ``lax.top_k`` keeps the
+    lower local index on ties, preserving that order within a shard).  Any
+    globally-selected client is necessarily among its own shard's top-k_max,
+    so the candidate cut loses nothing.  Returns this shard's (n_local,)
+    boolean mask block, bit-identical to ``_topk_mask`` on the full arrays.
+    """
+    n_local = scores.shape[0]
+    i = jax.lax.axis_index(axis)
+    masked = jnp.where(avail, scores, _NEG)
+    kk = min(int(k_max), n_local)
+    vals, loc = jax.lax.top_k(masked, kk)
+    gids = (loc + i * n_local).astype(jnp.int32)
+    all_vals = jax.lax.all_gather(vals, axis, tiled=True)
+    all_gids = jax.lax.all_gather(gids, axis, tiled=True)
+    _, sorted_gids = jax.lax.sort((-all_vals, all_gids), num_keys=2)
+    n_avail = jax.lax.psum(avail.sum().astype(jnp.int32), axis)
+    k_eff = jnp.minimum(k.astype(jnp.int32), n_avail)
+    take = jnp.arange(sorted_gids.shape[0], dtype=jnp.int32) < k_eff
+    sel_gids = jnp.where(take, sorted_gids, -1)
+    local_gids = i * n_local + jnp.arange(n_local, dtype=jnp.int32)
+    return (sel_gids[:, None] == local_gids[None, :]).any(axis=0) & avail
+
+
 def cohort_ids_from_mask(mask: jnp.ndarray, cohort_size: int):
     """Selection mask (N,) bool → padded cohort (ids (K,) i32, valid (K,) bool).
 
@@ -101,4 +132,29 @@ def cohort_ids_from_mask(mask: jnp.ndarray, cohort_size: int):
     ids = ranked[:cohort_size]
     valid = ids < n
     first = jnp.minimum(ranked[0], n - 1)   # mask is never empty in practice
+    return jnp.where(valid, ids, first), valid
+
+
+def sharded_cohort_ids_from_mask(mask: jnp.ndarray, cohort_size: int,
+                                 axis: str, n_total: int):
+    """Distributed :func:`cohort_ids_from_mask` for use inside ``shard_map``.
+
+    ``mask`` is this shard's block (which may cover padded clients — those
+    are never set).  Each shard contributes its lowest-id selected clients
+    (at most ``min(cohort_size, n_local)`` can be selected per shard since
+    |S| ≤ cohort_size globally); the gathered candidates are re-sorted and
+    cut to ``cohort_size``.  ``n_total`` is the *real* client count N — the
+    same sentinel the single-device path uses — so the returned (ids, valid)
+    are bit-identical to ``cohort_ids_from_mask`` on the full (N,) mask.
+    The result is replicated across shards.
+    """
+    n_local = mask.shape[0]
+    i = jax.lax.axis_index(axis)
+    gids = (i * n_local + jnp.arange(n_local, dtype=jnp.int32))
+    ranked = jnp.sort(jnp.where(mask, gids, n_total))
+    kk = min(int(cohort_size), n_local)
+    cand = jnp.sort(jax.lax.all_gather(ranked[:kk], axis, tiled=True))
+    ids = cand[:cohort_size]
+    valid = ids < n_total
+    first = jnp.minimum(cand[0], n_total - 1)
     return jnp.where(valid, ids, first), valid

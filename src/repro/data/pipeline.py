@@ -84,6 +84,42 @@ def staged_cohort_batch(staged: StagedData, key: jax.Array,
             for name, arr in staged.arrays.items()}
 
 
+def stage_client_arrays(arrays: dict, counts: np.ndarray, *, mesh=None,
+                        axis: str = "clients") -> StagedData:
+    """Place pre-stacked per-client arrays ({feature: (N, S, ...)}, counts
+    (N,)) on device as a :class:`StagedData`.
+
+    ``mesh=None`` reproduces the single-device layout.  With a mesh, dim 0
+    (clients) is zero-padded to a multiple of the ``axis`` size and sharded
+    over it; padded clients get sample-count 1 so a bounded ``randint`` over
+    ``counts`` stays well-defined (they are never selected, so the padding
+    rows are never aggregated).  This is the staging path both
+    ``CohortSampler.stage_device`` and the synthetic N-scaling benchmark
+    feed the sharded engine through.
+    """
+    counts = np.asarray(counts, np.int32)
+    if mesh is None:
+        return StagedData(arrays={k: jnp.asarray(v)
+                                  for k, v in arrays.items()},
+                          counts=jnp.asarray(counts))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    n = counts.shape[0]
+    shards = mesh.shape[axis]
+    n_pad = -(-n // shards) * shards
+    pad = n_pad - n
+    placed = {}
+    for name, arr in arrays.items():
+        arr = np.asarray(arr)
+        if pad:
+            arr = np.concatenate(
+                [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
+        placed[name] = jax.device_put(arr, NamedSharding(mesh, P(axis)))
+    counts_pad = np.concatenate([counts, np.ones(pad, np.int32)])
+    return StagedData(arrays=placed,
+                      counts=jax.device_put(counts_pad,
+                                            NamedSharding(mesh, P())))
+
+
 @dataclasses.dataclass
 class CohortSampler:
     """Assembles static-shape cohort batches for the jitted round."""
@@ -96,13 +132,17 @@ class CohortSampler:
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
 
-    def stage_device(self) -> StagedData:
+    def stage_device(self, mesh=None, axis: str = "clients") -> StagedData:
         """Stage every client's train split onto the device (padded stack).
 
         One-time host→device transfer; afterwards `staged_cohort_batch`
         assembles cohort batches entirely on-device.  Cost is N × S × sample
         size — a few MB for the paper tasks (synthetic/char-LM/vision
         stand-ins), which is the workload the device engine targets.
+
+        With ``mesh`` given, the client dimension is padded to a multiple of
+        the ``axis`` mesh size and sharded over it (sample counts stay
+        replicated — they are read for arbitrary cohort ids on every shard).
         """
         clients = self.data.clients
         counts = np.asarray(
@@ -114,8 +154,8 @@ class CohortSampler:
                                leaf.dtype)
             for i, c in enumerate(clients):
                 stacked[i, :counts[i]] = c.train[name]
-            arrays[name] = jnp.asarray(stacked)
-        return StagedData(arrays=arrays, counts=jnp.asarray(counts))
+            arrays[name] = stacked
+        return stage_client_arrays(arrays, counts, mesh=mesh, axis=axis)
 
     def cohort_batch(self, selected: Sequence[int],
                      key: Optional[jax.Array] = None):

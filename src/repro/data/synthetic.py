@@ -67,6 +67,34 @@ def make_synthetic_federated(n_clients=100, dim=60, n_classes=10,
     return clients
 
 
+def make_synthetic_client_arrays(n_clients, dim=32, n_classes=10,
+                                 alpha=1.0, beta=1.0, samples_per_client=64,
+                                 seed=0):
+    """Synthetic(alpha, beta) generated fully vectorized over clients.
+
+    Returns ({"x": (N, S, dim) f32, "y": (N, S) i32}, counts (N,) i32) —
+    the pre-stacked layout ``stage_client_arrays`` ships to the sharded
+    engine.  Same generative family as :func:`make_synthetic_federated`
+    (per-client model W_k, b_k ~ N(u_k, 1), features x ~ N(v_k, Σ)), but
+    with no per-client Python loop, so it scales to the 100k-client regime
+    the N-scaling benchmark exercises (the looped maker takes minutes
+    there; this takes seconds).
+    """
+    rng = np.random.default_rng(seed)
+    n, s = n_clients, samples_per_client
+    u = rng.normal(0.0, alpha, n)
+    b_mean = rng.normal(0.0, beta, n)
+    v = rng.normal(b_mean[:, None], 1.0, (n, dim))
+    w = rng.normal(u[:, None, None], 1.0, (n, dim, n_classes)).astype(np.float32)
+    b = rng.normal(u[:, None], 1.0, (n, n_classes)).astype(np.float32)
+    diag_sqrt = np.sqrt([(j + 1) ** -1.2 for j in range(dim)]).astype(np.float32)
+    x = (v[:, None, :]
+         + rng.normal(0.0, 1.0, (n, s, dim)) * diag_sqrt).astype(np.float32)
+    logits = np.einsum("nsd,ndc->nsc", x, w) + b[:, None, :]
+    y = logits.argmax(-1).astype(np.int32)
+    return {"x": x, "y": y}, np.full(n, s, np.int32)
+
+
 def make_char_lm_federated(n_clients=100, vocab=90, seq_len=80,
                            sentences_per_client=64, seed=0) -> List[SyntheticDataset]:
     """Shakespeare stand-in: role-specific Markov char streams.

@@ -12,6 +12,26 @@ Target hardware: TPU v5e — 256 chips/pod arranged (16, 16) as
 from __future__ import annotations
 
 import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_client_mesh(num_shards: int | None = None, *,
+                     axis_name: str = "clients") -> Mesh:
+    """1-D mesh over the *client* dimension for the sharded round engine.
+
+    ``num_shards`` defaults to every visible device (``None`` or ``<= 0``);
+    an explicit count takes the first ``num_shards`` devices.  Built with
+    ``jax.sharding.Mesh`` directly (not ``jax.make_mesh``) so it works on
+    every jax version the CI matrix pins.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_shards is None or num_shards <= 0 else num_shards
+    if n > len(devs):
+        raise ValueError(f"requested {n} client shards but only "
+                         f"{len(devs)} devices are visible (hint: "
+                         f"XLA_FLAGS=--xla_force_host_platform_device_count={n})")
+    return Mesh(np.asarray(devs[:n]), (axis_name,))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

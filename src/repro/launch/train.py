@@ -49,7 +49,8 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                   ckpt_dir: Optional[str] = None, prox_mu: float = 0.0,
                   log_fn: Callable = print, positively_correlated: bool = False,
                   metrics_path: Optional[str] = None,
-                  engine: str = "device") -> TrainResult:
+                  engine: str = "device", mesh=None,
+                  clients_axis: str = "clients") -> TrainResult:
     """Availability-string front-end: wraps the arguments into an ad-hoc
     :class:`Scenario` and runs it through :func:`repro.sim.runner.run_scenario`.
     """
@@ -63,6 +64,7 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                         ckpt_dir=ckpt_dir, prox_mu=prox_mu,
                         positively_correlated=positively_correlated,
                         metrics_path=metrics_path, engine=engine,
+                        mesh=mesh, clients_axis=clients_axis,
                         log_fn=log_fn)
 
 
@@ -131,6 +133,13 @@ def main():
     ap.add_argument("--engine", default="device", choices=["device", "host"],
                     help="device-resident scan engine (default) or the "
                          "reference host loop (DESIGN.md §7.1)")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard the client dimension over this many devices "
+                         "(0 = all visible devices; default: unsharded; "
+                         "DESIGN.md §7.2)")
+    ap.add_argument("--clients-axis", default="clients",
+                    help="mesh axis name for the client shard (default "
+                         "'clients')")
     args = ap.parse_args()
 
     if args.arch:
@@ -144,6 +153,7 @@ def main():
                            clients_per_round=args.clients_per_round,
                            seed=args.seed, ckpt_dir=args.ckpt_dir,
                            prox_mu=args.prox_mu, engine=args.engine,
+                           mesh=args.mesh, clients_axis=args.clients_axis,
                            metrics_path=args.metrics_jsonl)
     else:
         res = run_federated(task_id=args.task or "synthetic11",
@@ -153,6 +163,7 @@ def main():
                             clients_per_round=args.clients_per_round,
                             seed=args.seed, ckpt_dir=args.ckpt_dir,
                             prox_mu=args.prox_mu, engine=args.engine,
+                            mesh=args.mesh, clients_axis=args.clients_axis,
                             metrics_path=args.metrics_jsonl)
     print(json.dumps(res.final_metrics, indent=1))
 

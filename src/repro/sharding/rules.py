@@ -195,3 +195,42 @@ def decode_state_shardings(state, mesh: Mesh, *, data_axes, model_axis="model"):
 def to_named_shardings(spec_tree, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Client-axis rules (sharded round engine, DESIGN.md §7.2)
+# ---------------------------------------------------------------------------
+
+def pad_client_dim(x, n_pad: int):
+    """Zero-pad dim 0 of ``x`` from N up to ``n_pad`` (no-op when equal).
+
+    The sharded engine pads the client dimension to a multiple of the mesh
+    size; padded clients are never available, never selected, and carry
+    sample-count 1, so the padding is semantically inert.
+    """
+    import jax.numpy as jnp
+    x = jnp.asarray(x)
+    if x.shape[0] == n_pad:
+        return x
+    assert x.shape[0] < n_pad, (x.shape, n_pad)
+    return jnp.pad(x, [(0, n_pad - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
+
+
+def client_spec(leaf, n_clients: int, axis: str = "clients") -> P:
+    """P(axis) for leaves whose dim 0 is the (padded) client dimension,
+    P() (replicated) for everything else — scalars, cluster-level state."""
+    shape = getattr(leaf, "shape", ())
+    if len(shape) >= 1 and shape[0] == n_clients:
+        return P(axis)
+    return P()
+
+
+def client_specs(tree, n_clients: int, axis: str = "clients"):
+    """Pytree of PartitionSpecs: client-dim leaves sharded, rest replicated."""
+    return jax.tree.map(lambda x: client_spec(x, n_clients, axis), tree)
+
+
+def client_shardings(tree, mesh: Mesh, n_clients: int,
+                     axis: str = "clients"):
+    """Pytree of NamedShardings matching :func:`client_specs`."""
+    return to_named_shardings(client_specs(tree, n_clients, axis), mesh)

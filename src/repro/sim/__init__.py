@@ -28,3 +28,4 @@ from .scenario import (SCENARIO_REGISTRY, Scenario, get_scenario,
 from .runner import TrainResult, build_task, run_scenario
 from .engine import (DeviceEngine, build_engine, run_cells_vmapped,
                      run_scenario_device)
+from .engine_sharded import ShardedEngine, resolve_client_mesh

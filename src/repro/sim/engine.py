@@ -99,6 +99,7 @@ class DeviceEngine:
         self.budget = budget
         self.algo = algo
         self.k_max = budget.k_max
+        self.n_clients = int(staged.counts.shape[0])
 
         def round_step(carry, t, k_cap):
             # Same split order as the host loop in runner.py — parity.
@@ -160,16 +161,25 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  beta: Optional[float] = None, server_opt: str = "sgd",
                  server_lr: float = 1.0, prox_mu: float = 0.0,
                  positively_correlated: bool = False,
-                 fed_mode: str = "parallel"):
+                 fed_mode: str = "parallel",
+                 mesh=None, clients_axis: str = "clients"):
     """Build the compiled cell for one (scenario × algorithm).
 
     Returns ``(engine, ctx)`` where ``ctx`` carries the task pieces the
     drivers need host-side (eval fns, test batch, rounds default, N).
     ``seed`` here selects the *data* realization; per-cell model seeds are
     what ``init_carry`` takes.
+
+    ``mesh`` (a Mesh, a shard count, or ``<= 0`` for every device) selects
+    the client-sharded engine (:mod:`repro.sim.engine_sharded`): the N
+    dimension of availability state, rates, selection, and staged data is
+    partitioned over the ``clients_axis`` mesh axis.  Same seed ⇒ same
+    selection masks / rates / losses as the unsharded engine.
     """
     from .runner import build_task   # local import: runner ↔ engine
+    from .engine_sharded import ShardedEngine, resolve_client_mesh
 
+    mesh = resolve_client_mesh(mesh, clients_axis)
     sc = get_scenario(scenario)
     if algo_name == "fedadam":
         algo_name, server_opt = "fedavg", "adam"
@@ -190,19 +200,31 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     algo = make_algorithm(algo_name, n, p, beta=beta,
                           positively_correlated=positively_correlated)
     opt = make_optimizer(server_opt, lr=server_lr)
-    fed_round = make_fed_round(loss, opt, mode=fed_mode, prox_mu=prox_mu)
 
     sampler = CohortSampler(fed, cohort_size=budget.k_max,
                             local_steps=task.local_steps,
                             local_batch=task.local_batch, seed=seed)
-    staged = sampler.stage_device()
-
-    engine = DeviceEngine(avail_model=avail_model, budget=budget, algo=algo,
-                          staged=staged, fed_round=fed_round,
-                          init_params=init, opt=opt,
-                          client_lr=task.client_lr,
-                          local_steps=task.local_steps,
-                          local_batch=task.local_batch)
+    common = dict(avail_model=avail_model, budget=budget, algo=algo,
+                  init_params=init, opt=opt, client_lr=task.client_lr,
+                  local_steps=task.local_steps,
+                  local_batch=task.local_batch)
+    if mesh is not None:
+        if fed_mode != "parallel":
+            raise ValueError("the client-sharded engine runs the cohort in "
+                             "parallel mode only (the mesh axis carries the "
+                             f"cohort split); got fed_mode={fed_mode!r}")
+        fed_round = make_fed_round(loss, opt, mode="parallel",
+                                   prox_mu=prox_mu,
+                                   cohort_axis=clients_axis,
+                                   cohort_slots=budget.k_max)
+        engine = ShardedEngine(mesh=mesh, axis=clients_axis,
+                               staged=sampler.stage_device(
+                                   mesh=mesh, axis=clients_axis),
+                               fed_round=fed_round, n_clients=n, **common)
+    else:
+        fed_round = make_fed_round(loss, opt, mode=fed_mode, prox_mu=prox_mu)
+        engine = DeviceEngine(staged=sampler.stage_device(),
+                              fed_round=fed_round, **common)
     engine.set_r0(m / n)
 
     ctx = dict(scenario=sc, task=task, n_clients=n,
@@ -237,8 +259,12 @@ def run_scenario_device(scenario: Union[str, Scenario],
                         positively_correlated: bool = False,
                         metrics_path: Optional[str] = None,
                         fed_mode: str = "parallel",
+                        mesh=None, clients_axis: str = "clients",
                         log_fn=print):
     """Device-resident drop-in for ``runner.run_scenario``.
+
+    ``mesh`` routes through the client-sharded engine (see
+    :func:`build_engine`); results are identical for the same seed.
 
     Semantics differences vs. the host loop (documented, tested):
       * evaluation happens at the end of any chunk containing an
@@ -258,7 +284,10 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                beta=beta, server_opt=server_opt,
                                server_lr=server_lr, prox_mu=prox_mu,
                                positively_correlated=positively_correlated,
-                               fed_mode=fed_mode)
+                               fed_mode=fed_mode, mesh=mesh,
+                               clients_axis=clients_axis)
+    engine_label = "sharded" if mesh is not None else "device"
+    n_real = engine.n_clients
     sc, task = ctx["scenario"], ctx["task"]
     rounds = rounds or ctx["rounds_default"]
     chunk_size = max(1, min(chunk_size or eval_every, eval_every, rounds))
@@ -321,22 +350,25 @@ def run_scenario_device(scenario: Union[str, Scenario],
             if ckpt_dir:
                 save_checkpoint(ckpt_dir, t1,
                                 {"params": carry.params,
-                                 "rates": carry.algo_state.rates.r})
+                                 "rates": np.asarray(
+                                     carry.algo_state.rates.r)[:n_real]})
     finally:
         if metrics_file:
             metrics_file.close()
 
     from .runner import TrainResult   # local import: runner ↔ engine
-    sel_history = np.concatenate([s.sel_mask for s in streams], axis=0)
+    sel_history = np.concatenate([s.sel_mask for s in streams],
+                                 axis=0)[:, :n_real]
     t_end = time.time()
     final = dict(history[-1])
+    final["engine"] = engine_label
     final["wall_s"] = t_end - t_start
     # steady-state throughput: exclude the first chunk (XLA compile)
     steady_rounds = rounds - min(chunk_size, rounds)
     if steady_rounds > 0 and t_end > t_first_chunk:
         final["steady_rounds_per_s"] = steady_rounds / (t_end - t_first_chunk)
     return TrainResult(history=history, final_metrics=final,
-                       rates=np.asarray(carry.algo_state.rates.r),
+                       rates=np.asarray(carry.algo_state.rates.r)[:n_real],
                        empirical_rates=sel_history.mean(0),
                        sel_history=sel_history)
 

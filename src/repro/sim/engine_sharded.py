@@ -1,0 +1,228 @@
+"""Client-sharded round engine: the client dimension N partitioned on a mesh.
+
+The device engine in :mod:`repro.sim.engine` keeps every (N,)-shaped object
+— availability state, r_k rates, selection scores, the staged (N, S, ...)
+client data — on ONE device, capping N at what a single HBM/host can hold.
+This module partitions that client dimension over a 1-D ``("clients",)``
+mesh (``launch.mesh.make_client_mesh``) and runs the whole chunked round
+loop inside ``shard_map``:
+
+* **state** — availability-process state, the r_k rate EMA, and the staged
+  client arrays live sharded over the ``clients`` axis (padded to a multiple
+  of the mesh size; padded clients are never available and never selected);
+* **selection** — per-shard scores feed the distributed top-k in
+  :func:`repro.core.selection.sharded_topk_mask` (per-shard top-k_max →
+  ``all_gather`` → global K_t cut with the single-device tie-break);
+* **cohort** — each shard contributes the staged rows it owns for the
+  selected cohort (masked gather + ``psum``), then the cohort-slot axis is
+  itself laid over the mesh so local SGD for the cohort runs data-parallel
+  (``make_fed_round(cohort_axis=...)`` psums the weighted delta).
+
+Parity is exact by construction and asserted in
+``tests/test_engine_sharded.py``: per-round PRNG keys are replicated and
+split in the same order as the single-device engine and the host loop, and
+every random field (availability draws, selection tie-breaks / Gumbel
+scores, minibatch indices) is drawn at the full (N,) shape from the same
+key — each shard then slices its own block — so the same seed yields
+bit-identical availability masks, selection masks, K_t draws, and r_k
+trajectories, and losses matching to float tolerance (the only divergence
+is the ``psum`` reduction order in the delta aggregation).
+
+O(N) elementwise fields being recomputed replicated is deliberate: they are
+a few hundred KB at N = 100k, while the objects that actually scale with N
+— staged client data, rates, availability state, and the top-k sort — are
+sharded or reduced to per-shard candidates.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.algorithms import AlgoState
+from ..core.rates import RateState
+from ..core.selection import sharded_cohort_ids_from_mask
+from ..sharding.rules import pad_client_dim, to_named_shardings
+from .engine import EngineCarry, RoundStream
+
+__all__ = ["ShardedEngine", "resolve_client_mesh"]
+
+
+def resolve_client_mesh(mesh, axis: str = "clients") -> Mesh:
+    """Accept a Mesh, a shard count (``<= 0`` → all devices), or None."""
+    if mesh is None or isinstance(mesh, Mesh):
+        if isinstance(mesh, Mesh) and axis not in mesh.axis_names:
+            raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
+        return mesh
+    from ..launch.mesh import make_client_mesh
+    return make_client_mesh(int(mesh), axis_name=axis)
+
+
+class ShardedEngine:
+    """Drop-in for :class:`repro.sim.engine.DeviceEngine` on a client mesh.
+
+    Same driver surface (``init_carry`` / ``set_r0`` / ``chunk`` / ``k_max``
+    / ``n_clients``); ``chunk`` compiles one ``shard_map``-wrapped
+    ``lax.scan`` over the round chunk.  ``staged`` must come from
+    ``CohortSampler.stage_device(mesh=...)`` / ``stage_client_arrays`` so
+    its client dimension is already padded and sharded.
+    """
+
+    def __init__(self, *, mesh: Mesh, axis: str = "clients", avail_model,
+                 budget, algo, staged, fed_round, init_params, opt,
+                 client_lr, local_steps, local_batch, n_clients: int):
+        self.mesh, self.axis = mesh, axis
+        self.n_clients = int(n_clients)
+        self.k_max = budget.k_max
+        self._staged = staged
+        n_shards = mesh.shape[axis]
+        n_pad = int(staged.counts.shape[0])
+        assert n_pad % n_shards == 0 and n_pad >= n_clients, \
+            (n_pad, n_shards, n_clients)
+        nl = n_pad // n_shards
+        k = budget.k_max
+        k_pad = -(-k // n_shards) * n_shards
+        kb = k_pad // n_shards
+        n = self.n_clients
+
+        # which availability-state leaves carry the client dimension
+        avail0 = avail_model.init()
+        flags = jax.tree.map(
+            lambda leaf: getattr(leaf, "ndim", 0) >= 1
+            and leaf.shape[0] == n, avail0)
+        self._avail_flags = flags
+
+        def gather_state(state_blk):
+            return jax.tree.map(
+                lambda leaf, f: jax.lax.all_gather(leaf, axis, tiled=True)[:n]
+                if f else leaf, state_blk, flags)
+
+        def scatter_state(state_full, off):
+            return jax.tree.map(
+                lambda leaf, f: jax.lax.dynamic_slice_in_dim(
+                    pad_client_dim(leaf, n_pad), off, nl) if f else leaf,
+                state_full, flags)
+
+        slot_mask = (jnp.arange(k_pad) < k).astype(jnp.float32)
+        e, b = local_steps, local_batch
+
+        def round_step(carry, t, k_cap, arrays, counts):
+            # Same split order as the host loop / device engine — parity.
+            key, k_av, k_sel, k_bud, k_batch = jax.random.split(carry.key, 5)
+            i = jax.lax.axis_index(axis)
+            off = i * nl
+
+            # availability: full-width replicated step over sharded state
+            full_state = gather_state(carry.avail_state)
+            new_full, avail_full = avail_model.step(k_av, full_state, t)
+            avail_state = scatter_state(new_full, off)
+            avail_blk = jax.lax.dynamic_slice_in_dim(
+                pad_client_dim(avail_full, n_pad), off, nl)
+
+            k_t = jnp.minimum(budget.sample(k_bud, t),
+                              jnp.asarray(k_cap, jnp.int32))
+            mask_blk, w_blk, algo_state = algo.select_sharded(
+                carry.algo_state, k_sel, avail_blk, k_t, axis=axis, k_max=k,
+                n_pad=n_pad)
+
+            ids, valid = sharded_cohort_ids_from_mask(mask_blk, k, axis, n)
+            if k_pad > k:           # shard-count padding: zero-weight repeats
+                ids_p = jnp.concatenate(
+                    [ids, jnp.broadcast_to(ids[0], (k_pad - k,))])
+                valid_p = jnp.concatenate(
+                    [valid, jnp.zeros((k_pad - k,), bool)])
+            else:
+                ids_p, valid_p = ids, valid
+
+            # cohort weights: each slot's value lives on its owner shard
+            in_range = (ids_p >= off) & (ids_p < off + nl)
+            loc = jnp.where(in_range, ids_p - off, 0)
+            w_sel = jax.lax.psum(jnp.where(in_range, w_blk[loc], 0.0),
+                                 axis) * valid_p
+
+            # minibatch indices: the same (K, E, B) draw as the unsharded
+            # engine; padded slots reuse index 0 with zero weight
+            idx = jax.random.randint(k_batch, (k, e, b), 0,
+                                     counts[ids][:, None, None])
+            if k_pad > k:
+                idx = jnp.concatenate(
+                    [idx, jnp.zeros((k_pad - k, e, b), idx.dtype)])
+
+            # sharded cohort gather: owner shards contribute, psum assembles
+            batch = {}
+            for name, arr in arrays.items():
+                rows = arr[loc[:, None, None], idx]
+                keep = in_range.reshape((k_pad,) + (1,) * (rows.ndim - 1))
+                batch[name] = jax.lax.psum(jnp.where(keep, rows, 0), axis)
+
+            # cohort-slot axis onto the mesh: each shard trains its slice
+            lb = {name: jax.lax.dynamic_slice_in_dim(v, i * kb, kb)
+                  for name, v in batch.items()}
+            lw = jax.lax.dynamic_slice_in_dim(w_sel, i * kb, kb)
+            lm = jax.lax.dynamic_slice_in_dim(slot_mask, i * kb, kb)
+            params, opt_state, m = fed_round(
+                carry.params, carry.opt_state, lb, lw,
+                jnp.asarray(client_lr, jnp.float32), lm)
+
+            out = RoundStream(sel_mask=mask_blk, k_t=k_t,
+                              n_available=avail_full.sum().astype(jnp.int32),
+                              train_loss=m.loss, delta_norm=m.delta_norm)
+            return EngineCarry(key, params, opt_state, algo_state,
+                               avail_state), out
+
+        def chunk_body(carry, ts, k_cap, arrays, counts):
+            return jax.lax.scan(
+                lambda c, t: round_step(c, t, k_cap, arrays, counts),
+                carry, ts)
+
+        # spec trees (structure known from shape-only evaluation)
+        params_s = jax.eval_shape(init_params, jax.random.PRNGKey(0))
+        opt_s = jax.eval_shape(opt.init, params_s)
+        carry_specs = EngineCarry(
+            key=P(),
+            params=jax.tree.map(lambda _: P(), params_s),
+            opt_state=jax.tree.map(lambda _: P(), opt_s),
+            algo_state=AlgoState(rates=RateState(r=P(axis), t=P())),
+            avail_state=jax.tree.map(lambda f: P(axis) if f else P(), flags),
+        )
+        stream_specs = RoundStream(sel_mask=P(None, axis), k_t=P(),
+                                   n_available=P(), train_loss=P(),
+                                   delta_norm=P())
+        staged_specs = jax.tree.map(lambda _: P(axis), staged.arrays)
+        self._carry_shardings = to_named_shardings(carry_specs, mesh)
+        self._chunk = jax.jit(shard_map(
+            chunk_body, mesh=mesh,
+            in_specs=(carry_specs, P(), P(), staged_specs, P()),
+            out_specs=(carry_specs, stream_specs), check_rep=False))
+
+        def _make_init(r0):
+            def init_carry(key):
+                params = init_params(key)
+                a0 = algo.init(r0=r0)
+                carry = EngineCarry(
+                    key=key, params=params, opt_state=opt.init(params),
+                    algo_state=AlgoState(rates=RateState(
+                        r=pad_client_dim(a0.rates.r, n_pad), t=a0.rates.t)),
+                    avail_state=jax.tree.map(
+                        lambda leaf, f: pad_client_dim(leaf, n_pad)
+                        if f else jnp.asarray(leaf),
+                        avail_model.init(), flags))
+                return jax.device_put(carry, self._carry_shardings)
+            return init_carry
+
+        self._make_init = _make_init
+        self.init_carry = _make_init(None)
+
+    def set_r0(self, r0: float) -> None:
+        """Pin the rate-EMA initialization (runner uses the calibrated M/N)."""
+        self.init_carry = self._make_init(r0)
+
+    def chunk(self, carry, ts, k_cap: Optional[int] = None):
+        """Advance one chunk of rounds; returns (carry', RoundStream)."""
+        if k_cap is None:
+            k_cap = self.k_max
+        return self._chunk(carry, ts, jnp.asarray(k_cap, jnp.int32),
+                           self._staged.arrays, self._staged.counts)

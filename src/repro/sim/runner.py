@@ -31,6 +31,7 @@ import functools
 import json
 import os
 import time
+import warnings
 from typing import Callable, Optional, Union
 
 import jax
@@ -108,6 +109,7 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  prox_mu: float = 0.0, positively_correlated: bool = False,
                  metrics_path: Optional[str] = None,
                  engine: str = "device", chunk_size: Optional[int] = None,
+                 mesh=None, clients_axis: str = "clients",
                  log_fn: Callable = print) -> TrainResult:
     """Run one (scenario × algorithm) cell and return its TrainResult.
 
@@ -116,12 +118,29 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
 
     ``engine`` selects the execution path: ``"device"`` (default) compiles
     the whole round loop via :mod:`repro.sim.engine`; ``"host"`` runs the
-    reference Python loop.  Host-only features (PoC's fresh per-client
-    losses) fall back to the host loop automatically.
+    reference Python loop.  ``mesh`` (a Mesh or a shard count; ``<= 0`` =
+    every device) additionally partitions the client dimension over a
+    ``clients_axis`` mesh axis (:mod:`repro.sim.engine_sharded`).  Host-only
+    features (PoC's fresh per-client losses) fall back to the host loop with
+    an explicit warning; the engine that actually ran is reported in
+    ``final_metrics["engine"]``.
     """
     assert engine in ("device", "host"), engine
+    if engine == "host" and mesh is not None:
+        raise ValueError("mesh= shards the device engine's client dimension; "
+                         "it cannot apply to engine='host' (drop mesh or use "
+                         "engine='device')")
     sc = get_scenario(scenario)
-    if engine == "device" and algo_name not in ("poc",):
+    fallback_reason = None
+    if engine == "device" and algo_name == "poc":
+        fallback_reason = ("Power-of-Choice needs fresh per-client losses "
+                           "computed on the host each round")
+        warnings.warn(
+            f"algorithm 'poc' is not supported by the "
+            f"{'sharded' if mesh is not None else 'device'} engine "
+            f"({fallback_reason}); falling back to engine='host'",
+            stacklevel=2)
+    if engine == "device" and fallback_reason is None:
         from .engine import run_scenario_device   # lazy: engine ↔ runner
         return run_scenario_device(
             sc, algo_name, rounds=rounds, server_opt=server_opt,
@@ -129,7 +148,8 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
             beta=beta, seed=seed, eval_every=eval_every,
             chunk_size=chunk_size, ckpt_dir=ckpt_dir, prox_mu=prox_mu,
             positively_correlated=positively_correlated,
-            metrics_path=metrics_path, log_fn=log_fn)
+            metrics_path=metrics_path, mesh=mesh, clients_axis=clients_axis,
+            log_fn=log_fn)
     algo_label = algo_name          # requested name, kept for metrics/logs
     if algo_name == "fedadam":      # FedAdam = FedAvg selection + Adam server
         algo_name, server_opt = "fedavg", "adam"
@@ -237,6 +257,9 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
 
     t_end = time.time()
     final = dict(history[-1]) if history else {}
+    final["engine"] = "host"
+    if fallback_reason is not None:
+        final["engine_fallback"] = fallback_reason
     final["wall_s"] = t_end - t_start
     # steady-state throughput: exclude round 0 (XLA compile of fed_round)
     if rounds > 1 and t_first_round is not None and t_end > t_first_round:

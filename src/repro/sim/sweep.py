@@ -30,6 +30,7 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
               *, rounds: Optional[int] = None, out_dir: str = "experiments/sweep",
               seed: int = 0, server_opt: str = "sgd", server_lr: float = 1.0,
               eval_every: Optional[int] = None, engine: str = "device",
+              mesh=None, clients_axis: str = "clients",
               log_fn: Callable = print) -> dict:
     """Run the grid; returns {(scenario, algorithm): final_metrics}.
 
@@ -37,7 +38,9 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
     overrides every cell (otherwise scenario/task defaults apply) and
     ``eval_every`` defaults to evaluating only first + last round for short
     sweeps.  ``engine`` routes every cell through the device-resident
-    engine (default) or the reference host loop (DESIGN.md §7).
+    engine (default) or the reference host loop (DESIGN.md §7); ``mesh``
+    shards the client dimension of every cell over that many devices
+    (DESIGN.md §7.2).
     """
     os.makedirs(out_dir, exist_ok=True)
     results = {}
@@ -51,7 +54,9 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
             res = run_scenario(sc, algo, rounds=rounds, seed=seed,
                                server_opt=server_opt, server_lr=server_lr,
                                eval_every=ev, metrics_path=path,
-                               engine=engine, log_fn=lambda *_: None)
+                               engine=engine, mesh=mesh,
+                               clients_axis=clients_axis,
+                               log_fn=lambda *_: None)
             results[(sc.name, algo)] = res.final_metrics
             fm = res.final_metrics
             log_fn(f"sweep,{sc.name},{algo},"
@@ -86,6 +91,12 @@ def main(argv=None) -> None:
     ap.add_argument("--engine", default="device", choices=["device", "host"],
                     help="device-resident scan engine (default) or the "
                          "reference host loop")
+    ap.add_argument("--mesh", type=int, default=None,
+                    help="shard the client dimension over this many devices "
+                         "(0 = all visible devices; default: unsharded)")
+    ap.add_argument("--clients-axis", default="clients",
+                    help="mesh axis name for the client shard (default "
+                         "'clients')")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -105,7 +116,8 @@ def main(argv=None) -> None:
     run_sweep(scenarios, algorithms, rounds=args.rounds, out_dir=args.out,
               seed=args.seed, server_opt=args.server_opt,
               server_lr=server_lr, eval_every=args.eval_every,
-              engine=args.engine)
+              engine=args.engine, mesh=args.mesh,
+              clients_axis=args.clients_axis)
 
 
 if __name__ == "__main__":

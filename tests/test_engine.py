@@ -87,9 +87,12 @@ def test_engine_parallel_equals_sequential_fed_mode():
 
 def test_host_only_algorithms_fall_back_to_host_loop():
     # PoC needs fresh per-client host losses; run_scenario must route it to
-    # the host loop even with the default engine="device".
-    res = run_scenario("scarce", "poc", rounds=3, seed=0, eval_every=1,
-                       log_fn=_silent)
+    # the host loop even with the default engine="device" — with an explicit
+    # warning, and the engine that actually ran surfaced in the metrics.
+    with pytest.warns(UserWarning, match="poc"):
+        res = run_scenario("scarce", "poc", rounds=3, seed=0, eval_every=1,
+                           log_fn=_silent)
+    assert res.final_metrics["engine"] == "host"
     assert np.isfinite(res.final_metrics["test_loss"])
     assert res.sel_history.shape[0] == 3
 

@@ -1,0 +1,244 @@
+"""Client-sharded engine ⇔ single-device engine ⇔ host-loop parity.
+
+The sharded engine (``sim/engine_sharded.py``) partitions the client
+dimension over a ``("clients",)`` mesh.  Parity is required to be *exact*
+for everything the selection dynamics depend on: for the same seed the
+selection masks and r_k trajectories must be bit-identical across the three
+engines, and losses must agree to float tolerance (the psum reduction order
+in the delta aggregation is the only divergence).
+
+Run under multiple devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI multi-device
+job does); on a single device the mesh degenerates to one shard but
+exercises the same shard_map program.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core.selection import (_topk_mask, cohort_ids_from_mask,
+                                  sharded_cohort_ids_from_mask,
+                                  sharded_topk_mask)
+from repro.launch.mesh import make_client_mesh
+from repro.sim import run_scenario
+
+ROUNDS = 12
+
+
+def _silent(*args, **kwargs):
+    pass
+
+
+def _run(algo, scenario, engine, mesh=None, rounds=ROUNDS, seed=0, **kw):
+    return run_scenario(scenario, algo, rounds=rounds, seed=seed,
+                        eval_every=rounds, engine=engine, mesh=mesh,
+                        log_fn=_silent, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: sharded ⇔ device ⇔ host
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario,algo", [
+    ("scarce", "f3ast"),
+    ("scarce", "fedavg"),
+    ("stepk", "f3ast"),            # time-varying K_t budget
+    ("gilbert_elliott", "f3ast"),  # stateful (N,)-shaped availability state
+    ("markov", "f3ast"),           # cluster-level (non-client-dim) state
+])
+def test_sharded_engine_matches_device_and_host(scenario, algo):
+    host = _run(algo, scenario, "host")
+    dev = _run(algo, scenario, "device")
+    sh = _run(algo, scenario, "device", mesh=0)   # all visible devices
+    assert sh.final_metrics["engine"] == "sharded"
+    # bit-identical selection trajectory across all three engines
+    np.testing.assert_array_equal(sh.sel_history, dev.sel_history)
+    np.testing.assert_array_equal(sh.sel_history, host.sel_history)
+    # bit-identical rate EMA vs the unsharded engine (elementwise update)
+    np.testing.assert_array_equal(sh.rates, dev.rates)
+    np.testing.assert_allclose(sh.rates, host.rates, atol=1e-6)
+    assert sh.rates.shape == (dev.sel_history.shape[1],)   # padding sliced
+    # same batches + same round program ⇒ matching losses to float tolerance
+    assert sh.final_metrics["test_loss"] == pytest.approx(
+        dev.final_metrics["test_loss"], abs=1e-5)
+    assert sh.final_metrics["train_loss"] == pytest.approx(
+        dev.final_metrics["train_loss"], abs=1e-5)
+    assert sh.final_metrics["test_loss"] == pytest.approx(
+        host.final_metrics["test_loss"], abs=1e-5)
+
+
+def test_sharded_parity_independent_of_chunk_size():
+    a = _run("f3ast", "scarce", "device", mesh=0, chunk_size=12)
+    b = _run("f3ast", "scarce", "device", mesh=0, chunk_size=5)
+    np.testing.assert_array_equal(a.sel_history, b.sel_history)
+    assert a.final_metrics["test_loss"] == pytest.approx(
+        b.final_metrics["test_loss"], rel=1e-5)
+
+
+def test_sharded_rejects_sequential_fed_mode():
+    from repro.sim.engine import build_engine
+    with pytest.raises(ValueError, match="parallel"):
+        build_engine("scarce", "f3ast", fed_mode="sequential", mesh=0)
+
+
+def test_host_engine_rejects_mesh():
+    # mesh= only applies to the device engine; silently dropping it would
+    # let '--engine host --mesh 8' run unsharded without notice
+    with pytest.raises(ValueError, match="host"):
+        _run("f3ast", "scarce", "host", mesh=0, rounds=2)
+
+
+# ---------------------------------------------------------------------------
+# Distributed primitives vs their single-device references
+# ---------------------------------------------------------------------------
+
+def _client_mesh():
+    return make_client_mesh(axis_name="clients")
+
+
+def test_sharded_topk_mask_matches_topk_mask():
+    mesh = _client_mesh()
+    shards = mesh.shape["clients"]
+    n = 24 * shards
+    k_max = 7
+
+    f = jax.jit(shard_map(
+        lambda s, a, k: sharded_topk_mask(s, a, k, "clients", k_max),
+        mesh=mesh, in_specs=(P("clients"), P("clients"), P()),
+        out_specs=P("clients"), check_rep=False))
+
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        # coarse integer-valued scores: plenty of exact ties to stress the
+        # (score, index) tie-break equivalence
+        scores = rng.integers(0, 5, n).astype(np.float32)
+        avail = rng.random(n) < 0.4
+        if not avail.any():
+            avail[rng.integers(n)] = True
+        k = np.int32(rng.integers(1, k_max + 1))
+        want = np.asarray(_topk_mask(jnp.asarray(scores), jnp.asarray(avail),
+                                     jnp.asarray(k)))
+        got = np.asarray(f(jnp.asarray(scores), jnp.asarray(avail),
+                           jnp.asarray(k)))
+        np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
+
+
+def test_sharded_cohort_ids_matches_reference():
+    mesh = _client_mesh()
+    shards = mesh.shape["clients"]
+    n = 16 * shards
+    cohort = 6
+
+    f = jax.jit(shard_map(
+        lambda m: sharded_cohort_ids_from_mask(m, cohort, "clients", n),
+        mesh=mesh, in_specs=P("clients"), out_specs=(P(), P()),
+        check_rep=False))
+
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        mask = rng.random(n) < 0.15
+        if not mask.any():
+            mask[rng.integers(n)] = True
+        want_ids, want_valid = cohort_ids_from_mask(jnp.asarray(mask), cohort)
+        ids, valid = f(jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+        np.testing.assert_array_equal(np.asarray(valid),
+                                      np.asarray(want_valid))
+
+
+# ---------------------------------------------------------------------------
+# cohort_ids_from_mask edge cases (single-device reference semantics)
+# ---------------------------------------------------------------------------
+
+def test_cohort_ids_underfull_mask_pads_with_first_selected():
+    # fewer set bits than cohort_size: pad slots repeat the first selected
+    # client and are flagged invalid
+    mask = np.zeros(11, bool)
+    mask[[3, 8]] = True
+    ids, valid = cohort_ids_from_mask(jnp.asarray(mask), 5)
+    np.testing.assert_array_equal(np.asarray(ids), [3, 8, 3, 3, 3])
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [True, True, False, False, False])
+
+
+def test_cohort_ids_all_zero_mask_is_all_invalid():
+    # an all-zero availability round: no valid slot, ids clamp to the last
+    # client (never aggregated — every weight is masked by valid=False)
+    n, k = 9, 4
+    ids, valid = cohort_ids_from_mask(jnp.zeros(n, bool), k)
+    assert not np.asarray(valid).any()
+    np.testing.assert_array_equal(np.asarray(ids), [n - 1] * k)
+    # sharded path agrees
+    mesh = _client_mesh()
+    shards = mesh.shape["clients"]
+    n2 = 8 * shards
+    f = jax.jit(shard_map(
+        lambda m: sharded_cohort_ids_from_mask(m, k, "clients", n2),
+        mesh=mesh, in_specs=P("clients"), out_specs=(P(), P()),
+        check_rep=False))
+    ids2, valid2 = f(jnp.zeros(n2, bool))
+    assert not np.asarray(valid2).any()
+    np.testing.assert_array_equal(np.asarray(ids2), [n2 - 1] * k)
+
+
+# ---------------------------------------------------------------------------
+# Engine reporting: metrics name the engine; host-only fallback warns
+# ---------------------------------------------------------------------------
+
+def test_final_metrics_surface_the_engine():
+    assert _run("f3ast", "scarce", "host",
+                rounds=4).final_metrics["engine"] == "host"
+    assert _run("f3ast", "scarce", "device",
+                rounds=4).final_metrics["engine"] == "device"
+    assert _run("f3ast", "scarce", "device", mesh=0,
+                rounds=4).final_metrics["engine"] == "sharded"
+
+
+def test_poc_fallback_warns_and_reports_host_engine():
+    with pytest.warns(UserWarning, match="poc.*host"):
+        res = _run("poc", "scarce", "device", rounds=3)
+    assert res.final_metrics["engine"] == "host"
+    assert "per-client losses" in res.final_metrics["engine_fallback"]
+    assert np.isfinite(res.final_metrics["test_loss"])
+
+
+# ---------------------------------------------------------------------------
+# Real multi-device coverage even when the parent runs on one device
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() >= 2,
+                    reason="already multi-device; in-process tests cover it")
+def test_sharded_parity_under_forced_8_devices_subprocess():
+    code = """
+import os
+os.environ["JAX_PLATFORMS"] = "cpu"   # the forced-device flag is CPU-only
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax
+assert jax.device_count() == 8, jax.device_count()
+from repro.sim import run_scenario
+silent = lambda *a, **k: None
+dev = run_scenario("scarce", "f3ast", rounds=8, seed=0, eval_every=8,
+                   engine="device", log_fn=silent)
+sh = run_scenario("scarce", "f3ast", rounds=8, seed=0, eval_every=8,
+                  engine="device", mesh=0, log_fn=silent)
+assert np.array_equal(dev.sel_history, sh.sel_history)
+assert np.array_equal(dev.rates, sh.rates)
+assert abs(dev.final_metrics["test_loss"] - sh.final_metrics["test_loss"]) < 1e-5
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout

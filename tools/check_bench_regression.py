@@ -12,9 +12,17 @@ Compares a freshly measured ``BENCH_engine.json`` (see
    numbers come from the same run), so it stays meaningful even when the CI
    runner is a different machine class than the baseline's.
 
+With ``--nscale-current`` it additionally checks the client-scaling column
+(``benchmarks/bench_engine.py --nscale-only``): the largest-N *sharded* cell
+must have completed with nonzero throughput — the guard that the 100k-client
+regime keeps working at all (absolute rounds/sec are machine-dependent and
+not gated there).
+
 Usage:
     python tools/check_bench_regression.py \
-        --baseline BENCH_engine.json --current BENCH_engine.current.json
+        --baseline experiments/bench/BENCH_engine.json \
+        --current BENCH_engine.current.json \
+        [--nscale-current BENCH_engine_nscale.current.json]
 """
 
 from __future__ import annotations
@@ -61,10 +69,36 @@ def check(baseline: dict, current: dict, threshold: float, min_speedup: float) -
     return errors
 
 
+def check_nscale(result: dict) -> list:
+    """The largest-N sharded cell must complete with nonzero throughput."""
+    cells = result.get("nscale", {}).get("cells", [])
+    if not cells:
+        return ["nscale results contain no cells"]
+    top = max(cells, key=lambda c: c["n_clients"])
+    sharded = top.get("sharded", {})
+    if sharded.get("rounds_per_s", 0.0) <= 0.0:
+        return [
+            f"sharded engine did not complete the N={top['n_clients']} "
+            f"cell: {sharded}"
+        ]
+    print(
+        f"check_bench_regression: nscale N={top['n_clients']}: sharded "
+        f"{sharded['rounds_per_s']:.1f} rounds/s over "
+        f"{result['nscale'].get('devices', '?')} devices"
+    )
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("--baseline", default="BENCH_engine.json")
+    ap.add_argument("--baseline", default="experiments/bench/BENCH_engine.json")
     ap.add_argument("--current", required=True)
+    ap.add_argument(
+        "--nscale-current",
+        default=None,
+        help="optional N-scaling results (bench_engine.py --nscale-only); "
+        "checks the largest-N sharded cell completed",
+    )
     ap.add_argument(
         "--threshold",
         type=float,
@@ -82,6 +116,8 @@ def main(argv=None) -> int:
     baseline = load(args.baseline)
     current = load(args.current)
     errors = check(baseline, current, args.threshold, args.min_speedup)
+    if args.nscale_current:
+        errors += check_nscale(load(args.nscale_current))
     if errors:
         print(f"check_bench_regression: FAIL ({len(errors)} issue(s))")
         for e in errors:
