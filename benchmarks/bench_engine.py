@@ -46,17 +46,17 @@ import numpy as np
 
 sys.path.insert(0, "src")
 
-from repro.core import make_algorithm
 from repro.core.fedstep import make_fed_round
+from repro.core.strategies import make_strategy
 from repro.data.pipeline import stage_client_arrays
 from repro.data.synthetic import make_synthetic_client_arrays
 from repro.launch.mesh import make_client_mesh
 from repro.models import softmax_reg
 from repro.models.softmax_reg import SoftmaxRegConfig
 from repro.optim import make_optimizer
-from repro.sim import run_cells_vmapped, run_scenario
+from repro.sim import RunSpec, run_cells_vmapped, run_scenario
 from repro.sim.budgets import make_budget
-from repro.sim.engine import DeviceEngine, run_scenario_device
+from repro.sim.engine import DeviceEngine
 from repro.sim.engine_sharded import ShardedEngine
 from repro.sim.processes import make_process
 
@@ -66,8 +66,9 @@ def _silent(*args, **kwargs):
 
 
 def bench_host(scenario: str, algo: str, rounds: int, seed: int) -> dict:
-    res = run_scenario(scenario, algo, rounds=rounds, seed=seed,
-                       eval_every=rounds, engine="host", log_fn=_silent)
+    spec = RunSpec(scenario=scenario, strategy=algo, rounds=rounds,
+                   seed=seed, eval_every=rounds, engine="host")
+    res = run_scenario(spec, log_fn=_silent)
     return dict(rounds=rounds,
                 wall_s=round(res.final_metrics["wall_s"], 4),
                 rounds_per_s=round(res.final_metrics["steady_rounds_per_s"], 2))
@@ -75,9 +76,10 @@ def bench_host(scenario: str, algo: str, rounds: int, seed: int) -> dict:
 
 def bench_device(scenario: str, algo: str, rounds: int, seed: int,
                  chunk_size: int) -> dict:
-    res = run_scenario_device(scenario, algo, rounds=rounds, seed=seed,
-                              eval_every=rounds, chunk_size=chunk_size,
-                              log_fn=_silent)
+    spec = RunSpec(scenario=scenario, strategy=algo, rounds=rounds,
+                   seed=seed, eval_every=rounds, chunk_size=chunk_size,
+                   engine="device")
+    res = run_scenario(spec, log_fn=_silent)
     return dict(rounds=rounds, chunk_size=chunk_size,
                 wall_s=round(res.final_metrics["wall_s"], 4),
                 rounds_per_s=round(res.final_metrics["steady_rounds_per_s"], 2))
@@ -106,8 +108,9 @@ def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
     common = dict(
         avail_model=make_process("bernoulli", n_clients, q=0.3),
         budget=make_budget("constant", k=k),
-        algo=make_algorithm("f3ast", n_clients,
-                            np.full(n_clients, 1.0 / n_clients, np.float32)),
+        strategy=make_strategy("f3ast", n_clients,
+                               np.full(n_clients, 1.0 / n_clients, np.float32),
+                               clients_per_round=k),   # init calibrates K/N
         init_params=functools.partial(softmax_reg.init_params, cfg),
         opt=opt, client_lr=0.05, local_steps=5, local_batch=20)
     if mesh is None:
@@ -118,7 +121,6 @@ def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
             mesh=mesh, axis="clients", staged=staged, n_clients=n_clients,
             fed_round=make_fed_round(loss, opt, cohort_axis="clients",
                                      cohort_slots=k), **common)
-    engine.set_r0(k / n_clients)
     return engine
 
 

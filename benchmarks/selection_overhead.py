@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_algorithm
+from repro.core import make_strategy
 
 
 def _time(fn, *args, iters=50):
@@ -30,14 +30,14 @@ def run(ns=(100, 1000, 10_000, 100_000), m=10, log_fn=print):
     for n in ns:
         rng = np.random.default_rng(0)
         p = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
-        algo = make_algorithm("f3ast", n, p)
-        state = algo.init(r0=m / n)
+        strategy = make_strategy("f3ast", n, p, clients_per_round=m)
+        state = strategy.init(n)
         avail = jnp.asarray(rng.random(n) < 0.5)
         key = jax.random.PRNGKey(0)
 
         @jax.jit
         def step(st, key, avail):
-            return algo.select(st, key, avail, jnp.asarray(m))
+            return strategy.select(st, key, avail, jnp.asarray(m), None)
 
         us = _time(step, state, key, avail)
         results[n] = us

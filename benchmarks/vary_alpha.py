@@ -11,17 +11,18 @@ import dataclasses
 import json
 import os
 
-from repro.sim import get_scenario, run_scenario
+from repro.sim import RunSpec, get_scenario, run_scenario
 
 
 def run(alphas=(0.0, 0.5, 1.0), rounds=250, out_dir=None, log_fn=print):
     base = get_scenario("smartphones")
+    base_spec = RunSpec(rounds=rounds, eval_every=rounds)
     results = {}
     for a in alphas:
         sc = dataclasses.replace(base, name=f"smartphones_a{a}",
                                  task_kwargs={"alpha": a, "beta": a})
         for algo in ("f3ast", "fedavg"):
-            res = run_scenario(sc, algo, rounds=rounds, eval_every=rounds,
+            res = run_scenario(base_spec.replace(scenario=sc, strategy=algo),
                                log_fn=lambda *_: None)
             results[(a, algo)] = res.final_metrics["test_acc"]
             log_fn(f"vary_alpha,alpha={a},{algo},acc={results[(a, algo)]:.4f}")

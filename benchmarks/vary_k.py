@@ -12,18 +12,19 @@ import dataclasses
 import json
 import os
 
-from repro.sim import get_scenario, run_scenario
+from repro.sim import RunSpec, get_scenario, run_scenario
 
 
 def run(ks=(2, 5, 10, 20), rounds=250, algos=("f3ast", "fedavg", "poc"),
         scenario="homedevices", out_dir=None, log_fn=print):
     base = get_scenario(scenario)
+    base_spec = RunSpec(rounds=rounds, eval_every=rounds)
     results = {}
     for k in ks:
         sc = dataclasses.replace(base, name=f"{base.name}_k{k}",
                                  budget="constant", budget_kwargs={"k": k})
         for algo in algos:
-            res = run_scenario(sc, algo, rounds=rounds, eval_every=rounds,
+            res = run_scenario(base_spec.replace(scenario=sc, strategy=algo),
                                log_fn=lambda *_: None)
             results[(k, algo)] = (res.final_metrics["test_acc"],
                                   res.final_metrics["test_loss"])

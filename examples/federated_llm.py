@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.core import CommBudget, make_algorithm, make_availability, make_fed_round
+from repro.core import (CommBudget, make_availability, make_fed_round,
+                        make_strategy)
 from repro.data import CohortSampler, FederatedData
 from repro.data.synthetic import make_char_lm_federated
 from repro.models import ModelConfig, get_model_api
@@ -48,8 +49,9 @@ fed = FederatedData(clients)
 p = fed.p
 N = fed.n_clients
 
-algo = make_algorithm("f3ast", N, p, beta=5e-3)
-state = algo.init(r0=args.cohort / N)
+algo = make_strategy("f3ast", N, p, beta=5e-3,
+                     clients_per_round=args.cohort)
+state = algo.init(N)
 avail_proc = make_availability("homedevices", N)
 budget = CommBudget(fixed=args.cohort, jitter=2)
 
@@ -65,7 +67,7 @@ for t in range(args.rounds):
     key, k1, k2, k3 = jax.random.split(key, 4)
     avail = avail_proc.sample(k1, t)
     k_t = budget.sample(k3, t)
-    mask, w_full, state = algo.select(state, k2, avail, k_t)
+    mask, w_full, state = algo.select(state, k2, avail, k_t, None)
     ids = np.flatnonzero(np.asarray(mask))
     batch, valid, idarr = sampler.cohort_batch(ids)
     w = jnp.asarray(np.asarray(w_full)[idarr] * valid)

@@ -1,19 +1,22 @@
-"""Compare client-selection algorithms across availability regimes
+"""Compare client-selection strategies across availability regimes
 (reproduces the structure of the paper's Table 2/3 at CPU scale).
 
 Scenarios come from the registry (``python -m repro.sim.sweep --list``):
 any registered availability × budget regime works, including the correlated
 (markov, gilbert_elliott), periodic (diurnal) and non-stationary (drift)
-regimes beyond the paper's own five.
+regimes beyond the paper's own five.  Each cell is one frozen
+:class:`repro.sim.RunSpec` — a ``dataclasses.replace`` grid over a base
+spec, exactly how ``repro.sim.sweep`` builds its grids.
 
     PYTHONPATH=src python examples/intermittent_availability.py \
         [--rounds N] [--scenarios always scarce markov diurnal]
 """
 import argparse
+import dataclasses
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.sim import get_scenario, run_scenario
+from repro.sim import RunSpec, run_scenario
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--rounds", type=int, default=200)
@@ -22,11 +25,12 @@ ap.add_argument("--scenarios", nargs="+",
 ap.add_argument("--algorithms", nargs="+", default=["f3ast", "fedavg", "poc"])
 args = ap.parse_args()
 
+base = RunSpec(rounds=args.rounds, eval_every=args.rounds)
+
 print(f"{'scenario':<17}{'algorithm':<12}{'test acc':>10}{'test loss':>11}")
 for sc_name in args.scenarios:
-    sc = get_scenario(sc_name)
     for algo in args.algorithms:
-        res = run_scenario(sc, algo, rounds=args.rounds,
-                           eval_every=args.rounds, log_fn=lambda *_: None)
+        spec = dataclasses.replace(base, scenario=sc_name, strategy=algo)
+        res = run_scenario(spec, log_fn=lambda *_: None)
         m = res.final_metrics
-        print(f"{sc.name:<17}{algo:<12}{m['test_acc']:>10.4f}{m['test_loss']:>11.4f}")
+        print(f"{sc_name:<17}{algo:<12}{m['test_acc']:>10.4f}{m['test_loss']:>11.4f}")

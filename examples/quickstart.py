@@ -3,22 +3,26 @@
 Trains softmax regression on the paper's Synthetic(1,1) dataset with 100
 intermittently-available clients (HomeDevices model), a communication
 budget of 10 clients/round, and the unbiased F3AST selection/aggregation.
+The whole run is ONE frozen :class:`repro.sim.RunSpec` — serializable to
+JSON, so the exact configuration can be archived and replayed.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.train import run_federated
+from repro.sim import RunSpec, run_scenario
 
-result = run_federated(
-    task_id="synthetic11",          # paper §4.1 dataset (exact generator)
-    algo_name="f3ast",              # Algorithm 1
-    availability="homedevices",     # lognormal per-client availability
+spec = RunSpec(
+    scenario="homedevices",         # lognormal per-client availability
+    strategy="f3ast",               # Algorithm 1 (a STRATEGY_REGISTRY key)
     rounds=200,
     clients_per_round=10,           # communication constraint K_t = 10
-    server_opt="sgd", server_lr=1.0,  # SERVEROPT(w, Δ) = w + Δ
+    server_opt="sgd",               # SERVEROPT(w, Δ) = w + Δ
 )
+print("spec:", spec.to_json(indent=None))   # reproduce with RunSpec.from_json
+
+result = run_scenario(spec)
 
 print("\nfinal:", result.final_metrics)
 print("learned participation rates r(T): "

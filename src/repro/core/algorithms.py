@@ -1,45 +1,45 @@
-"""Algorithm layer: selection + rate tracking + aggregation-weight policy.
+"""DEPRECATED compatibility shim over :mod:`repro.core.strategies`.
 
-Each algorithm is a small stateful controller used by the training driver:
+The string-dispatched :class:`Algorithm` controller was replaced by the
+pure-functional :class:`repro.core.strategies.SelectionStrategy` registry —
+policies are now config-registered plug-ins (``register_strategy``) with an
+optax-style ``init``/``select`` protocol, and the hand-written per-algorithm
+sharded branches became the generic blockwise adapter
+:func:`repro.core.strategies.as_sharded`.
 
-    ctrl = make_algorithm("f3ast", n_clients=N, p=p, beta=1e-3)
+This module keeps the old surface working for one PR so downstream callers
+can migrate:
+
+    ctrl = make_algorithm("f3ast", n_clients=N, p=p, beta=1e-3)   # deprecated
     state = ctrl.init()
-    sel_mask, weights_full, state = ctrl.select(state, key, avail, k_t, losses)
+    mask, weights_full, state = ctrl.select(state, key, avail, k_t, losses)
 
-``weights_full`` is the (N,) vector of aggregation weights (zero for
-unselected clients); the driver gathers the selected clients' slices into the
-static-size cohort and passes the matching (K,) weights to the jitted round.
+New spelling:
 
-Algorithms
-  f3ast        selection: greedy −∇H(r) top-K     weights: p_k / r_k (unbiased)
-  fixed_f3ast  Algorithm 2 with frozen target r    weights: p_k / r_k(target)
-  fedavg       sampling ∝ p_k over available       weights: p_k / Σ_S p_k (biased)
-  uniform      uniform over available              weights: 1/|S|       (biased)
-  poc          Power-of-Choice (d candidates)      weights: 1/|S|       (biased)
-
-Server optimizer choice (SGD → FedAvg/F3AST, Adam → FedAdam/F3AST+Adam, Yogi)
-is orthogonal and lives in the driver / config.
+    strategy = make_strategy("f3ast", N, p, beta=1e-3)
+    state = strategy.init(N)
+    mask, weights_full, state = strategy.select(state, key, avail, k_t, ctx)
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+import functools
+import warnings
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import selection as sel
-from .aggregation import fedavg_weights, unbiased_weights, uniform_weights
-from .hfun import R_MIN, marginal_utility
-from .rates import RateState, init_rates, update_rates
+from .strategies import (RateTrackState, SelectCtx, SelectionStrategy,
+                         make_strategy)
 
-
-class AlgoState(NamedTuple):
-    rates: RateState
+# Old name for the built-in strategies' state pytree.
+AlgoState = RateTrackState
 
 
 @dataclasses.dataclass(frozen=True)
 class Algorithm:
+    """Deprecated wrapper binding a registered strategy to the old API."""
     name: str
     n_clients: int
     p: jnp.ndarray                      # client data fractions, sum to 1
@@ -48,122 +48,35 @@ class Algorithm:
     poc_d: int = 30                     # PoC candidate-set size
     r_target: Optional[jnp.ndarray] = None  # fixed-policy F3AST target
 
+    # cached_property writes to __dict__ directly, so it works on a frozen
+    # dataclass and the strategy is built once, not per select() call
+    @functools.cached_property
+    def strategy(self) -> SelectionStrategy:
+        kw = dict(beta=self.beta,
+                  positively_correlated=self.positively_correlated)
+        if self.r_target is not None:
+            kw["r_target"] = self.r_target
+        if self.name == "poc":
+            kw["d"] = self.poc_d
+        return make_strategy(self.name, self.n_clients, self.p, **kw)
+
     def init(self, r0: float | None = None) -> AlgoState:
-        """Paper: r(0) arbitrary.  Default to a calibrated guess — the
-        uniform feasible rate K/N (here via expected p-mass per round) —
-        which shortens the stochastic-approximation burn-in (Thm B.1)."""
-        if r0 is None:
-            r0 = 0.1
-        return AlgoState(rates=init_rates(self.n_clients, r0))
+        """Old default: r0 = 0.1 when unspecified (the new strategies
+        calibrate to K/N when built with ``clients_per_round``)."""
+        return self.strategy.init(self.n_clients,
+                                  r0=0.1 if r0 is None else r0)
 
     def select(self, state: AlgoState, key: jax.Array, avail: jnp.ndarray,
                k_t: jnp.ndarray, losses: Optional[jnp.ndarray] = None):
         """Returns (sel_mask (N,) bool, weights (N,) f32, new state)."""
-        r = state.rates.r
-        name = self.name
-        if name == "f3ast":
-            # Alg. 1: select with r(t-1) (line 4), update the EMA (line 5),
-            # aggregate with the *updated* r(t) (line 9).
-            mask = sel.f3ast_select(avail, k_t, self.p, r,
-                                    self.positively_correlated, key=key)
-            new_rates = update_rates(state.rates, mask, self.beta)
-            w = unbiased_weights(self.p, jnp.maximum(new_rates.r, R_MIN), mask)
-            return mask, w, AlgoState(rates=new_rates)
-        elif name == "fixed_f3ast":
-            rt = self.r_target if self.r_target is not None else r
-            mask = sel.fixed_policy_select(avail, k_t, self.p, rt,
-                                           self.positively_correlated)
-            w = unbiased_weights(self.p, jnp.maximum(rt, R_MIN), mask)
-        elif name == "fedavg":
-            # Paper baseline: sample available clients with normalized
-            # probabilities p_k; aggregate the plain mean of the updates
-            # (Li et al. scheme II).  Under intermittent availability this
-            # estimator is biased — which is exactly the failure mode
-            # F3AST's p_k/r_k reweighting removes.
-            mask = sel.fedavg_select(key, avail, k_t, self.p)
-            w = uniform_weights(mask)
-        elif name == "fedavg_weighted":
-            mask = sel.fedavg_select(key, avail, k_t, self.p)
-            w = fedavg_weights(self.p, mask)
-        elif name == "uniform":
-            mask = sel.uniform_select(key, avail, k_t)
-            w = uniform_weights(mask)
-        elif name == "poc":
-            assert losses is not None, "PoC needs current per-client losses"
-            mask = sel.poc_select(key, avail, k_t, self.p, losses, self.poc_d)
-            w = uniform_weights(mask)
-        else:
-            raise ValueError(f"unknown algorithm {name!r}")
-
-        new_rates = update_rates(state.rates, mask, self.beta)
-        return mask, w, AlgoState(rates=new_rates)
-
-    # -- client-sharded path (inside shard_map over the clients axis) -------
-
-    def select_sharded(self, state: AlgoState, key: jax.Array,
-                       avail_blk: jnp.ndarray, k_t: jnp.ndarray, *,
-                       axis: str, k_max: int, n_pad: int):
-        """Blockwise :meth:`select` for the mesh-partitioned engine.
-
-        ``state.rates.r`` and ``avail_blk`` are this shard's block of the
-        client dimension padded to ``n_pad`` (= shards × block); the
-        returned (mask, weights, state) are blocks too.  Random tie-break /
-        sampling fields are drawn at the full (N,) shape from the same key
-        and sliced per shard, and the top-k cut is the distributed one, so
-        the assembled global mask is bit-identical to :meth:`select`
-        (asserted in ``tests/test_engine_sharded.py``).  PoC is host-only
-        and not supported here.
-        """
-        n_local = avail_blk.shape[0]
-        i = jax.lax.axis_index(axis)
-        off = i * n_local
-        assert n_pad % n_local == 0 and n_pad >= self.n_clients, \
-            (n_pad, n_local, self.n_clients)
-
-        def blk(full):
-            """Slice this shard's block out of a full (N,) field."""
-            full = jnp.pad(full, (0, n_pad - full.shape[0]))
-            return jax.lax.dynamic_slice_in_dim(full, off, n_local)
-
-        p_blk = blk(self.p)
-        r_blk = state.rates.r
-        name = self.name
-        if name == "f3ast":
-            util = marginal_utility(r_blk, p_blk, self.positively_correlated)
-            jitter = jax.random.uniform(key, (self.n_clients,))
-            util = util * (1.0 + 1e-6 * blk(jitter))
-            mask = sel.sharded_topk_mask(util, avail_blk, k_t, axis, k_max)
-            new_rates = update_rates(state.rates, mask, self.beta)
-            w = unbiased_weights(p_blk, jnp.maximum(new_rates.r, R_MIN), mask)
-            return mask, w, AlgoState(rates=new_rates)
-        elif name == "fixed_f3ast":
-            rt = blk(self.r_target) if self.r_target is not None else r_blk
-            util = marginal_utility(rt, p_blk, self.positively_correlated)
-            mask = sel.sharded_topk_mask(util, avail_blk, k_t, axis, k_max)
-            w = unbiased_weights(p_blk, jnp.maximum(rt, R_MIN), mask)
-        elif name in ("fedavg", "fedavg_weighted"):
-            g = jax.random.gumbel(key, (self.n_clients,))
-            scores = jnp.log(jnp.maximum(p_blk, 1e-12)) + blk(g)
-            mask = sel.sharded_topk_mask(scores, avail_blk, k_t, axis, k_max)
-            if name == "fedavg":
-                v = mask.astype(jnp.float32)
-                w = v / jnp.maximum(jax.lax.psum(v.sum(), axis), 1.0)
-            else:
-                w0 = jnp.where(mask, p_blk, 0.0)
-                w = w0 / jnp.maximum(jax.lax.psum(w0.sum(), axis), 1e-12)
-        elif name == "uniform":
-            scores = blk(jax.random.uniform(key, (self.n_clients,)))
-            mask = sel.sharded_topk_mask(scores, avail_blk, k_t, axis, k_max)
-            v = mask.astype(jnp.float32)
-            w = v / jnp.maximum(jax.lax.psum(v.sum(), axis), 1.0)
-        else:
-            raise ValueError(f"algorithm {name!r} has no sharded select "
-                             f"(host-only state); use engine='host'")
-
-        new_rates = update_rates(state.rates, mask, self.beta)
-        return mask, w, AlgoState(rates=new_rates)
+        return self.strategy.select(state, key, avail, k_t,
+                                    SelectCtx(losses=losses))
 
 
 def make_algorithm(name: str, n_clients: int, p, **kw) -> Algorithm:
+    warnings.warn(
+        "make_algorithm/Algorithm are deprecated; use "
+        "repro.core.strategies.make_strategy (and register_strategy for "
+        "custom policies)", DeprecationWarning, stacklevel=2)
     return Algorithm(name=name.lower(), n_clients=n_clients,
                      p=jnp.asarray(p, jnp.float32), **kw)

@@ -1,0 +1,458 @@
+"""Pluggable client-selection strategies: protocol + string registry.
+
+The paper's contribution is a *selection policy* (Algorithm 1) evaluated
+against baselines; this module makes a policy one registry entry instead of
+an ``if/elif`` branch inside every engine.  A strategy is a pair of pure
+functions in the optax ``GradientTransformation`` style:
+
+    init(n_clients, r0=None) -> state          # an arbitrary pytree
+    select(state, key, avail, k_t, ctx) -> (mask, weights, new_state)
+
+``mask``/``weights`` are full (N,) arrays (weights zero off-cohort), so the
+engines stay strategy-agnostic: the host loop, the device-resident scan
+engine, and the client-sharded engine all call the same ``select``.
+
+Most policies are "score the available clients, keep the top K_t, weight
+the winners" — build those with :func:`topk_strategy` from a ``score`` and
+a ``finalize`` piece.  Strategies built that way additionally get the
+client-sharded engine for free: :func:`as_sharded` wraps the same pieces
+around the distributed top-k (``selection.sharded_topk_mask``), computing
+the (cheap, O(N)-elementwise) scores and weights replicated at full shape
+so the selected set is bit-identical to the single-device path.
+
+Registry:
+
+    register_strategy("my_policy", factory)     # or use as a decorator
+    strategy = make_strategy("my_policy", n_clients, p, beta=1e-3)
+
+A factory is ``f(n_clients, p, **hyperparams) -> SelectionStrategy``;
+:func:`make_strategy` passes only the hyperparameters the factory accepts,
+so engine-supplied defaults (``beta``, ``clients_per_round``, ...) never
+break a custom factory that ignores them.  Aliases (``fedadam`` = fedavg
+selection + Adam server) resolve in :func:`resolve_strategy` — ONE place,
+before any engine dispatch, so every engine sees the same resolved name.
+
+Built-in strategies
+  f3ast            greedy −∇H(r) top-K (Alg. 1)     weights p_k/r_k (unbiased)
+  fixed_f3ast      Alg. 2, frozen target rate        weights p_k/r_k(target)
+  fedavg           sample ∝ p_k over available       weights 1/|S|  (biased)
+  fedavg_weighted  sample ∝ p_k over available       weights ∝ p_k  (biased)
+  uniform          uniform over available            weights 1/|S|  (biased)
+  poc              Power-of-Choice (host-only: needs fresh per-client losses)
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import selection as sel
+from .aggregation import fedavg_weights, unbiased_weights, uniform_weights
+from .hfun import R_MIN, marginal_utility
+from .rates import RateState, init_rates, update_rates
+
+__all__ = [
+    "STRATEGY_ALIASES", "STRATEGY_REGISTRY", "RateTrackState", "SelectCtx",
+    "SelectionStrategy", "StrategyAlias", "as_sharded", "get_strategy_entry",
+    "list_strategies", "make_strategy", "register_strategy",
+    "resolve_strategy", "strategy_rates", "topk_strategy",
+]
+
+
+class SelectCtx(NamedTuple):
+    """Per-round side inputs a strategy may consume (all optional)."""
+    t: Optional[jnp.ndarray] = None        # round index
+    losses: Optional[jnp.ndarray] = None   # (N,) fresh per-client losses
+
+
+class RateTrackState(NamedTuple):
+    """State of the built-in strategies: the Alg. 1 line-5 rate EMA."""
+    rates: RateState
+
+
+class SelectionStrategy(NamedTuple):
+    """A selection policy as pure functions (optax-style).
+
+    ``init(n_clients, r0=None) -> state`` and
+    ``select(state, key, avail, k_t, ctx) -> (mask, weights, new_state)``
+    are the whole protocol; engines never look inside ``state`` (any pytree
+    works — it is not hardwired to :class:`RateTrackState`).
+
+    ``score``/``finalize`` are the optional top-k decomposition (see
+    :func:`topk_strategy`) that :func:`as_sharded` needs; ``rates_of``
+    optionally extracts a tracked (N,) participation rate for reporting;
+    ``needs_losses``/``host_only`` route the strategy to the host loop.
+    """
+    name: str
+    init: Callable[..., Any]
+    select: Callable[..., Any]
+    score: Optional[Callable[..., Any]] = None
+    finalize: Optional[Callable[..., Any]] = None
+    rates_of: Optional[Callable[[Any], Any]] = None
+    n_clients: Optional[int] = None
+    needs_losses: bool = False
+    host_only: bool = False
+
+
+def strategy_rates(strategy: SelectionStrategy, state):
+    """Tracked (N,) participation rates of ``state``, or None.
+
+    Uses ``strategy.rates_of`` when provided, else the built-in state
+    convention ``state.rates.r``.
+    """
+    if strategy.rates_of is not None:
+        return strategy.rates_of(state)
+    return getattr(getattr(state, "rates", None), "r", None)
+
+
+def topk_strategy(name: str, init: Callable, score: Callable,
+                  finalize: Callable, *, n_clients: Optional[int] = None,
+                  rates_of: Optional[Callable] = None) -> SelectionStrategy:
+    """Build a strategy from the canonical score → top-k → weight shape.
+
+    ``score(state, key, avail, k_t, ctx) -> (N,) f32`` ranks clients;
+    the top ``min(k_t, |avail|)`` available ones are selected
+    (``selection._topk_mask`` — stable (score, id) tie-break);
+    ``finalize(state, mask, ctx) -> (weights (N,), new_state)`` assigns
+    aggregation weights and advances the state.  Strategies built this way
+    run on all three engines — :func:`as_sharded` reuses the same two
+    pieces around the distributed top-k.
+    """
+
+    def select(state, key, avail, k_t, ctx: Optional[SelectCtx] = None):
+        scores = score(state, key, avail, k_t, ctx)
+        mask = sel._topk_mask(scores, avail, k_t)
+        weights, new_state = finalize(state, mask, ctx)
+        return mask, weights, new_state
+
+    return SelectionStrategy(name=name, init=init, select=select,
+                             score=score, finalize=finalize,
+                             rates_of=rates_of, n_clients=n_clients)
+
+
+def as_sharded(strategy: SelectionStrategy, *, axis: str, k_max: int,
+               n_pad: int) -> Callable:
+    """Generic blockwise adapter for the client-sharded engine.
+
+    Returns ``select_blk(state, key, avail_blk, k_t, ctx) ->
+    (mask_blk, weights_blk, new_state)`` for use inside ``shard_map`` over
+    ``axis``: ``avail_blk`` is this shard's block of the client dimension
+    padded to ``n_pad``; the strategy ``state`` is replicated (full real-N
+    shape on every shard).  Scores and weights are computed at full (N,)
+    shape from the strategy's own ``score``/``finalize`` — identical
+    computation, same key ⇒ same values as the single-device path — and
+    only the top-k cut is distributed (``selection.sharded_topk_mask``,
+    bit-identical tie-break), so the assembled global mask and the state
+    trajectory match the unsharded engine exactly.  Recomputing the O(N)
+    elementwise fields replicated is deliberate: they are a few hundred KB
+    at N = 100k, while the staged data, availability state, and the top-k
+    sort stay sharded.
+    """
+    if strategy.score is None or strategy.finalize is None:
+        raise ValueError(
+            f"strategy {strategy.name!r} has no score/finalize "
+            f"decomposition, so the generic sharded adapter cannot run it; "
+            f"build it with topk_strategy(...) or use an unsharded engine")
+    n = strategy.n_clients
+    if n is None:
+        raise ValueError(f"strategy {strategy.name!r} does not declare "
+                         f"n_clients; as_sharded needs it to un-pad fields")
+
+    def pad(x):
+        return jnp.pad(x, [(0, n_pad - x.shape[0])]
+                       + [(0, 0)] * (x.ndim - 1))
+
+    def select_blk(state, key, avail_blk, k_t,
+                   ctx: Optional[SelectCtx] = None):
+        n_local = avail_blk.shape[0]
+        off = jax.lax.axis_index(axis) * n_local
+        avail_full = jax.lax.all_gather(avail_blk, axis, tiled=True)[:n]
+        scores = strategy.score(state, key, avail_full, k_t, ctx)
+        scores_blk = jax.lax.dynamic_slice_in_dim(pad(scores), off, n_local)
+        mask_blk = sel.sharded_topk_mask(scores_blk, avail_blk, k_t, axis,
+                                         k_max)
+        mask_full = jax.lax.all_gather(mask_blk, axis, tiled=True)[:n]
+        weights, new_state = strategy.finalize(state, mask_full, ctx)
+        w_blk = jax.lax.dynamic_slice_in_dim(
+            pad(weights.astype(jnp.float32)), off, n_local)
+        return mask_blk, w_blk, new_state
+
+    return select_blk
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+class StrategyEntry(NamedTuple):
+    factory: Callable[..., SelectionStrategy]
+    host_only: bool = False
+    needs_losses: bool = False
+
+
+class StrategyAlias(NamedTuple):
+    """A convenience name = strategy + server-optimizer defaults."""
+    strategy: str
+    server_opt: Optional[str] = None
+    server_lr: Optional[float] = None
+
+
+STRATEGY_REGISTRY: Dict[str, StrategyEntry] = {}
+
+# FedAdam (Reddi et al. / paper §4) = FedAvg selection + Adam server step.
+STRATEGY_ALIASES: Dict[str, StrategyAlias] = {
+    "fedadam": StrategyAlias("fedavg", server_opt="adam", server_lr=1e-2),
+}
+
+
+def register_strategy(name: str, factory: Optional[Callable] = None, *,
+                      host_only: bool = False, needs_losses: bool = False,
+                      overwrite: bool = False):
+    """Register ``factory(n_clients, p, **hyper) -> SelectionStrategy``.
+
+    Usable as a decorator.  ``host_only`` keeps the strategy off the
+    compiled engines (``run_scenario`` falls back to the host loop with a
+    warning); ``needs_losses`` asks the host loop for fresh per-client
+    losses in ``ctx.losses`` each round (implies host-only execution).
+    """
+
+    def deco(f):
+        key = name.lower()
+        if not overwrite and key in STRATEGY_REGISTRY:
+            raise KeyError(f"strategy {key!r} already registered")
+        STRATEGY_REGISTRY[key] = StrategyEntry(
+            factory=f, host_only=host_only or needs_losses,
+            needs_losses=needs_losses)
+        return f
+
+    return deco(factory) if factory is not None else deco
+
+
+def list_strategies() -> list:
+    return sorted(STRATEGY_REGISTRY)
+
+
+def get_strategy_entry(name: str) -> StrategyEntry:
+    """Registry lookup that fails fast with the registered names."""
+    key = str(name).lower()
+    if key not in STRATEGY_REGISTRY:
+        raise KeyError(
+            f"unknown selection strategy {name!r}; registered: "
+            f"{list_strategies()} (aliases: {sorted(STRATEGY_ALIASES)})")
+    return STRATEGY_REGISTRY[key]
+
+
+def resolve_strategy(name: str, server_opt: str = "sgd",
+                     server_lr: Optional[float] = None):
+    """Resolve aliases + server-optimizer defaults in ONE place.
+
+    Returns ``(strategy_name, server_opt, server_lr)``: aliases such as
+    ``fedadam`` rewrite to their base strategy and pin the server
+    optimizer; ``server_lr=None`` then fills with the optimizer's default
+    (1e-2 for adam/yogi, else 1.0).  Every entry point (host loop, device
+    engine, sharded engine, CLIs) calls this before dispatch, so no engine
+    ever sees an unresolved alias.  Unknown names raise ``KeyError`` here —
+    before anything compiles.
+    """
+    key = str(name).lower()
+    if key in STRATEGY_ALIASES:
+        alias = STRATEGY_ALIASES[key]
+        key = alias.strategy
+        if alias.server_opt is not None:
+            server_opt = alias.server_opt
+        if server_lr is None and alias.server_lr is not None:
+            server_lr = alias.server_lr
+    get_strategy_entry(key)
+    if server_lr is None:
+        server_lr = 1e-2 if server_opt in ("adam", "yogi") else 1.0
+    return key, server_opt, server_lr
+
+
+# keys every engine passes by default; factories may ignore them, so they
+# alone are dropped silently when a factory's signature lacks them
+_ENGINE_DEFAULT_KEYS = frozenset(
+    {"beta", "positively_correlated", "clients_per_round"})
+
+
+def make_strategy(name: str, n_clients: int, p, **hyper) -> SelectionStrategy:
+    """Instantiate a registered strategy for (n_clients, p).
+
+    Of the hyperparameters not accepted by the factory's signature, only
+    the engine-supplied standard set (``beta``, ``positively_correlated``,
+    ``clients_per_round``) is dropped silently — engines can always offer
+    those without constraining custom factories.  Any *other* unaccepted
+    key (e.g. a typo in ``RunSpec.strategy_kwargs``) raises ``TypeError``
+    — fail fast, never run with a silently-ignored hyperparameter.
+    """
+    entry = get_strategy_entry(name)
+    params = inspect.signature(entry.factory).parameters
+    if not any(q.kind == q.VAR_KEYWORD for q in params.values()):
+        unknown = set(hyper) - set(params) - _ENGINE_DEFAULT_KEYS
+        if unknown:
+            accepted = sorted(set(params) - {"n_clients", "p"})
+            raise TypeError(
+                f"strategy {name!r} factory does not accept "
+                f"{sorted(unknown)}; its hyperparameters are {accepted}")
+        hyper = {k: v for k, v in hyper.items() if k in params}
+    strategy = entry.factory(n_clients=n_clients,
+                             p=jnp.asarray(p, jnp.float32), **hyper)
+    # registry-level routing flags apply even when the factory (e.g. one
+    # built with topk_strategy) did not set them on the instance — the host
+    # loop reads the instance flags to decide on fresh-loss computation
+    if ((entry.needs_losses and not strategy.needs_losses)
+            or (entry.host_only and not strategy.host_only)):
+        strategy = strategy._replace(
+            needs_losses=strategy.needs_losses or entry.needs_losses,
+            host_only=strategy.host_only or entry.host_only)
+    return strategy
+
+
+# ---------------------------------------------------------------------------
+# Built-in strategies
+# ---------------------------------------------------------------------------
+
+def _calibrated_r0(n_clients: int, r0, clients_per_round) -> float:
+    """Default rate-EMA init r(0) (Algorithm 1 line 1: "arbitrary").
+
+    Explicit ``r0`` wins; otherwise the calibrated uniform feasible rate
+    K/N (shortens the stochastic-approximation burn-in, Thm B.1) when the
+    expected cohort size is known; the constant 0.1 is the explicit
+    fallback when it is not.
+    """
+    if r0 is not None:
+        return r0
+    if clients_per_round:
+        return min(1.0, clients_per_round / n_clients)
+    return 0.1
+
+
+def _rate_init(n_default: int, clients_per_round) -> Callable:
+    def init(n_clients: int = n_default, r0=None):
+        return RateTrackState(rates=init_rates(
+            n_clients, _calibrated_r0(n_clients, r0, clients_per_round)))
+    return init
+
+
+def _ema_finalize(beta: float, weights_from_mask: Callable) -> Callable:
+    """finalize = rate-EMA step + a weights rule on the *pre-update* state."""
+
+    def finalize(state, mask, ctx=None):
+        new_rates = update_rates(state.rates, mask, beta)
+        return weights_from_mask(mask), RateTrackState(rates=new_rates)
+
+    return finalize
+
+
+@register_strategy("f3ast")
+def _make_f3ast(n_clients, p, beta: float = 1e-3,
+                positively_correlated: bool = False,
+                clients_per_round: Optional[int] = None) -> SelectionStrategy:
+    """Algorithm 1: greedy −∇H(r) selection, unbiased p_k/r_k weights."""
+
+    def score(state, key, avail, k_t, ctx=None):
+        util = marginal_utility(state.rates.r, p, positively_correlated)
+        # Infinitesimal random tie-break so identical utilities (e.g. at
+        # initialization with uniform r) do not favor low-index clients.
+        return util * (1.0 + 1e-6 * jax.random.uniform(key, util.shape))
+
+    def finalize(state, mask, ctx=None):
+        # Alg. 1: select with r(t−1) (line 4), update the EMA (line 5),
+        # aggregate with the *updated* r(t) (line 9).
+        new_rates = update_rates(state.rates, mask, beta)
+        w = unbiased_weights(p, jnp.maximum(new_rates.r, R_MIN), mask)
+        return w, RateTrackState(rates=new_rates)
+
+    return topk_strategy("f3ast", _rate_init(n_clients, clients_per_round),
+                         score, finalize, n_clients=n_clients)
+
+
+@register_strategy("fixed_f3ast")
+def _make_fixed_f3ast(n_clients, p, beta: float = 1e-3,
+                      positively_correlated: bool = False, r_target=None,
+                      clients_per_round: Optional[int] = None
+                      ) -> SelectionStrategy:
+    """Algorithm 2: greedy w.r.t. a *frozen* target rate (falls back to the
+    tracked r(t−1) when no target is given)."""
+    rt_fixed = None if r_target is None else jnp.asarray(r_target, jnp.float32)
+
+    def score(state, key, avail, k_t, ctx=None):
+        rt = rt_fixed if rt_fixed is not None else state.rates.r
+        return marginal_utility(rt, p, positively_correlated)
+
+    def finalize(state, mask, ctx=None):
+        rt = rt_fixed if rt_fixed is not None else state.rates.r
+        w = unbiased_weights(p, jnp.maximum(rt, R_MIN), mask)
+        return w, RateTrackState(rates=update_rates(state.rates, mask, beta))
+
+    return topk_strategy("fixed_f3ast",
+                         _rate_init(n_clients, clients_per_round),
+                         score, finalize, n_clients=n_clients)
+
+
+def _gumbel_score(p):
+    """log p + Gumbel: top-k ⇔ sampling w/o replacement ∝ p_k."""
+
+    def score(state, key, avail, k_t, ctx=None):
+        g = jax.random.gumbel(key, p.shape)
+        return jnp.log(jnp.maximum(p, 1e-12)) + g
+
+    return score
+
+
+@register_strategy("fedavg")
+def _make_fedavg(n_clients, p, beta: float = 1e-3,
+                 clients_per_round: Optional[int] = None) -> SelectionStrategy:
+    """Paper baseline: sample available clients ∝ p_k, plain-mean
+    aggregation (Li et al. scheme II) — biased under intermittent
+    availability, which is the failure mode F3AST's reweighting removes."""
+    return topk_strategy("fedavg", _rate_init(n_clients, clients_per_round),
+                         _gumbel_score(p),
+                         _ema_finalize(beta, uniform_weights),
+                         n_clients=n_clients)
+
+
+@register_strategy("fedavg_weighted")
+def _make_fedavg_weighted(n_clients, p, beta: float = 1e-3,
+                          clients_per_round: Optional[int] = None
+                          ) -> SelectionStrategy:
+    return topk_strategy("fedavg_weighted",
+                         _rate_init(n_clients, clients_per_round),
+                         _gumbel_score(p),
+                         _ema_finalize(beta,
+                                       lambda mask: fedavg_weights(p, mask)),
+                         n_clients=n_clients)
+
+
+@register_strategy("uniform")
+def _make_uniform(n_clients, p, beta: float = 1e-3,
+                  clients_per_round: Optional[int] = None) -> SelectionStrategy:
+    def score(state, key, avail, k_t, ctx=None):
+        return jax.random.uniform(key, avail.shape)
+
+    return topk_strategy("uniform", _rate_init(n_clients, clients_per_round),
+                         score, _ema_finalize(beta, uniform_weights),
+                         n_clients=n_clients)
+
+
+@register_strategy("poc", needs_losses=True)
+def _make_poc(n_clients, p, beta: float = 1e-3, d: int = 30,
+              clients_per_round: Optional[int] = None) -> SelectionStrategy:
+    """Power-of-Choice (Cho et al.): d candidates ∝ p_k, keep the top
+    K_t by current local loss.  Host-only: the two-stage draw consumes
+    fresh per-client losses the compiled engines do not have."""
+
+    def select(state, key, avail, k_t, ctx: Optional[SelectCtx] = None):
+        losses = None if ctx is None else ctx.losses
+        if losses is None:
+            raise ValueError("'poc' needs ctx.losses (fresh per-client "
+                             "losses of the current global model)")
+        mask = sel.poc_select(key, avail, k_t, p, losses, d)
+        new_rates = update_rates(state.rates, mask, beta)
+        return mask, uniform_weights(mask), RateTrackState(rates=new_rates)
+
+    return SelectionStrategy(name="poc",
+                             init=_rate_init(n_clients, clients_per_round),
+                             select=select, n_clients=n_clients,
+                             needs_losses=True, host_only=True)

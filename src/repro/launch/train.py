@@ -1,23 +1,26 @@
-"""Federated training driver (host loop).
+"""Federated training driver (CLI front-end).
 
 Runs the full F3AST system end-to-end: availability process -> selection
-(F3AST / FedAvg / PoC / ...) -> cohort batch assembly -> jitted federated
-round (local SGD + unbiased aggregation + server optimizer) -> metrics /
-checkpoints.  Works for the paper's tasks and for reduced assigned-arch
-configs on CPU; the same round program lowers to the production mesh.
+strategy (F3AST / FedAvg / PoC / any ``register_strategy`` plug-in) ->
+cohort batch assembly -> jitted federated round (local SGD + unbiased
+aggregation + server optimizer) -> metrics / checkpoints.  Works for the
+paper's tasks and for reduced assigned-arch configs on CPU; the same round
+program lowers to the production mesh.
 
-The experiment loop itself lives in :mod:`repro.sim.runner`; this module is
-the CLI plus the availability-string compatibility wrapper.  Scenarios (an
-availability process × K_t budget × task bound together — DESIGN.md §7) are
-the preferred spelling:
+The experiment loop itself lives in :mod:`repro.sim.runner`; this module
+parses the CLI straight into one frozen :class:`repro.sim.spec.RunSpec`
+(JSON-serializable — ``--save-spec``/``--spec`` make any run reproducible
+from a single artifact).  Scenarios (an availability process × K_t budget ×
+task bound together — DESIGN.md §7) are the preferred spelling:
 
   python -m repro.launch.train --scenario diurnal --algo f3ast --rounds 200
   python -m repro.launch.train --task synthetic11 --algo f3ast --rounds 200
   python -m repro.launch.train --task shakespeare --algo fedavg \
       --availability homedevices --server-opt adam
+  python -m repro.launch.train --spec experiments/run.spec.json
   python -m repro.launch.train --arch llama3.2-1b --smoke --rounds 5
 
-For grids over scenarios × algorithms use ``python -m repro.sim.sweep``.
+For grids over scenarios × strategies use ``python -m repro.sim.sweep``.
 """
 from __future__ import annotations
 
@@ -30,19 +33,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import ARCHS, PAPER_TASKS, get_arch
-from ..core import make_algorithm, make_availability
+from ..core import make_availability
 from ..core.fedstep import make_fed_round
+from ..core.strategies import STRATEGY_ALIASES, list_strategies, make_strategy
 from ..models import get_model_api
 from ..optim import make_optimizer
 from ..sim.runner import TrainResult, run_scenario
 from ..sim.scenario import Scenario, list_scenarios
+from ..sim.spec import RunSpec
 
 __all__ = ["TrainResult", "run_federated", "run_arch_smoke", "main"]
 
 
 def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                   availability: str = "homedevices", rounds: Optional[int] = None,
-                  server_opt: str = "sgd", server_lr: float = 1.0,
+                  server_opt: str = "sgd", server_lr: Optional[float] = None,
                   clients_per_round: Optional[int] = None,
                   k_jitter: int = 0, beta: Optional[float] = None,
                   seed: int = 0, eval_every: int = 10,
@@ -52,20 +57,23 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                   engine: str = "device", mesh=None,
                   clients_axis: str = "clients") -> TrainResult:
     """Availability-string front-end: wraps the arguments into an ad-hoc
-    :class:`Scenario` and runs it through :func:`repro.sim.runner.run_scenario`.
+    :class:`Scenario` + :class:`RunSpec` and runs it through
+    :func:`repro.sim.runner.run_spec`.
     """
+    from ..sim.runner import _legacy_server_lr
     sc = Scenario(name=availability, availability=availability,
                   budget="jittered" if k_jitter else "constant",
                   budget_kwargs={"jitter": k_jitter} if k_jitter else {},
                   task=task_id)
-    return run_scenario(sc, algo_name, rounds=rounds, server_opt=server_opt,
-                        server_lr=server_lr, clients_per_round=clients_per_round,
-                        beta=beta, seed=seed, eval_every=eval_every,
-                        ckpt_dir=ckpt_dir, prox_mu=prox_mu,
-                        positively_correlated=positively_correlated,
-                        metrics_path=metrics_path, engine=engine,
-                        mesh=mesh, clients_axis=clients_axis,
-                        log_fn=log_fn)
+    spec = RunSpec(scenario=sc, strategy=algo_name, rounds=rounds,
+                   server_opt=server_opt,
+                   server_lr=_legacy_server_lr(algo_name, server_lr),
+                   clients_per_round=clients_per_round, beta=beta, seed=seed,
+                   eval_every=eval_every, ckpt_dir=ckpt_dir, prox_mu=prox_mu,
+                   positively_correlated=positively_correlated,
+                   metrics_path=metrics_path, engine=engine, mesh=mesh,
+                   clients_axis=clients_axis)
+    return run_scenario(spec, log_fn=log_fn)
 
 
 def run_arch_smoke(arch_id: str, rounds: int = 3, seed: int = 0,
@@ -83,15 +91,16 @@ def run_arch_smoke(arch_id: str, rounds: int = 3, seed: int = 0,
     K, E, B, S = 4, 2, 2, 64
     N = 16
     p = np.full(N, 1.0 / N, np.float32)
-    algo = make_algorithm("f3ast", N, p)
-    algo_state = algo.init()
+    strategy = make_strategy("f3ast", N, p, clients_per_round=K)
+    algo_state = strategy.init(N)
     avail_proc = make_availability("scarce", N, q=0.5)
 
     losses = []
     for t in range(rounds):
         key, k1, k2, kb = jax.random.split(key, 4)
         avail = avail_proc.sample(k1, t)
-        sel, w_full, algo_state = algo.select(algo_state, k2, avail, jnp.asarray(K))
+        sel, w_full, algo_state = strategy.select(algo_state, k2, avail,
+                                                  jnp.asarray(K), None)
         sel_ids = np.flatnonzero(np.asarray(sel))
         ids = (list(sel_ids) + [int(sel_ids[0])] * K)[:K]
         batch = {"tokens": jax.random.randint(kb, (K, E, B, S), 0, cfg.vocab)}
@@ -119,7 +128,9 @@ def main():
                     help="registered scenario key (overrides --availability; "
                          "see python -m repro.sim.sweep --list)")
     ap.add_argument("--algo", default="f3ast",
-                    choices=["f3ast", "fedavg", "fedadam", "poc", "uniform"])
+                    choices=sorted(list_strategies()
+                                   + list(STRATEGY_ALIASES)),
+                    help="registered selection strategy (or alias)")
     ap.add_argument("--availability", default="homedevices")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--server-opt", default=None)
@@ -140,31 +151,37 @@ def main():
     ap.add_argument("--clients-axis", default="clients",
                     help="mesh axis name for the client shard (default "
                          "'clients')")
+    ap.add_argument("--spec", default=None, metavar="PATH",
+                    help="load a RunSpec JSON and run it (the other run "
+                         "flags are ignored)")
+    ap.add_argument("--save-spec", default=None, metavar="PATH",
+                    help="write the assembled RunSpec JSON before running "
+                         "(reproduce later with --spec)")
     args = ap.parse_args()
 
     if args.arch:
         run_arch_smoke(args.arch, rounds=args.rounds or 3, seed=args.seed)
         return
-    server_opt = args.server_opt or ("adam" if args.algo == "fedadam" else "sgd")
-    server_lr = 1e-2 if server_opt in ("adam", "yogi") else 1.0
-    if args.scenario:
-        res = run_scenario(args.scenario, args.algo, rounds=args.rounds,
-                           server_opt=server_opt, server_lr=server_lr,
-                           clients_per_round=args.clients_per_round,
-                           seed=args.seed, ckpt_dir=args.ckpt_dir,
-                           prox_mu=args.prox_mu, engine=args.engine,
-                           mesh=args.mesh, clients_axis=args.clients_axis,
-                           metrics_path=args.metrics_jsonl)
+    if args.spec:
+        spec = RunSpec.load(args.spec)
     else:
-        res = run_federated(task_id=args.task or "synthetic11",
-                            algo_name=args.algo,
-                            availability=args.availability, rounds=args.rounds,
-                            server_opt=server_opt, server_lr=server_lr,
-                            clients_per_round=args.clients_per_round,
-                            seed=args.seed, ckpt_dir=args.ckpt_dir,
-                            prox_mu=args.prox_mu, engine=args.engine,
-                            mesh=args.mesh, clients_axis=args.clients_axis,
-                            metrics_path=args.metrics_jsonl)
+        scenario = args.scenario if args.scenario else Scenario(
+            name=args.availability, availability=args.availability,
+            task=args.task or "synthetic11")
+        # alias resolution (fedadam -> fedavg + adam server) and server-lr
+        # defaulting happen inside the strategy registry at run time
+        spec = RunSpec(scenario=scenario, strategy=args.algo,
+                       rounds=args.rounds,
+                       server_opt=args.server_opt or "sgd",
+                       clients_per_round=args.clients_per_round,
+                       seed=args.seed, ckpt_dir=args.ckpt_dir,
+                       prox_mu=args.prox_mu, engine=args.engine,
+                       mesh=args.mesh, clients_axis=args.clients_axis,
+                       metrics_path=args.metrics_jsonl)
+    if args.save_spec:
+        spec.save(args.save_spec)
+        print(f"wrote {args.save_spec}")
+    res = run_scenario(spec)
     print(json.dumps(res.final_metrics, indent=1))
 
 

@@ -11,6 +11,14 @@ Composes three registries into one experiment spec:
 * :mod:`repro.sim.scenario`  — the :class:`Scenario` dataclass binding
   process × budget × task × algorithm grid, resolvable by string key.
 
+Selection strategies are a fourth registry
+(:mod:`repro.core.strategies`, ``register_strategy``), and one frozen
+:class:`repro.sim.spec.RunSpec` binds everything a run needs — scenario,
+strategy, rounds, server opt, seed, engine/mesh/chunking, eval/ckpt/metrics
+options — JSON-serializable for exact reproduction:
+
+    run_scenario(RunSpec(scenario="diurnal", strategy="f3ast", rounds=200))
+
 Run a scenario grid with streaming per-round JSONL metrics:
 
     python -m repro.sim.sweep --scenarios bernoulli,markov,diurnal \
@@ -25,7 +33,8 @@ from .budgets import (BUDGET_REGISTRY, BandwidthCoupled, BudgetSchedule,
                       make_budget)
 from .scenario import (SCENARIO_REGISTRY, Scenario, get_scenario,
                        list_scenarios, register_scenario)
-from .runner import TrainResult, build_task, run_scenario
+from .spec import RunSpec
+from .runner import TrainResult, build_task, run_scenario, run_spec
 from .engine import (DeviceEngine, build_engine, run_cells_vmapped,
                      run_scenario_device)
 from .engine_sharded import ShardedEngine, resolve_client_mesh

@@ -8,8 +8,9 @@ small paper-scale models the host overhead dominates wall-clock and
 serializes sweep cells.
 
 This module compiles the entire round — availability ``step``, K_t budget
-draw, F3AST/FedAvg selection (r_k EMA update + top-k under the budget
-included), device-side cohort gather from pre-staged client data
+draw, the registered :class:`repro.core.strategies.SelectionStrategy`'s
+pure ``select`` (state update + top-k under the budget included),
+device-side cohort gather from pre-staged client data
 (``data.pipeline.staged_cohort_batch``), and the jitted federated round —
 into one ``lax.scan`` over a *chunk* of rounds.  Metrics stream out
 per-chunk as stacked arrays instead of per-round scalars, so the host
@@ -28,9 +29,10 @@ availability-regime grids in the paper's §4 and the related Markovian-
 availability studies (PAPERS.md).
 
 Not supported on the device path (falls back to the host loop via
-``run_scenario(engine="host")``): Power-of-Choice (needs fresh per-client
-host losses) and per-100-round checkpointing (the engine checkpoints at
-chunk boundaries instead).
+``run_scenario(engine="host")``): strategies registered ``host_only`` /
+``needs_losses`` (e.g. Power-of-Choice's fresh per-client losses) and
+per-100-round checkpointing (the engine checkpoints at chunk boundaries
+instead).
 """
 from __future__ import annotations
 
@@ -44,9 +46,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import save_checkpoint
-from ..core import make_algorithm
 from ..core.fedstep import make_fed_round
 from ..core.selection import cohort_ids_from_mask
+from ..core.strategies import (SelectCtx, get_strategy_entry, make_strategy,
+                               resolve_strategy, strategy_rates)
 from ..data import CohortSampler
 from ..data.pipeline import staged_cohort_batch
 from ..optim import make_optimizer
@@ -54,11 +57,6 @@ from .scenario import Scenario, get_scenario
 
 __all__ = ["DeviceEngine", "build_engine", "run_scenario_device",
            "run_cells_vmapped"]
-
-# Algorithms whose select() is a pure function of (state, key, avail, k_t) —
-# everything except PoC, which needs fresh per-client losses from the host.
-DEVICE_ALGORITHMS = ("f3ast", "fixed_f3ast", "fedavg", "fedavg_weighted",
-                     "uniform")
 
 
 class EngineCarry(NamedTuple):
@@ -93,11 +91,11 @@ class DeviceEngine:
     no-op) — it is the scenario-parameter axis `run_cells_vmapped` sweeps.
     """
 
-    def __init__(self, *, avail_model, budget, algo, staged, fed_round,
+    def __init__(self, *, avail_model, budget, strategy, staged, fed_round,
                  init_params, opt, client_lr, local_steps, local_batch):
         self.avail_model = avail_model
         self.budget = budget
-        self.algo = algo
+        self.strategy = strategy
         self.k_max = budget.k_max
         self.n_clients = int(staged.counts.shape[0])
 
@@ -107,8 +105,8 @@ class DeviceEngine:
             avail_state, avail = avail_model.step(k_av, carry.avail_state, t)
             k_t = jnp.minimum(budget.sample(k_bud, t),
                               jnp.asarray(k_cap, jnp.int32))
-            sel_mask, w_full, algo_state = algo.select(
-                carry.algo_state, k_sel, avail, k_t)
+            sel_mask, w_full, algo_state = strategy.select(
+                carry.algo_state, k_sel, avail, k_t, SelectCtx(t=t))
             ids, valid = cohort_ids_from_mask(sel_mask, budget.k_max)
             batch = staged_cohort_batch(staged, k_batch, ids, local_steps,
                                         local_batch)
@@ -134,7 +132,8 @@ class DeviceEngine:
                 params = init_params(key)
                 return EngineCarry(key=key, params=params,
                                    opt_state=opt.init(params),
-                                   algo_state=algo.init(r0=r0),
+                                   algo_state=strategy.init(self.n_clients,
+                                                            r0=r0),
                                    avail_state=avail_model.init())
             return init_carry
 
@@ -159,20 +158,23 @@ class DeviceEngine:
 def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  seed: int = 0, clients_per_round: Optional[int] = None,
                  beta: Optional[float] = None, server_opt: str = "sgd",
-                 server_lr: float = 1.0, prox_mu: float = 0.0,
+                 server_lr: Optional[float] = None, prox_mu: float = 0.0,
                  positively_correlated: bool = False,
                  fed_mode: str = "parallel",
-                 mesh=None, clients_axis: str = "clients"):
-    """Build the compiled cell for one (scenario × algorithm).
+                 mesh=None, clients_axis: str = "clients",
+                 strategy_kwargs=None):
+    """Build the compiled cell for one (scenario × strategy).
 
     Returns ``(engine, ctx)`` where ``ctx`` carries the task pieces the
     drivers need host-side (eval fns, test batch, rounds default, N).
     ``seed`` here selects the *data* realization; per-cell model seeds are
-    what ``init_carry`` takes.
+    what ``init_carry`` takes.  ``algo_name`` is resolved through the
+    strategy registry (aliases like ``fedadam`` rewrite to their base
+    strategy + server optimizer; unknown names raise ``KeyError``).
 
     ``mesh`` (a Mesh, a shard count, or ``<= 0`` for every device) selects
     the client-sharded engine (:mod:`repro.sim.engine_sharded`): the N
-    dimension of availability state, rates, selection, and staged data is
+    dimension of availability state, selection, and staged data is
     partitioned over the ``clients_axis`` mesh axis.  Same seed ⇒ same
     selection masks / rates / losses as the unsharded engine.
     """
@@ -181,12 +183,11 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
 
     mesh = resolve_client_mesh(mesh, clients_axis)
     sc = get_scenario(scenario)
-    if algo_name == "fedadam":
-        algo_name, server_opt = "fedavg", "adam"
-        server_lr = 1e-2 if server_lr == 1.0 else server_lr
-    if algo_name not in DEVICE_ALGORITHMS:
+    algo_name, server_opt, server_lr = resolve_strategy(algo_name, server_opt,
+                                                        server_lr)
+    if get_strategy_entry(algo_name).host_only:
         raise ValueError(
-            f"algorithm {algo_name!r} is host-only (needs per-round host "
+            f"strategy {algo_name!r} is host-only (needs per-round host "
             f"state); use run_scenario(engine='host')")
     task, fed, init, loss, acc = build_task(sc.task, seed,
                                             **dict(sc.task_kwargs))
@@ -197,14 +198,17 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
 
     avail_model = sc.build_availability(n, p=p)
     budget = sc.build_budget(default_k=m)
-    algo = make_algorithm(algo_name, n, p, beta=beta,
-                          positively_correlated=positively_correlated)
+    # engine-supplied defaults; explicit strategy_kwargs win on overlap
+    hyper = dict(beta=beta, positively_correlated=positively_correlated,
+                 clients_per_round=m)
+    hyper.update(strategy_kwargs or {})
+    strategy = make_strategy(algo_name, n, p, **hyper)
     opt = make_optimizer(server_opt, lr=server_lr)
 
     sampler = CohortSampler(fed, cohort_size=budget.k_max,
                             local_steps=task.local_steps,
                             local_batch=task.local_batch, seed=seed)
-    common = dict(avail_model=avail_model, budget=budget, algo=algo,
+    common = dict(avail_model=avail_model, budget=budget, strategy=strategy,
                   init_params=init, opt=opt, client_lr=task.client_lr,
                   local_steps=task.local_steps,
                   local_batch=task.local_batch)
@@ -225,7 +229,8 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
         fed_round = make_fed_round(loss, opt, mode=fed_mode, prox_mu=prox_mu)
         engine = DeviceEngine(staged=sampler.stage_device(),
                               fed_round=fed_round, **common)
-    engine.set_r0(m / n)
+    # r0 needs no pinning here: make_strategy received clients_per_round, so
+    # the built-in strategies' init() self-calibrates to the same M/N.
 
     ctx = dict(scenario=sc, task=task, n_clients=n,
                rounds_default=sc.rounds or task.rounds,
@@ -233,6 +238,15 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                test_batch={k: jnp.asarray(v)
                            for k, v in fed.test_batch().items()})
     return engine, ctx
+
+
+def _final_rates(engine, carry, n_real: int) -> np.ndarray:
+    """Tracked (..., N) rates from the carry, NaN for rate-free strategies."""
+    r = strategy_rates(engine.strategy, carry.algo_state)
+    if r is None:
+        shape = np.shape(carry.key)[:-1] + (n_real,)   # vmapped cell axes
+        return np.full(shape, np.nan, np.float32)
+    return np.asarray(r)[..., :n_real]
 
 
 def _chunk_spans(rounds: int, chunk_size: int):
@@ -260,6 +274,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
                         metrics_path: Optional[str] = None,
                         fed_mode: str = "parallel",
                         mesh=None, clients_axis: str = "clients",
+                        strategy_kwargs=None, algo_label: Optional[str] = None,
                         log_fn=print):
     """Device-resident drop-in for ``runner.run_scenario``.
 
@@ -285,13 +300,14 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                server_lr=server_lr, prox_mu=prox_mu,
                                positively_correlated=positively_correlated,
                                fed_mode=fed_mode, mesh=mesh,
-                               clients_axis=clients_axis)
+                               clients_axis=clients_axis,
+                               strategy_kwargs=strategy_kwargs)
     engine_label = "sharded" if mesh is not None else "device"
     n_real = engine.n_clients
     sc, task = ctx["scenario"], ctx["task"]
     rounds = rounds or ctx["rounds_default"]
     chunk_size = max(1, min(chunk_size or eval_every, eval_every, rounds))
-    algo_label = algo_name
+    algo_label = algo_label or algo_name
 
     carry = engine.init_carry(jax.random.PRNGKey(seed))
 
@@ -350,8 +366,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
             if ckpt_dir:
                 save_checkpoint(ckpt_dir, t1,
                                 {"params": carry.params,
-                                 "rates": np.asarray(
-                                     carry.algo_state.rates.r)[:n_real]})
+                                 "rates": _final_rates(engine, carry, n_real)})
     finally:
         if metrics_file:
             metrics_file.close()
@@ -368,7 +383,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
     if steady_rounds > 0 and t_end > t_first_chunk:
         final["steady_rounds_per_s"] = steady_rounds / (t_end - t_first_chunk)
     return TrainResult(history=history, final_metrics=final,
-                       rates=np.asarray(carry.algo_state.rates.r)[:n_real],
+                       rates=_final_rates(engine, carry, n_real),
                        empirical_rates=sel_history.mean(0),
                        sel_history=sel_history)
 
@@ -431,7 +446,7 @@ def run_cells_vmapped(scenario: Union[str, Scenario],
                   rounds=rounds, test_loss=test_loss, test_acc=test_acc,
                   train_loss=train_loss,             # (cells, T)
                   sel_history=sel_history,           # (cells, T, N)
-                  rates=np.asarray(carries.algo_state.rates.r),
+                  rates=_final_rates(engine, carries, engine.n_clients),
                   empirical_rates=sel_history.mean(axis=1),
                   wall_s=t_end - t_start)
     steady_rounds = rounds - min(chunk_size, rounds)

@@ -7,12 +7,17 @@ This module partitions that client dimension over a 1-D ``("clients",)``
 mesh (``launch.mesh.make_client_mesh``) and runs the whole chunked round
 loop inside ``shard_map``:
 
-* **state** — availability-process state, the r_k rate EMA, and the staged
-  client arrays live sharded over the ``clients`` axis (padded to a multiple
-  of the mesh size; padded clients are never available and never selected);
-* **selection** — per-shard scores feed the distributed top-k in
+* **state** — availability-process state and the staged client arrays live
+  sharded over the ``clients`` axis (padded to a multiple of the mesh size;
+  padded clients are never available and never selected); the selection
+  strategy's own state (e.g. the r_k rate EMA) stays replicated at real-N
+  shape — it is O(N) elementwise data, a few hundred KB at N = 100k;
+* **selection** — the generic blockwise adapter
+  :func:`repro.core.strategies.as_sharded` wraps any registered strategy's
+  ``score``/``finalize`` pieces around the distributed top-k in
   :func:`repro.core.selection.sharded_topk_mask` (per-shard top-k_max →
-  ``all_gather`` → global K_t cut with the single-device tie-break);
+  ``all_gather`` → global K_t cut with the single-device tie-break) — no
+  per-algorithm sharded branches anywhere;
 * **cohort** — each shard contributes the staged rows it owns for the
   selected cohort (masked gather + ``psum``), then the cohort-slot axis is
   itself laid over the mesh so local SGD for the cohort runs data-parallel
@@ -42,9 +47,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..core.algorithms import AlgoState
-from ..core.rates import RateState
 from ..core.selection import sharded_cohort_ids_from_mask
+from ..core.strategies import SelectCtx, as_sharded
 from ..sharding.rules import pad_client_dim, to_named_shardings
 from .engine import EngineCarry, RoundStream
 
@@ -72,9 +76,10 @@ class ShardedEngine:
     """
 
     def __init__(self, *, mesh: Mesh, axis: str = "clients", avail_model,
-                 budget, algo, staged, fed_round, init_params, opt,
+                 budget, strategy, staged, fed_round, init_params, opt,
                  client_lr, local_steps, local_batch, n_clients: int):
         self.mesh, self.axis = mesh, axis
+        self.strategy = strategy
         self.n_clients = int(n_clients)
         self.k_max = budget.k_max
         self._staged = staged
@@ -108,6 +113,9 @@ class ShardedEngine:
 
         slot_mask = (jnp.arange(k_pad) < k).astype(jnp.float32)
         e, b = local_steps, local_batch
+        # generic blockwise selection: any strategy with a score/finalize
+        # decomposition runs here without engine-specific code
+        select_blk = as_sharded(strategy, axis=axis, k_max=k, n_pad=n_pad)
 
         def round_step(carry, t, k_cap, arrays, counts):
             # Same split order as the host loop / device engine — parity.
@@ -124,9 +132,8 @@ class ShardedEngine:
 
             k_t = jnp.minimum(budget.sample(k_bud, t),
                               jnp.asarray(k_cap, jnp.int32))
-            mask_blk, w_blk, algo_state = algo.select_sharded(
-                carry.algo_state, k_sel, avail_blk, k_t, axis=axis, k_max=k,
-                n_pad=n_pad)
+            mask_blk, w_blk, algo_state = select_blk(
+                carry.algo_state, k_sel, avail_blk, k_t, SelectCtx(t=t))
 
             ids, valid = sharded_cohort_ids_from_mask(mask_blk, k, axis, n)
             if k_pad > k:           # shard-count padding: zero-weight repeats
@@ -178,14 +185,17 @@ class ShardedEngine:
                 lambda c, t: round_step(c, t, k_cap, arrays, counts),
                 carry, ts)
 
-        # spec trees (structure known from shape-only evaluation)
+        # spec trees (structure known from shape-only evaluation).  The
+        # strategy state is replicated (real-N shape on every shard): the
+        # generic adapter computes it full-width, identically per shard.
         params_s = jax.eval_shape(init_params, jax.random.PRNGKey(0))
         opt_s = jax.eval_shape(opt.init, params_s)
+        algo_s = jax.eval_shape(lambda: strategy.init(self.n_clients))
         carry_specs = EngineCarry(
             key=P(),
             params=jax.tree.map(lambda _: P(), params_s),
             opt_state=jax.tree.map(lambda _: P(), opt_s),
-            algo_state=AlgoState(rates=RateState(r=P(axis), t=P())),
+            algo_state=jax.tree.map(lambda _: P(), algo_s),
             avail_state=jax.tree.map(lambda f: P(axis) if f else P(), flags),
         )
         stream_specs = RoundStream(sel_mask=P(None, axis), k_t=P(),
@@ -201,11 +211,9 @@ class ShardedEngine:
         def _make_init(r0):
             def init_carry(key):
                 params = init_params(key)
-                a0 = algo.init(r0=r0)
                 carry = EngineCarry(
                     key=key, params=params, opt_state=opt.init(params),
-                    algo_state=AlgoState(rates=RateState(
-                        r=pad_client_dim(a0.rates.r, n_pad), t=a0.rates.t)),
+                    algo_state=strategy.init(self.n_clients, r0=r0),
                     avail_state=jax.tree.map(
                         lambda leaf, f: pad_client_dim(leaf, n_pad)
                         if f else jnp.asarray(leaf),

@@ -1,28 +1,40 @@
-"""Scenario executor: one (scenario, algorithm) cell end-to-end.
+"""Scenario executor: one (scenario × strategy) cell end-to-end.
 
 This is the execution front-end behind both ``repro.launch.train`` and
-``repro.sim.sweep``.  Two engines implement the same cell semantics
-(DESIGN.md §7):
+``repro.sim.sweep``.  The canonical entry point takes a single frozen
+:class:`repro.sim.spec.RunSpec`:
+
+    spec = RunSpec(scenario="diurnal", strategy="f3ast", rounds=200)
+    result = run_scenario(spec)
+
+The old kwarg spelling ``run_scenario(scenario, algo_name, rounds=...,
+...)`` is kept as a thin deprecation shim for one PR — it builds the
+equivalent RunSpec and emits a ``DeprecationWarning``.
+
+Three engines implement the same cell semantics (DESIGN.md §7), selected
+by ``spec.engine`` / ``spec.mesh``:
 
 * ``engine="device"`` (default) — the device-resident chunked-``lax.scan``
-  engine in :mod:`repro.sim.engine`: availability step, selection, budget,
-  cohort gather, and the federated round all compile into one program;
-  metrics stream out per-chunk.
+  engine in :mod:`repro.sim.engine`; with ``mesh`` set, the client-sharded
+  variant (:mod:`repro.sim.engine_sharded`).
 * ``engine="host"`` — the reference Python loop below: availability step →
-  selection (F3AST / FedAvg / PoC / fixed-policy) → static-shape cohort
-  batch → jitted federated round → per-round metrics.  Kept as the
-  readable, debuggable ground truth the engine is parity-tested against,
-  and as the only path for host-state algorithms (PoC).
+  strategy ``select`` → static-shape cohort batch → jitted federated round
+  → per-round metrics.  Kept as the readable, debuggable ground truth the
+  engines are parity-tested against, and the only path for host-only
+  strategies (PoC's fresh per-client losses).
 
-Both paths split the per-round PRNG key identically (avail / select /
-budget / batch) and draw minibatch indices from the same
+All paths resolve the strategy through ONE registry call
+(``repro.core.strategies.resolve_strategy``) before dispatch, so aliases
+like ``fedadam`` and unknown-name errors behave identically on every
+engine.  Both execution paths split the per-round PRNG key identically
+(avail / select / budget / batch) and draw minibatch indices from the same
 ``jax.random.randint``, so selection masks, rates, and batches match
 bit-for-bit for the same seed (``tests/test_engine.py``).
 
-Per-round metrics stream to JSONL when ``metrics_path`` is given: one
-self-describing record per round (scenario, algorithm, K_t, availability and
-selection counts, train loss) plus test metrics on eval rounds, flushed as
-written so long sweeps are tail-able and crash-safe.
+Per-round metrics stream to JSONL when ``spec.metrics_path`` is given: one
+self-describing record per round (scenario, algorithm, K_t, availability
+and selection counts, train loss) plus test metrics on eval rounds,
+flushed as written so long sweeps are tail-able and crash-safe.
 """
 from __future__ import annotations
 
@@ -40,21 +52,23 @@ import numpy as np
 
 from ..checkpoint import save_checkpoint
 from ..configs import PAPER_TASKS
-from ..core import make_algorithm
 from ..core.fedstep import make_fed_round
+from ..core.strategies import (SelectCtx, get_strategy_entry, make_strategy,
+                               strategy_rates)
 from ..data import CohortSampler, FederatedData
 from ..data.synthetic import (make_char_lm_federated, make_synthetic_federated,
                               make_vision_federated)
 from ..models import resnet, rnn, softmax_reg
 from ..optim import make_optimizer
 from .scenario import Scenario, get_scenario
+from .spec import RunSpec
 
 
 @dataclasses.dataclass
 class TrainResult:
     history: list            # per-eval-round dicts
     final_metrics: dict
-    rates: np.ndarray        # learned r(T)
+    rates: np.ndarray        # learned r(T) (NaN for rate-free strategies)
     empirical_rates: np.ndarray
     sel_history: Optional[np.ndarray] = None   # (T, N) bool selection masks
 
@@ -101,91 +115,148 @@ def build_task(task_id: str, seed: int, **task_kwargs):
     return task, FederatedData(clients), init, loss, acc
 
 
-def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
-                 rounds: Optional[int] = None, server_opt: str = "sgd",
-                 server_lr: float = 1.0, clients_per_round: Optional[int] = None,
-                 beta: Optional[float] = None, seed: int = 0,
-                 eval_every: int = 10, ckpt_dir: Optional[str] = None,
-                 prox_mu: float = 0.0, positively_correlated: bool = False,
-                 metrics_path: Optional[str] = None,
-                 engine: str = "device", chunk_size: Optional[int] = None,
-                 mesh=None, clients_axis: str = "clients",
-                 log_fn: Callable = print) -> TrainResult:
-    """Run one (scenario × algorithm) cell and return its TrainResult.
+# Kwargs the deprecated run_scenario(scenario, algo, **kwargs) spelling
+# accepted, mapped onto their RunSpec fields.
+_LEGACY_FIELDS = ("rounds", "server_opt", "clients_per_round", "beta",
+                  "seed", "eval_every", "ckpt_dir", "prox_mu",
+                  "positively_correlated", "metrics_path", "engine",
+                  "chunk_size", "mesh", "clients_axis", "strategy_kwargs")
 
-    ``scenario`` is a registry key or a Scenario object.  Precedence for the
-    round count: explicit ``rounds`` > ``scenario.rounds`` > task default.
 
-    ``engine`` selects the execution path: ``"device"`` (default) compiles
-    the whole round loop via :mod:`repro.sim.engine`; ``"host"`` runs the
-    reference Python loop.  ``mesh`` (a Mesh or a shard count; ``<= 0`` =
-    every device) additionally partitions the client dimension over a
-    ``clients_axis`` mesh axis (:mod:`repro.sim.engine_sharded`).  Host-only
-    features (PoC's fresh per-client losses) fall back to the host loop with
-    an explicit warning; the engine that actually ran is reported in
+def _legacy_server_lr(algo_name: str, server_lr) -> Optional[float]:
+    """Old-signature server_lr semantics: the default was 1.0, and only the
+    alias rewrite (fedadam) treated that value as "unset" (-> 1e-2).  A
+    plain adam/yogi run with the old default therefore really trained at
+    lr 1.0 — keep that, rather than silently re-defaulting to 1e-2."""
+    from ..core.strategies import STRATEGY_ALIASES
+    if server_lr is None:
+        server_lr = 1.0
+    if server_lr == 1.0 and str(algo_name).lower() in STRATEGY_ALIASES:
+        return None            # let the alias fill its own default
+    return server_lr
+
+
+def _legacy_spec(scenario, algo_name, kwargs) -> RunSpec:
+    warnings.warn(
+        "run_scenario(scenario, algo_name, **kwargs) is deprecated; build "
+        "a repro.sim.RunSpec and call run_scenario(spec)",
+        DeprecationWarning, stacklevel=3)
+    unknown = set(kwargs) - set(_LEGACY_FIELDS) - {"server_lr"}
+    if unknown:
+        raise TypeError(f"run_scenario() got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    algo_name = algo_name or "f3ast"
+    server_lr = _legacy_server_lr(algo_name, kwargs.pop("server_lr", None))
+    fields = {k: v for k, v in kwargs.items() if k in _LEGACY_FIELDS}
+    return RunSpec(scenario=scenario, strategy=algo_name,
+                   server_lr=server_lr, **fields)
+
+
+def run_scenario(spec: Union[RunSpec, str, Scenario] = None,
+                 algo_name: Optional[str] = None, *,
+                 log_fn: Callable = print, **kwargs) -> TrainResult:
+    """Run one (scenario × strategy) cell and return its TrainResult.
+
+    Canonical form: ``run_scenario(spec)`` with a :class:`RunSpec`
+    (``log_fn`` is the only runtime-side argument — it is not
+    configuration, so it is not part of the spec).  The deprecated
+    ``run_scenario(scenario, algo_name, **kwargs)`` form still works for
+    one PR and forwards here.
+    """
+    if spec is None and "scenario" in kwargs:
+        spec = kwargs.pop("scenario")   # old first parameter, by keyword
+    if spec is None:
+        raise TypeError("run_scenario() needs a RunSpec (or the deprecated "
+                        "scenario key/Scenario first argument)")
+    if not isinstance(spec, RunSpec):
+        spec = _legacy_spec(spec, algo_name, kwargs)
+    elif algo_name is not None or kwargs:
+        raise TypeError("with a RunSpec, pass overrides via spec.replace("
+                        "...) instead of extra arguments")
+    return run_spec(spec, log_fn=log_fn)
+
+
+def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
+    """Execute a :class:`RunSpec` on the engine it names.
+
+    ``spec.resolved()`` validates up front — unknown strategy/scenario
+    keys raise ``KeyError`` (listing the registered names) before anything
+    compiles, and strategy aliases resolve once for every engine.
+    Host-only strategies (``needs_losses``/``host_only`` registry flags)
+    fall back from the device engines to the host loop with an explicit
+    warning; the engine that actually ran is reported in
     ``final_metrics["engine"]``.
     """
-    assert engine in ("device", "host"), engine
-    if engine == "host" and mesh is not None:
+    rs = spec.resolved()
+    algo_label = spec.strategy       # requested name (pre-alias), for logs
+    sc = get_scenario(rs.scenario)
+    entry = get_strategy_entry(rs.strategy)
+    if rs.engine == "host" and rs.mesh is not None:
         raise ValueError("mesh= shards the device engine's client dimension; "
                          "it cannot apply to engine='host' (drop mesh or use "
                          "engine='device')")
-    sc = get_scenario(scenario)
     fallback_reason = None
-    if engine == "device" and algo_name == "poc":
-        fallback_reason = ("Power-of-Choice needs fresh per-client losses "
-                           "computed on the host each round")
+    if rs.engine == "device" and entry.host_only:
+        fallback_reason = (
+            f"strategy {algo_label!r} needs fresh per-client losses "
+            f"computed on the host each round" if entry.needs_losses else
+            f"strategy {algo_label!r} is registered host-only")
         warnings.warn(
-            f"algorithm 'poc' is not supported by the "
-            f"{'sharded' if mesh is not None else 'device'} engine "
+            f"algorithm {algo_label!r} is not supported by the "
+            f"{'sharded' if rs.mesh is not None else 'device'} engine "
             f"({fallback_reason}); falling back to engine='host'",
             stacklevel=2)
-    if engine == "device" and fallback_reason is None:
+    if rs.engine == "device" and fallback_reason is None:
         from .engine import run_scenario_device   # lazy: engine ↔ runner
         return run_scenario_device(
-            sc, algo_name, rounds=rounds, server_opt=server_opt,
-            server_lr=server_lr, clients_per_round=clients_per_round,
-            beta=beta, seed=seed, eval_every=eval_every,
-            chunk_size=chunk_size, ckpt_dir=ckpt_dir, prox_mu=prox_mu,
-            positively_correlated=positively_correlated,
-            metrics_path=metrics_path, mesh=mesh, clients_axis=clients_axis,
-            log_fn=log_fn)
-    algo_label = algo_name          # requested name, kept for metrics/logs
-    if algo_name == "fedadam":      # FedAdam = FedAvg selection + Adam server
-        algo_name, server_opt = "fedavg", "adam"
-        server_lr = 1e-2 if server_lr == 1.0 else server_lr
-    task, fed, init, loss, acc = build_task(sc.task, seed, **dict(sc.task_kwargs))
-    rounds = rounds or sc.rounds or task.rounds
-    M = clients_per_round or task.clients_per_round
-    beta = beta if beta is not None else task.beta
+            sc, rs.strategy, algo_label=algo_label, rounds=rs.rounds,
+            server_opt=rs.server_opt, server_lr=rs.server_lr,
+            clients_per_round=rs.clients_per_round, beta=rs.beta,
+            seed=rs.seed, eval_every=rs.eval_every,
+            chunk_size=rs.chunk_size, ckpt_dir=rs.ckpt_dir,
+            prox_mu=rs.prox_mu,
+            positively_correlated=rs.positively_correlated,
+            metrics_path=rs.metrics_path, fed_mode=rs.fed_mode,
+            mesh=rs.mesh, clients_axis=rs.clients_axis,
+            strategy_kwargs=rs.strategy_kwargs, log_fn=log_fn)
+
+    task, fed, init, loss, acc = build_task(sc.task, rs.seed,
+                                            **dict(sc.task_kwargs))
+    rounds = rs.rounds or sc.rounds or task.rounds
+    M = rs.clients_per_round or task.clients_per_round
+    beta = rs.beta if rs.beta is not None else task.beta
     p = fed.p
     N = fed.n_clients
 
     avail_model = sc.build_availability(N, p=p)
     budget = sc.build_budget(default_k=M)
     K_cohort = budget.k_max          # static cohort size: jit never resizes
-    algo = make_algorithm(algo_name, N, p, beta=beta,
-                          positively_correlated=positively_correlated)
-    algo_state = algo.init(r0=M / N)   # calibrated arbitrary init (Thm B.1)
+    # engine-supplied defaults; explicit strategy_kwargs win on overlap
+    hyper = dict(beta=beta, positively_correlated=rs.positively_correlated,
+                 clients_per_round=M)
+    hyper.update(rs.strategy_kwargs)
+    strategy = make_strategy(rs.strategy, N, p, **hyper)
+    algo_state = strategy.init(N)    # built-ins calibrate r0 = M/N (Thm B.1)
 
-    opt = make_optimizer(server_opt, lr=server_lr)
-    key = jax.random.PRNGKey(seed)
+    opt = make_optimizer(rs.server_opt, lr=rs.server_lr)
+    key = jax.random.PRNGKey(rs.seed)
     params = init(key)
     opt_state = opt.init(params)
     fed_round = jax.jit(make_fed_round(loss, opt, mode="parallel",
-                                       prox_mu=prox_mu))
+                                       prox_mu=rs.prox_mu))
     eval_loss = jax.jit(loss)
     eval_acc = jax.jit(acc)
 
     sampler = CohortSampler(fed, cohort_size=K_cohort,
                             local_steps=task.local_steps,
-                            local_batch=task.local_batch, seed=seed)
+                            local_batch=task.local_batch, seed=rs.seed)
     test_batch = {k: jnp.asarray(v) for k, v in fed.test_batch().items()}
     avail_state = avail_model.init()
 
-    # PoC: fresh per-client losses of the current global model (the paper's
-    # PoC sends the model to d candidates who report F_k(w_t); at paper scale
-    # we evaluate every client's train sample directly).
+    # PoC-style strategies: fresh per-client losses of the current global
+    # model (the paper's PoC sends the model to d candidates who report
+    # F_k(w_t); at paper scale we evaluate every client's train sample
+    # directly).
     def fresh_losses(params):
         out = np.zeros(N, np.float32)
         for k in range(N):
@@ -195,9 +266,10 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
         return out
 
     metrics_file = None
-    if metrics_path:
-        os.makedirs(os.path.dirname(os.path.abspath(metrics_path)), exist_ok=True)
-        metrics_file = open(metrics_path, "w")
+    if rs.metrics_path:
+        os.makedirs(os.path.dirname(os.path.abspath(rs.metrics_path)),
+                    exist_ok=True)
+        metrics_file = open(rs.metrics_path, "w")
 
     history = []
     sel_history = np.zeros((rounds, N), bool)
@@ -211,9 +283,10 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
             avail_state, avail = avail_model.step(k_av, avail_state, t)
             k_t = budget.sample(k_bud, t)
             losses_in = (jnp.asarray(fresh_losses(params))
-                         if algo.name == "poc" else None)
-            sel_mask, weights_full, algo_state = algo.select(
-                algo_state, k_sel, avail, k_t, losses_in)
+                         if strategy.needs_losses else None)
+            sel_mask, weights_full, algo_state = strategy.select(
+                algo_state, k_sel, avail, k_t,
+                SelectCtx(t=t, losses=losses_in))
             sel_ids = np.flatnonzero(np.asarray(sel_mask))
             sel_history[t, sel_ids] = True
 
@@ -232,7 +305,7 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                           n_selected=int(len(sel_ids)),
                           train_loss=float(metrics.loss),
                           delta_norm=float(metrics.delta_norm))
-            if t % eval_every == 0 or t == rounds - 1:
+            if t % rs.eval_every == 0 or t == rounds - 1:
                 record["test_loss"] = float(eval_loss(params, test_batch))
                 record["test_acc"] = float(eval_acc(params, test_batch))
                 history.append(dict(round=t, train_loss=record["train_loss"],
@@ -248,9 +321,13 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
             if metrics_file:
                 metrics_file.write(json.dumps(record) + "\n")
                 metrics_file.flush()
-            if ckpt_dir and (t + 1) % 100 == 0:
-                save_checkpoint(ckpt_dir, t + 1,
-                                {"params": params, "rates": algo_state.rates.r})
+            if rs.ckpt_dir and (t + 1) % 100 == 0:
+                r_now = strategy_rates(strategy, algo_state)
+                save_checkpoint(rs.ckpt_dir, t + 1,
+                                {"params": params,
+                                 "rates": (np.full(N, np.nan, np.float32)
+                                           if r_now is None
+                                           else np.asarray(r_now))})
     finally:
         if metrics_file:
             metrics_file.close()
@@ -264,7 +341,10 @@ def run_scenario(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     # steady-state throughput: exclude round 0 (XLA compile of fed_round)
     if rounds > 1 and t_first_round is not None and t_end > t_first_round:
         final["steady_rounds_per_s"] = (rounds - 1) / (t_end - t_first_round)
+    r_final = strategy_rates(strategy, algo_state)
+    rates = (np.full(N, np.nan, np.float32) if r_final is None
+             else np.asarray(r_final))
     return TrainResult(history=history, final_metrics=final,
-                       rates=np.asarray(algo_state.rates.r),
+                       rates=rates,
                        empirical_rates=sel_history.mean(0),
                        sel_history=sel_history)

@@ -1,0 +1,139 @@
+"""RunSpec: one frozen, JSON-round-trippable description of a run.
+
+``run_scenario`` used to thread ~18 loose kwargs through three engines;
+a :class:`RunSpec` replaces that sprawl with a single frozen dataclass
+covering the full cell configuration — scenario, selection strategy,
+round count, server optimizer, seed, engine/mesh/chunking, and the
+eval/checkpoint/metrics options.  One spec drives every engine:
+
+    spec = RunSpec(scenario="diurnal", strategy="f3ast", rounds=200)
+    result = run_scenario(spec)                      # device engine
+    result = run_scenario(spec.replace(engine="host"))
+
+Sweeps are grids of ``dataclasses.replace``d specs (``sim.sweep``), the
+CLIs parse straight into one, and ``to_json``/``from_json`` make a run
+reproducible from a single artifact:
+
+    RunSpec.from_json(spec.to_json()) == spec        # exact round-trip
+
+``scenario`` may be a registry key (serializes as the string) or an inline
+:class:`Scenario` (serializes as its field dict).  ``mesh`` may be a shard
+count (serializable) or a prebuilt ``jax.sharding.Mesh`` (runtime only —
+serialization rejects it).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Mapping, Optional, Union
+
+import numpy as np
+
+from ..core.strategies import resolve_strategy
+from .scenario import Scenario, get_scenario
+
+__all__ = ["RunSpec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    """Everything one (scenario × strategy) cell needs, as plain data."""
+
+    # what to run
+    scenario: Union[str, Scenario] = "scarce"   # registry key or inline spec
+    strategy: str = "f3ast"                     # STRATEGY_REGISTRY key/alias
+    strategy_kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    rounds: Optional[int] = None                # None -> scenario/task default
+    clients_per_round: Optional[int] = None     # None -> task default M
+    beta: Optional[float] = None                # rate-EMA step; task default
+    positively_correlated: bool = False         # H(r) variant (paper Eq. 3)
+    # server side
+    server_opt: str = "sgd"
+    server_lr: Optional[float] = None           # None -> opt default (resolve)
+    prox_mu: float = 0.0                        # FedProx proximal coefficient
+    # execution
+    seed: int = 0
+    engine: str = "device"                      # "device" | "host"
+    mesh: Optional[Any] = None                  # shard count | Mesh | None
+    clients_axis: str = "clients"
+    chunk_size: Optional[int] = None            # device engine rounds/chunk
+    fed_mode: str = "parallel"                  # cohort execution (DESIGN §4)
+    # outputs
+    eval_every: int = 10
+    ckpt_dir: Optional[str] = None
+    metrics_path: Optional[str] = None          # per-round JSONL stream
+
+    def replace(self, **overrides) -> "RunSpec":
+        return dataclasses.replace(self, **overrides)
+
+    def resolved(self) -> "RunSpec":
+        """Validate + normalize: alias resolution (``fedadam`` → fedavg +
+        Adam server) and server-lr defaulting happen HERE, once, before any
+        engine dispatch; unknown strategy/scenario keys raise ``KeyError``
+        listing the registered names (fail fast, never inside a compiled
+        loop)."""
+        name, server_opt, server_lr = resolve_strategy(
+            self.strategy, self.server_opt, self.server_lr)
+        get_scenario(self.scenario)            # KeyError w/ known keys
+        if self.engine not in ("device", "host"):
+            raise ValueError(f"engine must be 'device' or 'host', "
+                             f"got {self.engine!r}")
+        return dataclasses.replace(self, strategy=name,
+                                   server_opt=server_opt,
+                                   server_lr=server_lr)
+
+    # -- JSON round-trip ----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        if self.mesh is not None and not isinstance(self.mesh, int):
+            raise TypeError(
+                "RunSpec.mesh must be None or an int shard count to "
+                f"serialize (got {type(self.mesh).__name__}); prebuilt Mesh "
+                "objects are runtime-only")
+        return _plain(dataclasses.asdict(self))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "RunSpec":
+        d = dict(d)
+        sc = d.get("scenario")
+        if isinstance(sc, Mapping):
+            sc = dict(sc)
+            if "algorithms" in sc:
+                sc["algorithms"] = tuple(sc["algorithms"])
+            d["scenario"] = Scenario(**sc)
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise KeyError(f"unknown RunSpec fields {sorted(unknown)}")
+        return cls(**d)
+
+    def to_json(self, **dumps_kwargs) -> str:
+        dumps_kwargs.setdefault("indent", 1)
+        return json.dumps(self.to_dict(), **dumps_kwargs)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "RunSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+
+def _plain(obj):
+    """Recursively coerce numpy scalars/arrays so json.dumps round-trips."""
+    if isinstance(obj, dict):
+        return {k: _plain(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_plain(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, np.generic):
+        return obj.item()
+    if hasattr(obj, "__array__"):      # jax arrays (e.g. an r_target)
+        return np.asarray(obj).tolist()
+    return obj

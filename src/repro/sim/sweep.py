@@ -1,4 +1,4 @@
-"""Scenario × algorithm grid sweep with streaming JSONL metrics.
+"""Scenario × strategy grid sweep with streaming JSONL metrics.
 
 One command regenerates a paper-figure-style grid (Figs. 2–4 structure:
 algorithms compared across availability/budget regimes):
@@ -6,33 +6,51 @@ algorithms compared across availability/budget regimes):
     python -m repro.sim.sweep --scenarios bernoulli,markov,diurnal \
         --algorithms f3ast,fedavg --rounds 3
 
-Each (scenario, algorithm) cell streams per-round records to
-``<out>/<scenario>__<algorithm>.jsonl`` while it runs; a ``summary.json``
-with every cell's final metrics is written at the end.  ``--scenarios all``
-sweeps the whole registry; ``--list`` prints the registry and exits.
+The grid is a base :class:`repro.sim.spec.RunSpec` crossed with
+``dataclasses.replace`` per cell — each (scenario, strategy) cell runs from
+one frozen spec, streams per-round records to
+``<out>/<scenario>__<algorithm>.jsonl`` while it runs, and writes the spec
+itself to ``<out>/<scenario>__<algorithm>.spec.json`` so any cell is
+reproducible from that single artifact (``run_scenario(RunSpec.load(p))``).
+A ``summary.json`` with every cell's final metrics is written at the end.
+``--scenarios all`` sweeps the whole registry; ``--list`` prints the
+registry and exits.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 from typing import Callable, Optional, Sequence
 
 from .runner import run_scenario
 from .scenario import SCENARIO_REGISTRY, get_scenario, list_scenarios
+from .spec import RunSpec
 
 # universe for --algorithms all (fixed_f3ast is excluded: it needs an
-# explicit r_target to differ from plain f3ast)
+# explicit r_target to differ from plain f3ast; fedavg_weighted is a
+# variant of fedavg kept out of the default grid)
 ALGORITHMS = ("f3ast", "fedavg", "fedadam", "poc", "uniform")
 
 
+_UNSET = object()   # "kwarg not passed" — lets base_spec keep its value
+
+
 def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = None,
-              *, rounds: Optional[int] = None, out_dir: str = "experiments/sweep",
-              seed: int = 0, server_opt: str = "sgd", server_lr: float = 1.0,
-              eval_every: Optional[int] = None, engine: str = "device",
-              mesh=None, clients_axis: str = "clients",
+              *, rounds=_UNSET, out_dir: str = "experiments/sweep",
+              seed=_UNSET, server_opt=_UNSET, server_lr=_UNSET,
+              eval_every: Optional[int] = None, engine=_UNSET,
+              mesh=_UNSET, clients_axis=_UNSET,
+              base_spec: Optional[RunSpec] = None,
               log_fn: Callable = print) -> dict:
     """Run the grid; returns {(scenario, algorithm): final_metrics}.
+
+    Every cell is ``dataclasses.replace(base_spec, scenario=...,
+    strategy=..., ...)`` of one base :class:`RunSpec` — pass ``base_spec``
+    to pin any other field (prox_mu, chunk_size, ...) across the grid; the
+    loose keyword arguments cover the common ones and override the base
+    only when explicitly passed.
 
     ``algorithms=None`` uses each scenario's own default grid.  ``rounds``
     overrides every cell (otherwise scenario/task defaults apply) and
@@ -43,6 +61,11 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
     (DESIGN.md §7.2).
     """
     os.makedirs(out_dir, exist_ok=True)
+    overrides = {k: v for k, v in dict(
+        rounds=rounds, seed=seed, server_opt=server_opt,
+        server_lr=server_lr, engine=engine, mesh=mesh,
+        clients_axis=clients_axis).items() if v is not _UNSET}
+    base = dataclasses.replace(base_spec or RunSpec(), **overrides)
     results = {}
     for sc_key in scenarios:
         sc = get_scenario(sc_key)
@@ -50,13 +73,15 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
         for algo in algos:
             cell = f"{sc.name}__{algo}"
             path = os.path.join(out_dir, f"{cell}.jsonl")
-            ev = eval_every or max(1, (rounds or sc.rounds or 150) // 5)
-            res = run_scenario(sc, algo, rounds=rounds, seed=seed,
-                               server_opt=server_opt, server_lr=server_lr,
-                               eval_every=ev, metrics_path=path,
-                               engine=engine, mesh=mesh,
-                               clients_axis=clients_axis,
-                               log_fn=lambda *_: None)
+            ev = eval_every or max(1, (base.rounds or sc.rounds or 150) // 5)
+            spec = dataclasses.replace(base, scenario=sc, strategy=algo,
+                                       eval_every=ev, metrics_path=path)
+            if spec.mesh is None or isinstance(spec.mesh, int):
+                spec.save(os.path.join(out_dir, f"{cell}.spec.json"))
+            else:       # runtime-only Mesh objects are not serializable
+                log_fn(f"sweep,{cell}: mesh is a runtime Mesh object, "
+                       f"skipping {cell}.spec.json")
+            res = run_scenario(spec, log_fn=lambda *_: None)
             results[(sc.name, algo)] = res.final_metrics
             fm = res.final_metrics
             log_fn(f"sweep,{sc.name},{algo},"
@@ -76,11 +101,11 @@ def _parse_list(arg: str, universe: Sequence[str]) -> list:
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
-        description="Scenario × algorithm sweep (see repro/sim/scenario.py)")
+        description="Scenario × strategy sweep (see repro/sim/scenario.py)")
     ap.add_argument("--scenarios", default="bernoulli,markov,diurnal",
                     help="comma-separated scenario keys, or 'all'")
     ap.add_argument("--algorithms", default=None,
-                    help="comma-separated algorithm names, or 'all' "
+                    help="comma-separated strategy names, or 'all' "
                          f"({','.join(ALGORITHMS)}); default: each "
                          "scenario's own grid")
     ap.add_argument("--rounds", type=int, default=None)
@@ -112,10 +137,9 @@ def main(argv=None) -> None:
     scenarios = _parse_list(args.scenarios, list_scenarios())
     algorithms = (_parse_list(args.algorithms, ALGORITHMS) if args.algorithms
                   else None)
-    server_lr = 1e-2 if args.server_opt in ("adam", "yogi") else 1.0
     run_sweep(scenarios, algorithms, rounds=args.rounds, out_dir=args.out,
               seed=args.seed, server_opt=args.server_opt,
-              server_lr=server_lr, eval_every=args.eval_every,
+              eval_every=args.eval_every,
               engine=args.engine, mesh=args.mesh,
               clients_axis=args.clients_axis)
 

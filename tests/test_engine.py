@@ -36,7 +36,8 @@ def _run_pair(algo, scenario="scarce", rounds=ROUNDS, seed=0, **kw):
 # Engine ⇔ host parity on synthetic11
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("algo", ["f3ast", "fedavg"])
+@pytest.mark.parametrize("algo", ["f3ast", "fixed_f3ast", "fedavg",
+                                  "fedavg_weighted", "uniform", "fedadam"])
 def test_device_engine_matches_host_runner(algo):
     host, dev = _run_pair(algo)
     # identical selection trajectory, round by round

@@ -50,6 +50,9 @@ def _run(algo, scenario, engine, mesh=None, rounds=ROUNDS, seed=0, **kw):
 @pytest.mark.parametrize("scenario,algo", [
     ("scarce", "f3ast"),
     ("scarce", "fedavg"),
+    ("scarce", "fedavg_weighted"),
+    ("scarce", "uniform"),
+    ("scarce", "fedadam"),         # alias resolved identically per engine
     ("stepk", "f3ast"),            # time-varying K_t budget
     ("gilbert_elliott", "f3ast"),  # stateful (N,)-shaped availability state
     ("markov", "f3ast"),           # cluster-level (non-client-dim) state

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""Public-API surface check: fail CI on unreviewed breakage.
+
+Snapshots the exported names and callable signatures of the public
+packages (``repro.core``, ``repro.sim``) and compares them against the
+committed manifest ``tools/api_surface.json``.  Any drift — a removed
+export, a renamed function, a changed parameter list — fails the check
+until the manifest is regenerated with ``--update`` (i.e. the break is
+reviewed and committed alongside the code change).
+
+Signatures are recorded as parameter *shapes* only (names, kind markers
+``*``/``**``/keyword-only, and a ``=?`` marker for defaulted params) — no
+annotation or default-value reprs — so the manifest is stable across the
+Python versions in the CI matrix.
+
+    PYTHONPATH=src python tools/check_api_surface.py           # verify
+    PYTHONPATH=src python tools/check_api_surface.py --update  # regenerate
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import inspect
+import json
+import os
+import sys
+
+MODULES = ("repro.core", "repro.sim")
+DEFAULT_MANIFEST = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "api_surface.json")
+
+
+def signature_shape(obj) -> str | None:
+    """Version-stable signature string: names + kinds + default markers."""
+    try:
+        sig = inspect.signature(obj)
+    except (TypeError, ValueError):
+        return None
+    parts = []
+    seen_star = False
+    for p in sig.parameters.values():
+        if p.kind == p.VAR_POSITIONAL:
+            parts.append("*" + p.name)
+            seen_star = True
+            continue
+        if p.kind == p.VAR_KEYWORD:
+            parts.append("**" + p.name)
+            continue
+        if p.kind == p.KEYWORD_ONLY and not seen_star:
+            parts.append("*")
+            seen_star = True
+        name = p.name + ("=?" if p.default is not p.empty else "")
+        parts.append(name)
+    return "(" + ", ".join(parts) + ")"
+
+
+def module_surface(modname: str) -> dict:
+    mod = importlib.import_module(modname)
+    out = {}
+    for name in sorted(vars(mod)):
+        if name.startswith("_"):
+            continue
+        obj = getattr(mod, name)
+        if inspect.ismodule(obj):
+            continue
+        if inspect.isclass(obj):
+            entry = {"kind": "class", "signature": signature_shape(obj)}
+        elif callable(obj):
+            entry = {"kind": "function", "signature": signature_shape(obj)}
+        else:
+            entry = {"kind": type(obj).__name__}
+        out[name] = entry
+    return out
+
+
+def build_surface() -> dict:
+    return {m: module_surface(m) for m in MODULES}
+
+
+def diff_surfaces(committed: dict, current: dict) -> list:
+    problems = []
+    for mod in sorted(set(committed) | set(current)):
+        old = committed.get(mod, {})
+        new = current.get(mod, {})
+        for name in sorted(set(old) - set(new)):
+            problems.append(f"{mod}.{name}: REMOVED (was {old[name]})")
+        for name in sorted(set(new) - set(old)):
+            problems.append(f"{mod}.{name}: ADDED ({new[name]})")
+        for name in sorted(set(old) & set(new)):
+            if old[name] != new[name]:
+                problems.append(f"{mod}.{name}: CHANGED "
+                                f"{old[name]} -> {new[name]}")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--manifest", default=DEFAULT_MANIFEST)
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the manifest from the current code")
+    args = ap.parse_args(argv)
+
+    current = build_surface()
+    if args.update:
+        with open(args.manifest, "w") as f:
+            json.dump(current, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.manifest}")
+        return 0
+
+    if not os.path.exists(args.manifest):
+        print(f"FAIL: manifest {args.manifest} missing; generate it with "
+              f"--update and commit it", file=sys.stderr)
+        return 1
+    with open(args.manifest) as f:
+        committed = json.load(f)
+    problems = diff_surfaces(committed, current)
+    if problems:
+        print("Public API surface drifted from the committed manifest:",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        print("\nIf this change is intentional and reviewed, regenerate "
+              "with:\n  PYTHONPATH=src python tools/check_api_surface.py "
+              "--update\nand commit tools/api_surface.json with your PR.",
+              file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in current.values())
+    print(f"API surface OK ({n} exports across {', '.join(MODULES)})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
