@@ -5,12 +5,17 @@ Measures steady-state rounds/sec (first round / first chunk excluded — that
 is where XLA compiles) for the three execution paths of one
 (scenario × algorithm) cell on ``synthetic11``:
 
-* ``host``     — the reference Python loop (``sim/runner.py``,
-                 ``engine="host"``): per-round host↔device syncs.
-* ``device``   — the chunked ``lax.scan`` engine (``sim/engine.py``): one
-                 sync per chunk.
-* ``vmapped8`` — 8 cells (seeds 0..7) in one vmapped program
-                 (``run_cells_vmapped``); rounds/sec counts all cells.
+* ``host``           — the reference Python loop (``sim/runner.py``,
+                       ``engine="host"``): per-round host↔device syncs.
+* ``device``         — the chunked ``lax.scan`` engine (``sim/engine.py``):
+                       one sync per chunk.
+* ``device_dropout`` — the same engine with a mid-round completion process
+                       (``completion="bernoulli"``, q=0.8): guards the
+                       dropout path's throughput (the extra per-round cost
+                       is one bernoulli draw + a mask multiply, so it must
+                       stay close to ``device``).
+* ``vmapped8``       — 8 cells (seeds 0..7) in one vmapped program
+                       (``run_cells_vmapped``); rounds/sec counts all cells.
 
 ``--nscale`` adds the client-scaling column: a vectorized synthetic task at
 N up to 100k clients, run through the unsharded engine and the
@@ -75,10 +80,12 @@ def bench_host(scenario: str, algo: str, rounds: int, seed: int) -> dict:
 
 
 def bench_device(scenario: str, algo: str, rounds: int, seed: int,
-                 chunk_size: int) -> dict:
+                 chunk_size: int, completion=None,
+                 completion_kwargs=None) -> dict:
     spec = RunSpec(scenario=scenario, strategy=algo, rounds=rounds,
                    seed=seed, eval_every=rounds, chunk_size=chunk_size,
-                   engine="device")
+                   engine="device", completion=completion,
+                   completion_kwargs=completion_kwargs or {})
     res = run_scenario(spec, log_fn=_silent)
     return dict(rounds=rounds, chunk_size=chunk_size,
                 wall_s=round(res.final_metrics["wall_s"], 4),
@@ -236,6 +243,12 @@ def main(argv=None) -> dict:
     result["device"] = bench_device(args.scenario, args.algo, dev_rounds,
                                     args.seed, chunk)
     print(f"  -> {result['device']['rounds_per_s']:.1f} rounds/s")
+    print(f"benching device + dropout ({dev_rounds} rounds, "
+          f"chunk={chunk}) ...")
+    result["device_dropout"] = bench_device(
+        args.scenario, args.algo, dev_rounds, args.seed, chunk,
+        completion="bernoulli", completion_kwargs={"q": 0.8})
+    print(f"  -> {result['device_dropout']['rounds_per_s']:.1f} rounds/s")
     print(f"benching vmapped x{args.cells}       ({dev_rounds} rounds) ...")
     result[f"vmapped{args.cells}"] = bench_vmapped(
         args.scenario, args.algo, dev_rounds, args.cells, chunk)
@@ -247,6 +260,11 @@ def main(argv=None) -> dict:
         result["device"]["rounds_per_s"] / host_rps, 2)
     result["speedup_vmapped_over_host"] = round(
         result[f"vmapped{args.cells}"]["rounds_per_s"] / host_rps, 2)
+    # the dropout path folds one extra bernoulli + mask multiply into the
+    # compiled round — it must stay close to the plain device engine
+    result["dropout_over_device_ratio"] = round(
+        result["device_dropout"]["rounds_per_s"]
+        / result["device"]["rounds_per_s"], 3)
 
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)

@@ -21,6 +21,27 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def force_nonempty(mask: jnp.ndarray, q: jnp.ndarray,
+                   key: jax.Array) -> jnp.ndarray:
+    """Force a non-empty available set (paper assumes A_t ≠ ∅): if every
+    client is down, wake one chosen uniformly at random among the clients
+    with the highest marginal probability.
+
+    The random tie-break matters: a plain ``argmax(q)`` would always wake
+    client 0 under homogeneous marginals — a deterministic availability
+    bias in exactly the scarce regimes where all-down rounds happen.  The
+    ONE implementation serves every availability model (stateless samplers
+    here, stateful models in ``sim/processes.py``) so the engines' parity
+    guarantees cannot silently diverge.  ``key`` should be a *derived* key
+    (``fold_in`` of the step key) so the common non-empty path consumes
+    nothing from the main PRNG stream.
+    """
+    tie = jax.random.uniform(key, q.shape)
+    idx = jnp.argmax(jnp.where(q >= q.max(), tie, -1.0))
+    fallback = jnp.zeros_like(mask).at[idx].set(True)
+    return jnp.where(mask.any(), mask, fallback)
+
+
 @dataclasses.dataclass(frozen=True)
 class AvailabilityProcess:
     """Base class: per-client marginal probabilities, possibly time-varying."""
@@ -36,10 +57,7 @@ class AvailabilityProcess:
         the available set is non-empty at every round)."""
         q = self.probs(t)
         mask = jax.random.bernoulli(key, q)
-        # Force non-emptiness: if all clients are down, wake the one with the
-        # highest availability probability (measure-zero correction).
-        fallback = jnp.zeros_like(mask).at[jnp.argmax(q)].set(True)
-        return jnp.where(mask.any(), mask, fallback)
+        return force_nonempty(mask, q, jax.random.fold_in(key, 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -144,8 +162,7 @@ class MarkovClusters(AvailabilityProcess):
         new_state = jnp.where(state, ~go_down, go_up)
         q = jnp.where(new_state[self.cluster_of()], self.q_up, self.q_down)
         mask = jax.random.bernoulli(k2, q)
-        fallback = jnp.zeros_like(mask).at[0].set(True)
-        mask = jnp.where(mask.any(), mask, fallback)
+        mask = force_nonempty(mask, q, jax.random.fold_in(k2, 1))
         return new_state, mask
 
     def probs(self, t):  # stationary marginal, for reporting only

@@ -55,16 +55,38 @@ from .rates import RateState, init_rates, update_rates
 
 __all__ = [
     "STRATEGY_ALIASES", "STRATEGY_REGISTRY", "RateTrackState", "SelectCtx",
-    "SelectionStrategy", "StrategyAlias", "as_sharded", "get_strategy_entry",
-    "list_strategies", "make_strategy", "register_strategy",
-    "resolve_strategy", "strategy_rates", "topk_strategy",
+    "SelectionStrategy", "StrategyAlias", "apply_completion", "as_sharded",
+    "get_strategy_entry", "list_strategies", "make_strategy",
+    "register_strategy", "resolve_strategy", "strategy_rates",
+    "topk_strategy",
 ]
 
 
 class SelectCtx(NamedTuple):
-    """Per-round side inputs a strategy may consume (all optional)."""
+    """Per-round side inputs a strategy may consume (all optional).
+
+    ``complete`` is the engine's completion hook — a pure function
+    ``(N,) selection mask -> (N,) completed mask`` closing over the
+    round's derived completion key (``repro.sim.completion``).  Strategies
+    apply it via :func:`apply_completion` between selection and
+    ``finalize`` so the rate EMA and aggregation weights are driven by the
+    clients that actually *returned* an update, not merely the selected
+    ones.  ``None`` (no completion process, or ``completion="always"``)
+    means selected == completed.
+    """
     t: Optional[jnp.ndarray] = None        # round index
     losses: Optional[jnp.ndarray] = None   # (N,) fresh per-client losses
+    complete: Optional[Callable] = None    # sel mask (N,) -> completed (N,)
+
+
+def apply_completion(ctx: Optional["SelectCtx"],
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """Completed mask from the engine's completion hook (identity without
+    one).  Pure and deterministic given the hook's captured key, so engines
+    recompute the same mask for streaming/zero-weighting."""
+    if ctx is None or ctx.complete is None:
+        return mask
+    return ctx.complete(mask)
 
 
 class RateTrackState(NamedTuple):
@@ -116,15 +138,21 @@ def topk_strategy(name: str, init: Callable, score: Callable,
     the top ``min(k_t, |avail|)`` available ones are selected
     (``selection._topk_mask`` — stable (score, id) tie-break);
     ``finalize(state, mask, ctx) -> (weights (N,), new_state)`` assigns
-    aggregation weights and advances the state.  Strategies built this way
-    run on all three engines — :func:`as_sharded` reuses the same two
-    pieces around the distributed top-k.
+    aggregation weights and advances the state.  ``finalize`` receives the
+    *completed* mask (selected clients that survived the round's
+    completion process — identical to the selection mask when no
+    completion hook is active), so rate EMAs count deliveries and weights
+    renormalize over survivors; the selection mask is what ``select``
+    returns to the engine.  Strategies built this way run on all three
+    engines — :func:`as_sharded` reuses the same two pieces around the
+    distributed top-k.
     """
 
     def select(state, key, avail, k_t, ctx: Optional[SelectCtx] = None):
         scores = score(state, key, avail, k_t, ctx)
         mask = sel._topk_mask(scores, avail, k_t)
-        weights, new_state = finalize(state, mask, ctx)
+        completed = apply_completion(ctx, mask)
+        weights, new_state = finalize(state, completed, ctx)
         return mask, weights, new_state
 
     return SelectionStrategy(name=name, init=init, select=select,
@@ -174,7 +202,10 @@ def as_sharded(strategy: SelectionStrategy, *, axis: str, k_max: int,
         mask_blk = sel.sharded_topk_mask(scores_blk, avail_blk, k_t, axis,
                                          k_max)
         mask_full = jax.lax.all_gather(mask_blk, axis, tiled=True)[:n]
-        weights, new_state = strategy.finalize(state, mask_full, ctx)
+        # completion draws at full (N,) shape from the replicated key —
+        # identical on every shard and to the single-device path
+        completed_full = apply_completion(ctx, mask_full)
+        weights, new_state = strategy.finalize(state, completed_full, ctx)
         w_blk = jax.lax.dynamic_slice_in_dim(
             pad(weights.astype(jnp.float32)), off, n_local)
         return mask_blk, w_blk, new_state
@@ -336,7 +367,12 @@ def _rate_init(n_default: int, clients_per_round) -> Callable:
 
 
 def _ema_finalize(beta: float, weights_from_mask: Callable) -> Callable:
-    """finalize = rate-EMA step + a weights rule on the *pre-update* state."""
+    """finalize = rate-EMA step + a weights rule on the *pre-update* state.
+
+    ``mask`` here is the completed mask (== the selection mask when no
+    completion process is active): the EMA counts deliveries, and the
+    weights rule renormalizes over the surviving cohort.
+    """
 
     def finalize(state, mask, ctx=None):
         new_rates = update_rates(state.rates, mask, beta)
@@ -379,7 +415,12 @@ def _make_fixed_f3ast(n_clients, p, beta: float = 1e-3,
 
     def score(state, key, avail, k_t, ctx=None):
         rt = rt_fixed if rt_fixed is not None else state.rates.r
-        return marginal_utility(rt, p, positively_correlated)
+        util = marginal_utility(rt, p, positively_correlated)
+        # Same infinitesimal random tie-break as f3ast: under a uniform
+        # (target) rate every utility ties, and the stable (score, id)
+        # tie-break would deterministically select the lowest-index
+        # clients round after round.
+        return util * (1.0 + 1e-6 * jax.random.uniform(key, util.shape))
 
     def finalize(state, mask, ctx=None):
         rt = rt_fixed if rt_fixed is not None else state.rates.r
@@ -449,8 +490,10 @@ def _make_poc(n_clients, p, beta: float = 1e-3, d: int = 30,
             raise ValueError("'poc' needs ctx.losses (fresh per-client "
                              "losses of the current global model)")
         mask = sel.poc_select(key, avail, k_t, p, losses, d)
-        new_rates = update_rates(state.rates, mask, beta)
-        return mask, uniform_weights(mask), RateTrackState(rates=new_rates)
+        completed = apply_completion(ctx, mask)
+        new_rates = update_rates(state.rates, completed, beta)
+        return (mask, uniform_weights(completed),
+                RateTrackState(rates=new_rates))
 
     return SelectionStrategy(name="poc",
                              init=_rate_init(n_clients, clients_per_round),

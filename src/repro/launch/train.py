@@ -38,6 +38,7 @@ from ..core.fedstep import make_fed_round
 from ..core.strategies import STRATEGY_ALIASES, list_strategies, make_strategy
 from ..models import get_model_api
 from ..optim import make_optimizer
+from ..sim.completion import COMPLETION_REGISTRY
 from ..sim.runner import TrainResult, run_scenario
 from ..sim.scenario import Scenario, list_scenarios
 from ..sim.spec import RunSpec
@@ -132,6 +133,14 @@ def main():
                                    + list(STRATEGY_ALIASES)),
                     help="registered selection strategy (or alias)")
     ap.add_argument("--availability", default="homedevices")
+    ap.add_argument("--completion", default=None,
+                    choices=sorted(COMPLETION_REGISTRY),
+                    help="mid-round completion process (selected ≠ "
+                         "completed; default: the scenario's own, usually "
+                         "'always')")
+    ap.add_argument("--completion-kwargs", default=None, metavar="JSON",
+                    help="JSON dict of completion-process parameters, e.g. "
+                         "'{\"q\": 0.7}'")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--server-opt", default=None)
     ap.add_argument("--clients-per-round", type=int, default=None)
@@ -172,6 +181,9 @@ def main():
         # defaulting happen inside the strategy registry at run time
         spec = RunSpec(scenario=scenario, strategy=args.algo,
                        rounds=args.rounds,
+                       completion=args.completion,
+                       completion_kwargs=(json.loads(args.completion_kwargs)
+                                          if args.completion_kwargs else {}),
                        server_opt=args.server_opt or "sgd",
                        clients_per_round=args.clients_per_round,
                        seed=args.seed, ckpt_dir=args.ckpt_dir,

@@ -8,8 +8,12 @@ Composes three registries into one experiment spec:
   stateful ``init()/step()`` interface.
 * :mod:`repro.sim.budgets`   — communication-budget schedules K_t (constant,
   jittered, step, diurnal, bandwidth-coupled).
+* :mod:`repro.sim.completion` — mid-round completion processes (always,
+  bernoulli, availability-coupled, deadline): which *selected* clients
+  actually return an update.
 * :mod:`repro.sim.scenario`  — the :class:`Scenario` dataclass binding
-  process × budget × task × algorithm grid, resolvable by string key.
+  process × budget × completion × task × algorithm grid, resolvable by
+  string key.
 
 Selection strategies are a fourth registry
 (:mod:`repro.core.strategies`, ``register_strategy``), and one frozen
@@ -31,6 +35,10 @@ from .processes import (PROCESS_REGISTRY, AvailabilityModel, Bernoulli,
 from .budgets import (BUDGET_REGISTRY, BandwidthCoupled, BudgetSchedule,
                       Constant, DiurnalBudget, Jittered, StepBudget,
                       make_budget)
+from .completion import (COMPLETION_REGISTRY, AlwaysComplete,
+                         AvailabilityCoupled, BernoulliCompletion,
+                         CompletionModel, DeadlineCompletion,
+                         make_completion, resolve_completion)
 from .scenario import (SCENARIO_REGISTRY, Scenario, get_scenario,
                        list_scenarios, register_scenario)
 from .spec import RunSpec

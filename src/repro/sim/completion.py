@@ -1,0 +1,253 @@
+"""Completion-process registry — the "selected ≠ completed" half of a round.
+
+The paper's feasible-configuration model C_t = {S ⊆ A_t : |S| ≤ K_t}
+assumes every selected client returns its update, but the deployments it
+targets (intermittent devices, time-varying links) routinely lose selected
+clients *mid-round*: a device goes offline after receiving the model, a
+link drops, a straggler misses the server's aggregation deadline.  This
+registry models that gap behind one interface, mirroring the availability
+registry in :mod:`repro.sim.processes`:
+
+    model = make_completion("bernoulli", n_clients=100, q=0.8)
+    completed = model.sample(key, t, sel_mask)     # (N,) bool ⊆ sel_mask
+
+``sample`` is a pure function of (key, t, sel_mask) — jit-safe, so the
+device and sharded engines fold it into the compiled round step — and the
+completed mask is always a subset of the selection mask (a client that was
+never selected cannot complete).  F3AST's unbiasedness only survives
+dropout if the r_k EMA and the p_k/r_k aggregation weights are driven by
+the *completed* set; the engines hand ``sample`` to the strategy through
+``SelectCtx.complete`` so ``finalize`` sees survivors (DESIGN.md §7.3).
+
+Registered regimes
+  always               — every selected client completes (the idealized
+                         paper model; bit-identical to pre-completion runs).
+  bernoulli            — i.i.d. per-client completion with probability q,
+                         optional lognormal heterogeneity across clients
+                         (sigma > 0), independent of availability.
+  availability_coupled — completion probability tied to the client's
+                         *current availability marginal* q_k(t): clients
+                         that are rarely up also tend to drop mid-round
+                         (the non-stationary regime of arXiv:2409.17446
+                         and the correlated regime of arXiv:2301.04632).
+  deadline             — straggler cutoff: each selected client draws a
+                         round latency from its per-client lognormal
+                         profile and completes iff it beats the server's
+                         aggregation deadline.
+
+PRNG contract: engines derive the completion key from the round's
+selection key via ``jax.random.fold_in(k_sel, KEY_FOLD)`` — a *derived*
+stream, so enabling completion never shifts the availability / selection /
+budget / batch draws, and ``completion="always"`` reproduces
+pre-completion trajectories bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "COMPLETION_REGISTRY", "KEY_FOLD", "AlwaysComplete",
+    "AvailabilityCoupled", "BernoulliCompletion", "CompletionModel",
+    "DeadlineCompletion", "make_completion", "resolve_completion",
+]
+
+# Engines derive the per-round completion key as fold_in(k_sel, KEY_FOLD):
+# a side stream off the selection key that consumes nothing from the main
+# split, keeping completion="always" bit-identical to pre-completion runs.
+KEY_FOLD = 0x5E1EC7
+
+
+class CompletionModel:
+    """Interface contract (duck-typed; subclassing is optional).
+
+    Attributes / methods every registered model provides:
+      n_clients      — N
+      trivial        — True iff ``sample`` is the identity (no RNG used);
+                       engines skip the completion plumbing entirely
+      sample(key, t, sel_mask) -> (N,) bool   completed ⊆ sel_mask
+      rate(t)        — (N,) expected completion probability *given
+                       selection* (diagnostics / calibration)
+    """
+
+    n_clients: int
+    trivial: bool = False
+
+    def sample(self, key: jax.Array, t, sel_mask: jnp.ndarray) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def rate(self, t) -> jnp.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class AlwaysComplete(CompletionModel):
+    """Idealized paper model: every selected client returns its update."""
+
+    n_clients: int
+    trivial: bool = True
+
+    def sample(self, key, t, sel_mask):
+        return sel_mask
+
+    def rate(self, t):
+        return jnp.ones((self.n_clients,), jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class BernoulliCompletion(CompletionModel):
+    """I.i.d. per-round completion with optional client heterogeneity.
+
+    ``sigma = 0`` gives a homogeneous completion probability q; ``sigma >
+    0`` modulates per-client probabilities by a normalized lognormal draw
+    scaled so the most reliable client completes with probability ``q`` —
+    the same construction as the HomeDevices availability model.
+    """
+
+    n_clients: int
+    q: float = 0.8
+    sigma: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.sigma > 0:
+            rng = np.random.default_rng(self.seed)
+            t_k = rng.lognormal(0.0, self.sigma, self.n_clients)
+            qs = self.q * t_k / t_k.max()
+        else:
+            qs = np.full(self.n_clients, self.q)
+        object.__setattr__(self, "_q", jnp.asarray(qs, jnp.float32))
+
+    def rate(self, t):
+        return self._q
+
+    def sample(self, key, t, sel_mask):
+        return sel_mask & jax.random.bernoulli(key, self._q)
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityCoupled(CompletionModel):
+    """Completion probability tied to the availability marginal q_k(t).
+
+        P(complete | selected) = clip(q_k(t) ** gamma, floor, 1)
+
+    ``marginals`` is the availability model's ``marginals(t)`` — a pure
+    function of t, so the coupling is jit-safe.  ``gamma`` sets how hard
+    dropout tracks availability (0 = independent, 1 = proportional, > 1 =
+    amplified) and ``floor`` keeps every selected client a nonzero chance
+    of finishing.  Built by :func:`make_completion` from the scenario's
+    own availability model, so diurnal troughs / drift / Markov down-mass
+    show up as mid-round dropout too.
+    """
+
+    n_clients: int
+    marginals: Callable = None            # (t,) -> (N,) availability probs
+    gamma: float = 1.0
+    floor: float = 0.05
+
+    def __post_init__(self):
+        if self.marginals is None:
+            raise TypeError("availability_coupled needs the scenario's "
+                            "availability model (marginals)")
+
+    def rate(self, t):
+        q = jnp.asarray(self.marginals(t), jnp.float32)
+        return jnp.clip(q ** self.gamma, self.floor, 1.0)
+
+    def sample(self, key, t, sel_mask):
+        return sel_mask & jax.random.bernoulli(key, self.rate(t))
+
+
+@dataclasses.dataclass(frozen=True)
+class DeadlineCompletion(CompletionModel):
+    """Straggler cutoff: complete iff the round latency beats the deadline.
+
+    Each client carries a static median latency s_k drawn lognormally
+    across the fleet (``spread``; device-class heterogeneity) and draws a
+    per-round latency s_k · exp(sigma · ε) (``sigma``; round-to-round
+    jitter).  A selected client completes iff that latency ≤ ``deadline``
+    — the classic FedAvg-with-reporting-deadline straggler model.
+    """
+
+    n_clients: int
+    deadline: float = 1.0
+    spread: float = 0.4
+    sigma: float = 0.25
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        s_k = rng.lognormal(np.log(0.7), self.spread, self.n_clients)
+        object.__setattr__(self, "_scale", jnp.asarray(s_k, jnp.float32))
+
+    def rate(self, t):
+        # P(s_k e^{sigma eps} <= D) = Phi(log(D / s_k) / sigma)
+        z = jnp.log(self.deadline / self._scale) / self.sigma
+        return jax.scipy.stats.norm.cdf(z).astype(jnp.float32)
+
+    def sample(self, key, t, sel_mask):
+        eps = jax.random.normal(key, (self.n_clients,))
+        latency = self._scale * jnp.exp(self.sigma * eps)
+        return sel_mask & (latency <= self.deadline)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def _direct(cls):
+    def make(n_clients: int, avail_model=None, **kw):
+        return cls(n_clients=n_clients, **kw)
+    return make
+
+
+def _make_coupled(n_clients: int, avail_model=None, **kw):
+    if avail_model is None:
+        raise TypeError("availability_coupled needs the scenario's "
+                        "availability model (pass avail_model=)")
+    return AvailabilityCoupled(n_clients=n_clients,
+                               marginals=avail_model.marginals, **kw)
+
+
+COMPLETION_REGISTRY: Dict[str, Callable[..., CompletionModel]] = {
+    "always": _direct(AlwaysComplete),
+    "bernoulli": _direct(BernoulliCompletion),
+    "availability_coupled": _make_coupled,
+    "deadline": _direct(DeadlineCompletion),
+}
+
+
+def make_completion(name: str, n_clients: int, avail_model=None,
+                    **kw) -> CompletionModel:
+    """Build a registered completion model by string key.
+
+    ``avail_model`` is the scenario's availability model — required by
+    ``availability_coupled`` (its completion probability follows the
+    model's ``marginals(t)``), ignored by the other regimes.
+    """
+    key = str(name).lower()
+    if key not in COMPLETION_REGISTRY:
+        raise KeyError(f"unknown completion process {name!r}; "
+                       f"known: {sorted(COMPLETION_REGISTRY)}")
+    return COMPLETION_REGISTRY[key](n_clients, avail_model=avail_model, **kw)
+
+
+def resolve_completion(scenario, completion: Optional[str],
+                       completion_kwargs) -> tuple:
+    """Effective (name, kwargs) for a run: RunSpec override beats Scenario.
+
+    A spec that names a completion process replaces the scenario's entry
+    wholesale (name and kwargs); a spec that only passes kwargs overlays
+    them on the scenario's own process — the hook dropout-severity sweeps
+    use (same regime, swept parameter).
+    """
+    sc_name = getattr(scenario, "completion", "always") or "always"
+    sc_kwargs = dict(getattr(scenario, "completion_kwargs", {}) or {})
+    if completion is not None:
+        return str(completion), dict(completion_kwargs or {})
+    sc_kwargs.update(dict(completion_kwargs or {}))
+    return sc_name, sc_kwargs

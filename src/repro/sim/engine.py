@@ -9,8 +9,10 @@ serializes sweep cells.
 
 This module compiles the entire round — availability ``step``, K_t budget
 draw, the registered :class:`repro.core.strategies.SelectionStrategy`'s
-pure ``select`` (state update + top-k under the budget included),
-device-side cohort gather from pre-staged client data
+pure ``select`` (state update + top-k under the budget included), the
+mid-round completion draw (``sim/completion.py``: which selected clients
+actually return; dropped slots are zero-weighted), device-side cohort
+gather from pre-staged client data
 (``data.pipeline.staged_cohort_batch``), and the jitted federated round —
 into one ``lax.scan`` over a *chunk* of rounds.  Metrics stream out
 per-chunk as stacked arrays instead of per-round scalars, so the host
@@ -53,6 +55,7 @@ from ..core.strategies import (SelectCtx, get_strategy_entry, make_strategy,
 from ..data import CohortSampler
 from ..data.pipeline import staged_cohort_batch
 from ..optim import make_optimizer
+from .completion import KEY_FOLD
 from .scenario import Scenario, get_scenario
 
 __all__ = ["DeviceEngine", "build_engine", "run_scenario_device",
@@ -72,10 +75,14 @@ class RoundStream(NamedTuple):
     """Per-round outputs stacked along the chunk axis by lax.scan.
 
     Per-round rate trajectories are deliberately not streamed: r(t) is a
-    deterministic EMA of the streamed selection masks, so consumers can
+    deterministic EMA of the streamed *completed* masks, so consumers can
     reconstruct it exactly, and the final r(T) lives in the carry.
+    ``completed`` equals ``sel_mask`` under ``completion="always"`` and is
+    streamed anyway — a duplicate bool mask per round is cheap next to one
+    stream structure shared by every engine, driver, and test.
     """
-    sel_mask: jnp.ndarray      # (C, N) bool
+    sel_mask: jnp.ndarray      # (C, N) bool — selected cohort S_t
+    completed: jnp.ndarray     # (C, N) bool — survivors ⊆ S_t
     k_t: jnp.ndarray           # (C,) int32
     n_available: jnp.ndarray   # (C,) int32
     train_loss: jnp.ndarray    # (C,) f32
@@ -92,29 +99,45 @@ class DeviceEngine:
     """
 
     def __init__(self, *, avail_model, budget, strategy, staged, fed_round,
-                 init_params, opt, client_lr, local_steps, local_batch):
+                 init_params, opt, client_lr, local_steps, local_batch,
+                 completion=None):
         self.avail_model = avail_model
         self.budget = budget
         self.strategy = strategy
+        self.completion = completion
         self.k_max = budget.k_max
         self.n_clients = int(staged.counts.shape[0])
+        trivial = completion is None or completion.trivial
 
         def round_step(carry, t, k_cap):
-            # Same split order as the host loop in runner.py — parity.
+            # Same split order as the host loop in runner.py — parity.  The
+            # completion key is derived (fold_in), never split from the
+            # main stream: completion="always" stays bit-identical.
             key, k_av, k_sel, k_bud, k_batch = jax.random.split(carry.key, 5)
+            k_comp = jax.random.fold_in(k_sel, KEY_FOLD)
             avail_state, avail = avail_model.step(k_av, carry.avail_state, t)
             k_t = jnp.minimum(budget.sample(k_bud, t),
                               jnp.asarray(k_cap, jnp.int32))
+            complete_fn = (None if trivial else
+                           lambda m: completion.sample(k_comp, t, m))
             sel_mask, w_full, algo_state = strategy.select(
-                carry.algo_state, k_sel, avail, k_t, SelectCtx(t=t))
+                carry.algo_state, k_sel, avail, k_t,
+                SelectCtx(t=t, complete=complete_fn))
+            # same pure draw as inside select — identical completed mask
+            completed = sel_mask if trivial else complete_fn(sel_mask)
             ids, valid = cohort_ids_from_mask(sel_mask, budget.k_max)
             batch = staged_cohort_batch(staged, k_batch, ids, local_steps,
                                         local_batch)
             w = w_full[ids] * valid
+            if not trivial:
+                # dropped slots contribute nothing even if the strategy's
+                # finalize ignored the completion hook
+                w = w * completed[ids]
             params, opt_state, m = fed_round(
                 carry.params, carry.opt_state, batch, w,
                 jnp.asarray(client_lr, jnp.float32))
-            out = RoundStream(sel_mask=sel_mask, k_t=k_t,
+            out = RoundStream(sel_mask=sel_mask, completed=completed,
+                              k_t=k_t,
                               n_available=avail.sum().astype(jnp.int32),
                               train_loss=m.loss, delta_norm=m.delta_norm)
             return EngineCarry(key, params, opt_state, algo_state,
@@ -162,7 +185,8 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  positively_correlated: bool = False,
                  fed_mode: str = "parallel",
                  mesh=None, clients_axis: str = "clients",
-                 strategy_kwargs=None):
+                 strategy_kwargs=None,
+                 completion: Optional[str] = None, completion_kwargs=None):
     """Build the compiled cell for one (scenario × strategy).
 
     Returns ``(engine, ctx)`` where ``ctx`` carries the task pieces the
@@ -198,6 +222,9 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
 
     avail_model = sc.build_availability(n, p=p)
     budget = sc.build_budget(default_k=m)
+    comp_model = sc.build_completion(n, avail_model=avail_model,
+                                     override=completion,
+                                     override_kwargs=completion_kwargs)
     # engine-supplied defaults; explicit strategy_kwargs win on overlap
     hyper = dict(beta=beta, positively_correlated=positively_correlated,
                  clients_per_round=m)
@@ -211,7 +238,7 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     common = dict(avail_model=avail_model, budget=budget, strategy=strategy,
                   init_params=init, opt=opt, client_lr=task.client_lr,
                   local_steps=task.local_steps,
-                  local_batch=task.local_batch)
+                  local_batch=task.local_batch, completion=comp_model)
     if mesh is not None:
         if fed_mode != "parallel":
             raise ValueError("the client-sharded engine runs the cohort in "
@@ -274,7 +301,10 @@ def run_scenario_device(scenario: Union[str, Scenario],
                         metrics_path: Optional[str] = None,
                         fed_mode: str = "parallel",
                         mesh=None, clients_axis: str = "clients",
-                        strategy_kwargs=None, algo_label: Optional[str] = None,
+                        strategy_kwargs=None,
+                        completion: Optional[str] = None,
+                        completion_kwargs=None,
+                        algo_label: Optional[str] = None,
                         log_fn=print):
     """Device-resident drop-in for ``runner.run_scenario``.
 
@@ -301,7 +331,9 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                positively_correlated=positively_correlated,
                                fed_mode=fed_mode, mesh=mesh,
                                clients_axis=clients_axis,
-                               strategy_kwargs=strategy_kwargs)
+                               strategy_kwargs=strategy_kwargs,
+                               completion=completion,
+                               completion_kwargs=completion_kwargs)
     engine_label = "sharded" if mesh is not None else "device"
     n_real = engine.n_clients
     sc, task = ctx["scenario"], ctx["task"]
@@ -344,11 +376,13 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                     train_loss=float(out_np.train_loss[-1]),
                                     test_loss=test_loss, test_acc=test_acc,
                                     n_selected=int(out_np.sel_mask[-1].sum()),
-                                    n_available=int(out_np.n_available[-1])))
+                                    n_available=int(out_np.n_available[-1]),
+                                    n_completed=int(out_np.completed[-1].sum())))
                 log_fn(f"[{sc.name}/{algo_label}] round {t1 - 1:4d} "
                        f"loss={test_loss:.4f} acc={test_acc:.4f} "
                        f"k_t={int(out_np.k_t[-1])} "
                        f"sel={history[-1]['n_selected']} "
+                       f"done={history[-1]['n_completed']} "
                        f"avail={history[-1]['n_available']}")
             if metrics_file:
                 for i, t in enumerate(range(t0, t1)):
@@ -356,6 +390,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                   round=t, k_t=int(out_np.k_t[i]),
                                   n_available=int(out_np.n_available[i]),
                                   n_selected=int(out_np.sel_mask[i].sum()),
+                                  n_completed=int(out_np.completed[i].sum()),
                                   train_loss=float(out_np.train_loss[i]),
                                   delta_norm=float(out_np.delta_norm[i]))
                     if do_eval and t == t1 - 1:
@@ -374,6 +409,8 @@ def run_scenario_device(scenario: Union[str, Scenario],
     from .runner import TrainResult   # local import: runner ↔ engine
     sel_history = np.concatenate([s.sel_mask for s in streams],
                                  axis=0)[:, :n_real]
+    comp_history = np.concatenate([s.completed for s in streams],
+                                  axis=0)[:, :n_real]
     t_end = time.time()
     final = dict(history[-1])
     final["engine"] = engine_label
@@ -385,7 +422,8 @@ def run_scenario_device(scenario: Union[str, Scenario],
     return TrainResult(history=history, final_metrics=final,
                        rates=_final_rates(engine, carry, n_real),
                        empirical_rates=sel_history.mean(0),
-                       sel_history=sel_history)
+                       sel_history=sel_history,
+                       comp_history=comp_history)
 
 
 def run_cells_vmapped(scenario: Union[str, Scenario],
@@ -441,11 +479,13 @@ def run_cells_vmapped(scenario: Union[str, Scenario],
     test_acc = np.asarray(jax.vmap(ctx["eval_acc"], in_axes=(0, None))(
         carries.params, ctx["test_batch"]))
     sel_history = np.concatenate([s.sel_mask for s in streams], axis=1)
+    comp_history = np.concatenate([s.completed for s in streams], axis=1)
     train_loss = np.concatenate([s.train_loss for s in streams], axis=1)
     result = dict(seeds=list(seeds), k_caps=np.asarray(k_caps_arr).tolist(),
                   rounds=rounds, test_loss=test_loss, test_acc=test_acc,
                   train_loss=train_loss,             # (cells, T)
                   sel_history=sel_history,           # (cells, T, N)
+                  comp_history=comp_history,         # (cells, T, N)
                   rates=_final_rates(engine, carries, engine.n_clients),
                   empirical_rates=sel_history.mean(axis=1),
                   wall_s=t_end - t_start)

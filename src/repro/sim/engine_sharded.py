@@ -21,7 +21,12 @@ loop inside ``shard_map``:
 * **cohort** — each shard contributes the staged rows it owns for the
   selected cohort (masked gather + ``psum``), then the cohort-slot axis is
   itself laid over the mesh so local SGD for the cohort runs data-parallel
-  (``make_fed_round(cohort_axis=...)`` psums the weighted delta).
+  (``make_fed_round(cohort_axis=...)`` psums the weighted delta);
+* **completion** — the mid-round dropout draw (``sim/completion.py``)
+  happens at full (N,) shape from the replicated derived key, like the
+  selection scores, so every shard sees the same completed mask; the
+  per-shard block streams out next to the selection mask and dropped
+  cohort slots are zero-weighted before the psum.
 
 Parity is exact by construction and asserted in
 ``tests/test_engine_sharded.py``: per-round PRNG keys are replicated and
@@ -50,6 +55,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.selection import sharded_cohort_ids_from_mask
 from ..core.strategies import SelectCtx, as_sharded
 from ..sharding.rules import pad_client_dim, to_named_shardings
+from .completion import KEY_FOLD
 from .engine import EngineCarry, RoundStream
 
 __all__ = ["ShardedEngine", "resolve_client_mesh"]
@@ -77,9 +83,12 @@ class ShardedEngine:
 
     def __init__(self, *, mesh: Mesh, axis: str = "clients", avail_model,
                  budget, strategy, staged, fed_round, init_params, opt,
-                 client_lr, local_steps, local_batch, n_clients: int):
+                 client_lr, local_steps, local_batch, n_clients: int,
+                 completion=None):
         self.mesh, self.axis = mesh, axis
         self.strategy = strategy
+        self.completion = completion
+        trivial = completion is None or completion.trivial
         self.n_clients = int(n_clients)
         self.k_max = budget.k_max
         self._staged = staged
@@ -119,7 +128,11 @@ class ShardedEngine:
 
         def round_step(carry, t, k_cap, arrays, counts):
             # Same split order as the host loop / device engine — parity.
+            # The completion key is derived (fold_in off k_sel), replicated
+            # across shards, and the completion draw happens at full (N,)
+            # shape — bit-identical masks on every shard and engine.
             key, k_av, k_sel, k_bud, k_batch = jax.random.split(carry.key, 5)
+            k_comp = jax.random.fold_in(k_sel, KEY_FOLD)
             i = jax.lax.axis_index(axis)
             off = i * nl
 
@@ -132,8 +145,20 @@ class ShardedEngine:
 
             k_t = jnp.minimum(budget.sample(k_bud, t),
                               jnp.asarray(k_cap, jnp.int32))
+            complete_fn = (None if trivial else
+                           lambda m: completion.sample(k_comp, t, m))
             mask_blk, w_blk, algo_state = select_blk(
-                carry.algo_state, k_sel, avail_blk, k_t, SelectCtx(t=t))
+                carry.algo_state, k_sel, avail_blk, k_t,
+                SelectCtx(t=t, complete=complete_fn))
+            if trivial:
+                completed_blk, completed_full = mask_blk, None
+            else:
+                # same pure draw as inside select_blk's finalize step
+                mask_full = jax.lax.all_gather(mask_blk, axis,
+                                               tiled=True)[:n]
+                completed_full = complete_fn(mask_full)
+                completed_blk = jax.lax.dynamic_slice_in_dim(
+                    pad_client_dim(completed_full, n_pad), off, nl)
 
             ids, valid = sharded_cohort_ids_from_mask(mask_blk, k, axis, n)
             if k_pad > k:           # shard-count padding: zero-weight repeats
@@ -149,6 +174,11 @@ class ShardedEngine:
             loc = jnp.where(in_range, ids_p - off, 0)
             w_sel = jax.lax.psum(jnp.where(in_range, w_blk[loc], 0.0),
                                  axis) * valid_p
+            if not trivial:
+                # dropped slots contribute nothing even if the strategy's
+                # finalize ignored the completion hook (replicated mask,
+                # ids_p are clamped < n)
+                w_sel = w_sel * completed_full[ids_p]
 
             # minibatch indices: the same (K, E, B) draw as the unsharded
             # engine; padded slots reuse index 0 with zero weight
@@ -174,7 +204,8 @@ class ShardedEngine:
                 carry.params, carry.opt_state, lb, lw,
                 jnp.asarray(client_lr, jnp.float32), lm)
 
-            out = RoundStream(sel_mask=mask_blk, k_t=k_t,
+            out = RoundStream(sel_mask=mask_blk, completed=completed_blk,
+                              k_t=k_t,
                               n_available=avail_full.sum().astype(jnp.int32),
                               train_loss=m.loss, delta_norm=m.delta_norm)
             return EngineCarry(key, params, opt_state, algo_state,
@@ -198,7 +229,8 @@ class ShardedEngine:
             algo_state=jax.tree.map(lambda _: P(), algo_s),
             avail_state=jax.tree.map(lambda f: P(axis) if f else P(), flags),
         )
-        stream_specs = RoundStream(sel_mask=P(None, axis), k_t=P(),
+        stream_specs = RoundStream(sel_mask=P(None, axis),
+                                   completed=P(None, axis), k_t=P(),
                                    n_available=P(), train_loss=P(),
                                    delta_norm=P())
         staged_specs = jax.tree.map(lambda _: P(axis), staged.arrays)

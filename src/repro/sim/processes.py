@@ -48,11 +48,13 @@ import numpy as np
 from ..core import availability as core_av
 
 
-def _nonempty(mask: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Force a non-empty available set (paper assumes A_t ≠ ∅): if every
-    client is down, wake the one with the highest marginal probability."""
-    fallback = jnp.zeros_like(mask).at[jnp.argmax(q)].set(True)
-    return jnp.where(mask.any(), mask, fallback)
+def _nonempty(mask: jnp.ndarray, q: jnp.ndarray,
+              key: jax.Array) -> jnp.ndarray:
+    """Force a non-empty available set: wake a uniformly-random
+    max-marginal client if all are down (``core.availability.
+    force_nonempty`` — one implementation for every model; ``key`` is a
+    derived ``fold_in`` of the step key)."""
+    return core_av.force_nonempty(mask, q, key)
 
 
 class AvailabilityModel:
@@ -148,7 +150,7 @@ class Bernoulli(AvailabilityModel):
 
     def step(self, key, state, t):
         mask = jax.random.bernoulli(key, self._q)
-        return state, _nonempty(mask, self._q)
+        return state, _nonempty(mask, self._q, jax.random.fold_in(key, 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,7 +188,7 @@ class GilbertElliott(AvailabilityModel):
         new = jnp.where(state, ~go_down, go_up)
         q = jnp.where(new, self.q_up, self.q_down)
         mask = jax.random.bernoulli(k_avail, q)
-        return new, _nonempty(mask, q)
+        return new, _nonempty(mask, q, jax.random.fold_in(k_avail, 1))
 
     def marginals(self, t):
         pi = self.stationary_up
@@ -228,7 +230,7 @@ class Diurnal(AvailabilityModel):
     def step(self, key, state, t):
         q = self.marginals(t)
         mask = jax.random.bernoulli(key, q)
-        return state, _nonempty(mask, q)
+        return state, _nonempty(mask, q, jax.random.fold_in(key, 1))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -265,7 +267,7 @@ class NonStationaryDrift(AvailabilityModel):
     def step(self, key, state, t):
         q = self.marginals(t)
         mask = jax.random.bernoulli(key, q)
-        return state, _nonempty(mask, q)
+        return state, _nonempty(mask, q, jax.random.fold_in(key, 1))
 
 
 @dataclasses.dataclass(frozen=True)

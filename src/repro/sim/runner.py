@@ -18,10 +18,11 @@ by ``spec.engine`` / ``spec.mesh``:
   engine in :mod:`repro.sim.engine`; with ``mesh`` set, the client-sharded
   variant (:mod:`repro.sim.engine_sharded`).
 * ``engine="host"`` — the reference Python loop below: availability step →
-  strategy ``select`` → static-shape cohort batch → jitted federated round
-  → per-round metrics.  Kept as the readable, debuggable ground truth the
-  engines are parity-tested against, and the only path for host-only
-  strategies (PoC's fresh per-client losses).
+  strategy ``select`` (completion-aware, DESIGN.md §7.3) → static-shape
+  cohort batch → jitted federated round → per-round metrics.  Kept as the
+  readable, debuggable ground truth the engines are parity-tested
+  against, and the only path for host-only strategies (PoC's fresh
+  per-client losses).
 
 All paths resolve the strategy through ONE registry call
 (``repro.core.strategies.resolve_strategy``) before dispatch, so aliases
@@ -60,6 +61,7 @@ from ..data.synthetic import (make_char_lm_federated, make_synthetic_federated,
                               make_vision_federated)
 from ..models import resnet, rnn, softmax_reg
 from ..optim import make_optimizer
+from .completion import KEY_FOLD
 from .scenario import Scenario, get_scenario
 from .spec import RunSpec
 
@@ -69,8 +71,10 @@ class TrainResult:
     history: list            # per-eval-round dicts
     final_metrics: dict
     rates: np.ndarray        # learned r(T) (NaN for rate-free strategies)
-    empirical_rates: np.ndarray
+    empirical_rates: np.ndarray   # time-average of the *selection* masks
     sel_history: Optional[np.ndarray] = None   # (T, N) bool selection masks
+    comp_history: Optional[np.ndarray] = None  # (T, N) bool completed masks
+    #   (== sel_history under completion="always"; the r_k EMA tracks these)
 
 
 def build_task(task_id: str, seed: int, **task_kwargs):
@@ -218,7 +222,9 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             positively_correlated=rs.positively_correlated,
             metrics_path=rs.metrics_path, fed_mode=rs.fed_mode,
             mesh=rs.mesh, clients_axis=rs.clients_axis,
-            strategy_kwargs=rs.strategy_kwargs, log_fn=log_fn)
+            strategy_kwargs=rs.strategy_kwargs,
+            completion=rs.completion,
+            completion_kwargs=rs.completion_kwargs, log_fn=log_fn)
 
     task, fed, init, loss, acc = build_task(sc.task, rs.seed,
                                             **dict(sc.task_kwargs))
@@ -230,6 +236,9 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
 
     avail_model = sc.build_availability(N, p=p)
     budget = sc.build_budget(default_k=M)
+    comp_model = sc.build_completion(N, avail_model=avail_model,
+                                     override=rs.completion,
+                                     override_kwargs=rs.completion_kwargs)
     K_cohort = budget.k_max          # static cohort size: jit never resizes
     # engine-supplied defaults; explicit strategy_kwargs win on overlap
     hyper = dict(beta=beta, positively_correlated=rs.positively_correlated,
@@ -273,26 +282,41 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
 
     history = []
     sel_history = np.zeros((rounds, N), bool)
+    comp_history = np.zeros((rounds, N), bool)
     t_start = time.time()
     t_first_round = None
     try:
         for t in range(rounds):
             # Split order shared with sim/engine.py — keep in lockstep or
-            # the engine parity tests will catch the divergence.
+            # the engine parity tests will catch the divergence.  The
+            # completion key is *derived* (fold_in off k_sel), never split
+            # from the main stream, so completion="always" reproduces
+            # pre-completion trajectories bit-for-bit.
             key, k_av, k_sel, k_bud, k_batch = jax.random.split(key, 5)
+            k_comp = jax.random.fold_in(k_sel, KEY_FOLD)
             avail_state, avail = avail_model.step(k_av, avail_state, t)
             k_t = budget.sample(k_bud, t)
             losses_in = (jnp.asarray(fresh_losses(params))
                          if strategy.needs_losses else None)
+            complete_fn = (None if comp_model.trivial else
+                           lambda m: comp_model.sample(k_comp, t, m))
             sel_mask, weights_full, algo_state = strategy.select(
                 algo_state, k_sel, avail, k_t,
-                SelectCtx(t=t, losses=losses_in))
+                SelectCtx(t=t, losses=losses_in, complete=complete_fn))
             sel_ids = np.flatnonzero(np.asarray(sel_mask))
             sel_history[t, sel_ids] = True
+            # same pure draw as inside select — identical completed mask
+            completed = (sel_mask if comp_model.trivial
+                         else comp_model.sample(k_comp, t, sel_mask))
+            comp_np = np.asarray(completed)
+            comp_history[t] = comp_np
 
             batch_np, valid, ids = sampler.cohort_batch(sel_ids, key=k_batch)
             batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
-            w = jnp.asarray(np.asarray(weights_full)[ids] * valid)
+            # dropped slots are zero-weighted regardless of whether the
+            # strategy's finalize already renormalized over survivors
+            w = jnp.asarray(np.asarray(weights_full)[ids] * valid
+                            * comp_np[ids])
             lr_t = jnp.asarray(task.client_lr, jnp.float32)
             params, opt_state, metrics = fed_round(params, opt_state, batch,
                                                    w, lr_t)
@@ -303,6 +327,7 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             record = dict(scenario=sc.name, algorithm=algo_label, round=t,
                           k_t=int(k_t), n_available=int(np.asarray(avail).sum()),
                           n_selected=int(len(sel_ids)),
+                          n_completed=int(comp_np.sum()),
                           train_loss=float(metrics.loss),
                           delta_norm=float(metrics.delta_norm))
             if t % rs.eval_every == 0 or t == rounds - 1:
@@ -312,11 +337,13 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
                                     test_loss=record["test_loss"],
                                     test_acc=record["test_acc"],
                                     n_selected=record["n_selected"],
-                                    n_available=record["n_available"]))
+                                    n_available=record["n_available"],
+                                    n_completed=record["n_completed"]))
                 log_fn(f"[{sc.name}/{algo_label}] round {t:4d} "
                        f"loss={record['test_loss']:.4f} "
                        f"acc={record['test_acc']:.4f} k_t={record['k_t']} "
                        f"sel={record['n_selected']} "
+                       f"done={record['n_completed']} "
                        f"avail={record['n_available']}")
             if metrics_file:
                 metrics_file.write(json.dumps(record) + "\n")
@@ -347,4 +374,5 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
     return TrainResult(history=history, final_metrics=final,
                        rates=rates,
                        empirical_rates=sel_history.mean(0),
-                       sel_history=sel_history)
+                       sel_history=sel_history,
+                       comp_history=comp_history)

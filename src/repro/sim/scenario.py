@@ -27,18 +27,23 @@ from typing import Dict, Mapping, Optional, Tuple, Union
 import numpy as np
 
 from .budgets import BudgetSchedule, make_budget
+from .completion import (CompletionModel, make_completion,
+                         resolve_completion)
 from .processes import AvailabilityModel, make_process
 
 
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """One experiment cell: process × budget × task (× algorithm grid)."""
+    """One experiment cell: process × budget × completion × task
+    (× algorithm grid)."""
 
     name: str
     availability: str                                   # PROCESS_REGISTRY key
     availability_kwargs: Mapping = dataclasses.field(default_factory=dict)
     budget: str = "constant"                            # BUDGET_REGISTRY key
     budget_kwargs: Mapping = dataclasses.field(default_factory=dict)
+    completion: str = "always"                          # COMPLETION_REGISTRY key
+    completion_kwargs: Mapping = dataclasses.field(default_factory=dict)
     task: str = "synthetic11"                           # PAPER_TASKS key
     task_kwargs: Mapping = dataclasses.field(default_factory=dict)
     algorithms: Tuple[str, ...] = ("f3ast", "fedavg")   # default sweep grid
@@ -50,6 +55,25 @@ class Scenario:
         """Resolve the availability key into a stateful model."""
         return make_process(self.availability, n_clients, p=p,
                             **dict(self.availability_kwargs))
+
+    def build_completion(self, n_clients: int,
+                         avail_model: Optional[AvailabilityModel] = None,
+                         override: Optional[str] = None,
+                         override_kwargs=None) -> CompletionModel:
+        """Resolve the completion key into a mid-round dropout model.
+
+        ``avail_model`` is the scenario's own availability model —
+        required by ``availability_coupled`` (dropout probability follows
+        its ``marginals(t)``), ignored by the other regimes.
+        ``override``/``override_kwargs`` are the RunSpec-level fields: a
+        named override replaces this scenario's process wholesale, kwargs
+        alone overlay its ``completion_kwargs``
+        (:func:`repro.sim.completion.resolve_completion` — the one place
+        those semantics live; every engine builds through here).
+        """
+        name, kw = resolve_completion(self, override, override_kwargs)
+        return make_completion(name, n_clients, avail_model=avail_model,
+                               **kw)
 
     def build_budget(self, default_k: Optional[int] = None) -> BudgetSchedule:
         """Resolve the budget key into a K_t schedule.
@@ -138,6 +162,17 @@ _BUILTIN = (
              budget="step",
              budget_kwargs={"k_before": 10, "k_after": 3, "t_switch": 75},
              description="abrupt mid-run budget drop 10→3 (capacity outage)"),
+    Scenario("dropout", "bernoulli",
+             availability_kwargs={"q": 0.6, "sigma": 0.5},
+             completion="availability_coupled",
+             completion_kwargs={"gamma": 1.0, "floor": 0.05},
+             description="heterogeneous availability with mid-round dropout "
+                         "coupled to each client's availability marginal"),
+    Scenario("straggler", "scarce", availability_kwargs={"q": 0.5},
+             completion="deadline",
+             completion_kwargs={"deadline": 1.0, "spread": 0.4},
+             description="i.i.d. availability with a per-round reporting "
+                         "deadline: slow clients miss aggregation"),
 )
 
 for _sc in _BUILTIN:

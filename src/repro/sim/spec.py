@@ -30,9 +30,26 @@ from typing import Any, Mapping, Optional, Union
 import numpy as np
 
 from ..core.strategies import resolve_strategy
+from .completion import COMPLETION_REGISTRY, resolve_completion
 from .scenario import Scenario, get_scenario
 
 __all__ = ["RunSpec"]
+
+
+def _check_positive_int(value, field: str, *, optional: bool = False) -> None:
+    """Reject zero/negative/non-integer run-shape fields with a clear error
+    instead of a ``ZeroDivisionError`` (eval_every=0 inside ``t %
+    eval_every``) or an ``IndexError`` (rounds=0 on ``history[-1]``) deep
+    inside an engine."""
+    if value is None:
+        if optional:
+            return
+        raise ValueError(f"RunSpec.{field} must be set")
+    if isinstance(value, bool) or not isinstance(value, (int, np.integer)):
+        raise ValueError(f"RunSpec.{field} must be an int >= 1, "
+                         f"got {value!r}")
+    if value < 1:
+        raise ValueError(f"RunSpec.{field} must be >= 1, got {value}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +60,11 @@ class RunSpec:
     scenario: Union[str, Scenario] = "scarce"   # registry key or inline spec
     strategy: str = "f3ast"                     # STRATEGY_REGISTRY key/alias
     strategy_kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    completion: Optional[str] = None            # COMPLETION_REGISTRY key;
+    #   None -> the scenario's own completion process (default "always").
+    #   completion_kwargs overlay the scenario's kwargs when completion is
+    #   None (dropout-severity sweeps), replace them when it is set.
+    completion_kwargs: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     rounds: Optional[int] = None                # None -> scenario/task default
     clients_per_round: Optional[int] = None     # None -> task default M
     beta: Optional[float] = None                # rate-EMA step; task default
@@ -69,15 +91,29 @@ class RunSpec:
     def resolved(self) -> "RunSpec":
         """Validate + normalize: alias resolution (``fedadam`` → fedavg +
         Adam server) and server-lr defaulting happen HERE, once, before any
-        engine dispatch; unknown strategy/scenario keys raise ``KeyError``
-        listing the registered names (fail fast, never inside a compiled
-        loop)."""
+        engine dispatch; unknown strategy/scenario/completion keys raise
+        ``KeyError`` listing the registered names and invalid numeric
+        fields raise ``ValueError`` (fail fast, never inside a compiled
+        loop or as a ``ZeroDivisionError`` mid-run)."""
         name, server_opt, server_lr = resolve_strategy(
             self.strategy, self.server_opt, self.server_lr)
-        get_scenario(self.scenario)            # KeyError w/ known keys
+        sc = get_scenario(self.scenario)       # KeyError w/ known keys
+        comp_name, comp_kwargs = resolve_completion(
+            sc, self.completion, self.completion_kwargs)
+        if comp_name.lower() not in COMPLETION_REGISTRY:
+            raise KeyError(f"unknown completion process {comp_name!r}; "
+                           f"known: {sorted(COMPLETION_REGISTRY)}")
         if self.engine not in ("device", "host"):
             raise ValueError(f"engine must be 'device' or 'host', "
                              f"got {self.engine!r}")
+        if self.fed_mode not in ("parallel", "sequential"):
+            raise ValueError(f"fed_mode must be 'parallel' or 'sequential', "
+                             f"got {self.fed_mode!r}")
+        _check_positive_int(self.rounds, "rounds", optional=True)
+        _check_positive_int(self.eval_every, "eval_every")
+        _check_positive_int(self.chunk_size, "chunk_size", optional=True)
+        _check_positive_int(self.clients_per_round, "clients_per_round",
+                            optional=True)
         return dataclasses.replace(self, strategy=name,
                                    server_opt=server_opt,
                                    server_lr=server_lr)

@@ -24,6 +24,7 @@ import json
 import os
 from typing import Callable, Optional, Sequence
 
+from .completion import COMPLETION_REGISTRY
 from .runner import run_scenario
 from .scenario import SCENARIO_REGISTRY, get_scenario, list_scenarios
 from .spec import RunSpec
@@ -38,13 +39,15 @@ _UNSET = object()   # "kwarg not passed" — lets base_spec keep its value
 
 
 def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = None,
-              *, rounds=_UNSET, out_dir: str = "experiments/sweep",
+              *, completions: Optional[Sequence[str]] = None,
+              rounds=_UNSET, out_dir: str = "experiments/sweep",
               seed=_UNSET, server_opt=_UNSET, server_lr=_UNSET,
               eval_every: Optional[int] = None, engine=_UNSET,
               mesh=_UNSET, clients_axis=_UNSET,
               base_spec: Optional[RunSpec] = None,
               log_fn: Callable = print) -> dict:
-    """Run the grid; returns {(scenario, algorithm): final_metrics}.
+    """Run the grid; returns {(scenario, algorithm): final_metrics} — or
+    {(scenario, algorithm, completion): ...} when ``completions`` is given.
 
     Every cell is ``dataclasses.replace(base_spec, scenario=...,
     strategy=..., ...)`` of one base :class:`RunSpec` — pass ``base_spec``
@@ -52,13 +55,17 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
     loose keyword arguments cover the common ones and override the base
     only when explicitly passed.
 
-    ``algorithms=None`` uses each scenario's own default grid.  ``rounds``
-    overrides every cell (otherwise scenario/task defaults apply) and
-    ``eval_every`` defaults to evaluating only first + last round for short
-    sweeps.  ``engine`` routes every cell through the device-resident
-    engine (default) or the reference host loop (DESIGN.md §7); ``mesh``
-    shards the client dimension of every cell over that many devices
-    (DESIGN.md §7.2).
+    ``algorithms=None`` uses each scenario's own default grid.
+    ``completions`` adds a third grid axis of completion-process keys
+    (``repro.sim.completion``) — e.g. ``["always", "bernoulli"]`` compares
+    idealized rounds against mid-round dropout cell by cell; ``None``
+    keeps each scenario's own completion process and the two-axis result
+    shape.  ``rounds`` overrides every cell (otherwise scenario/task
+    defaults apply) and ``eval_every`` defaults to evaluating only first +
+    last round for short sweeps.  ``engine`` routes every cell through the
+    device-resident engine (default) or the reference host loop
+    (DESIGN.md §7); ``mesh`` shards the client dimension of every cell
+    over that many devices (DESIGN.md §7.2).
     """
     os.makedirs(out_dir, exist_ok=True)
     overrides = {k: v for k, v in dict(
@@ -70,26 +77,35 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
     for sc_key in scenarios:
         sc = get_scenario(sc_key)
         algos = tuple(algorithms) if algorithms else sc.algorithms
+        comps = tuple(completions) if completions else (None,)
         for algo in algos:
-            cell = f"{sc.name}__{algo}"
-            path = os.path.join(out_dir, f"{cell}.jsonl")
-            ev = eval_every or max(1, (base.rounds or sc.rounds or 150) // 5)
-            spec = dataclasses.replace(base, scenario=sc, strategy=algo,
-                                       eval_every=ev, metrics_path=path)
-            if spec.mesh is None or isinstance(spec.mesh, int):
-                spec.save(os.path.join(out_dir, f"{cell}.spec.json"))
-            else:       # runtime-only Mesh objects are not serializable
-                log_fn(f"sweep,{cell}: mesh is a runtime Mesh object, "
-                       f"skipping {cell}.spec.json")
-            res = run_scenario(spec, log_fn=lambda *_: None)
-            results[(sc.name, algo)] = res.final_metrics
-            fm = res.final_metrics
-            log_fn(f"sweep,{sc.name},{algo},"
-                   f"acc={fm.get('test_acc', float('nan')):.4f},"
-                   f"loss={fm.get('test_loss', float('nan')):.4f},"
-                   f"wall_s={fm['wall_s']:.1f} -> {path}")
+            for comp in comps:
+                cell = f"{sc.name}__{algo}"
+                cell_key = (sc.name, algo)
+                if completions:
+                    cell = f"{cell}__{comp}"
+                    cell_key = (sc.name, algo, comp)
+                path = os.path.join(out_dir, f"{cell}.jsonl")
+                ev = eval_every or max(1, (base.rounds or sc.rounds or 150)
+                                       // 5)
+                spec = dataclasses.replace(base, scenario=sc, strategy=algo,
+                                           eval_every=ev, metrics_path=path)
+                if comp is not None:
+                    spec = dataclasses.replace(spec, completion=comp)
+                if spec.mesh is None or isinstance(spec.mesh, int):
+                    spec.save(os.path.join(out_dir, f"{cell}.spec.json"))
+                else:   # runtime-only Mesh objects are not serializable
+                    log_fn(f"sweep,{cell}: mesh is a runtime Mesh object, "
+                           f"skipping {cell}.spec.json")
+                res = run_scenario(spec, log_fn=lambda *_: None)
+                results[cell_key] = res.final_metrics
+                fm = res.final_metrics
+                log_fn(f"sweep,{','.join(cell_key)},"
+                       f"acc={fm.get('test_acc', float('nan')):.4f},"
+                       f"loss={fm.get('test_loss', float('nan')):.4f},"
+                       f"wall_s={fm['wall_s']:.1f} -> {path}")
     with open(os.path.join(out_dir, "summary.json"), "w") as f:
-        json.dump({f"{s}|{a}": m for (s, a), m in results.items()}, f, indent=1)
+        json.dump({"|".join(k): m for k, m in results.items()}, f, indent=1)
     return results
 
 
@@ -108,6 +124,10 @@ def main(argv=None) -> None:
                     help="comma-separated strategy names, or 'all' "
                          f"({','.join(ALGORITHMS)}); default: each "
                          "scenario's own grid")
+    ap.add_argument("--completions", default=None,
+                    help="comma-separated completion-process keys, or 'all' "
+                         "— adds a mid-round-dropout axis to the grid "
+                         "(default: each scenario's own completion process)")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--out", default="experiments/sweep")
     ap.add_argument("--seed", type=int, default=0)
@@ -137,7 +157,10 @@ def main(argv=None) -> None:
     scenarios = _parse_list(args.scenarios, list_scenarios())
     algorithms = (_parse_list(args.algorithms, ALGORITHMS) if args.algorithms
                   else None)
-    run_sweep(scenarios, algorithms, rounds=args.rounds, out_dir=args.out,
+    completions = (_parse_list(args.completions, sorted(COMPLETION_REGISTRY))
+                   if args.completions else None)
+    run_sweep(scenarios, algorithms, completions=completions,
+              rounds=args.rounds, out_dir=args.out,
               seed=args.seed, server_opt=args.server_opt,
               eval_every=args.eval_every,
               engine=args.engine, mesh=args.mesh,

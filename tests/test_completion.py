@@ -1,0 +1,408 @@
+"""Mid-round completion process: registry, strategy contract, engine parity.
+
+The completion subsystem (``sim/completion.py``) models "selected ≠
+completed": a per-round (N,) bool mask of the selected clients that
+actually return an update.  Required invariants:
+
+* ``completion="always"`` (the default) is bit-identical to pre-completion
+  behavior on all three engines — masks, r_k trajectories, losses;
+* with dropout enabled, the same seed gives identical completion masks and
+  final rates across host, device, and sharded engines (losses atol 1e-5);
+* the r_k EMA and the aggregation weights are driven by the *completed*
+  set (F3AST's unbiasedness does not survive counting non-deliveries);
+* the metrics JSONL stream is schema-compatible between engines.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.strategies import SelectCtx, make_strategy, strategy_rates
+from repro.sim import RunSpec, run_scenario
+from repro.sim.completion import (COMPLETION_REGISTRY, AlwaysComplete,
+                                  make_completion, resolve_completion)
+from repro.sim.processes import _nonempty, make_process
+from repro.sim.scenario import get_scenario
+
+ROUNDS = 10
+
+
+def _silent(*args, **kwargs):
+    pass
+
+
+def _run(spec, **overrides):
+    return run_scenario(spec.replace(**overrides), log_fn=_silent)
+
+
+# ---------------------------------------------------------------------------
+# Registry + model semantics
+# ---------------------------------------------------------------------------
+
+def test_registry_keys_and_unknown_key_fails_fast():
+    assert set(COMPLETION_REGISTRY) == {"always", "bernoulli",
+                                        "availability_coupled", "deadline"}
+    with pytest.raises(KeyError, match="nope.*known"):
+        make_completion("nope", 10)
+
+
+def test_always_is_trivial_identity():
+    m = make_completion("always", 7)
+    assert m.trivial
+    sel = jnp.asarray([True, False, True, False, True, False, False])
+    out = m.sample(jax.random.PRNGKey(0), 0, sel)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(sel))
+    np.testing.assert_array_equal(np.asarray(m.rate(0)), np.ones(7))
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("bernoulli", {"q": 0.5}),
+    ("bernoulli", {"q": 0.7, "sigma": 0.8}),
+    ("deadline", {"deadline": 0.8}),
+])
+def test_completed_is_subset_of_selected(name, kw):
+    n = 64
+    m = make_completion(name, n, **kw)
+    assert not m.trivial
+    rng = np.random.default_rng(0)
+    for i in range(5):
+        sel = jnp.asarray(rng.random(n) < 0.4)
+        out = np.asarray(m.sample(jax.random.PRNGKey(i), i, sel))
+        assert (out <= np.asarray(sel)).all()
+        # pure function of the key: same draw twice
+        out2 = np.asarray(m.sample(jax.random.PRNGKey(i), i, sel))
+        np.testing.assert_array_equal(out, out2)
+
+
+def test_availability_coupled_needs_and_follows_the_availability_model():
+    n = 200
+    with pytest.raises(TypeError, match="availability"):
+        make_completion("availability_coupled", n)
+    av = make_process("diurnal", n, phase_spread=True)
+    m = make_completion("availability_coupled", n, avail_model=av,
+                        gamma=1.0, floor=0.01)
+    np.testing.assert_allclose(np.asarray(m.rate(3)),
+                               np.clip(np.asarray(av.marginals(3)), 0.01, 1.0),
+                               atol=1e-6)
+    # clients with higher marginals complete more often
+    sel = jnp.ones(n, bool)
+    counts = np.zeros(n)
+    for i in range(200):
+        counts += np.asarray(m.sample(jax.random.PRNGKey(i), 0, sel))
+    q = np.asarray(m.rate(0))
+    hi, lo = q > np.quantile(q, 0.8), q < np.quantile(q, 0.2)
+    assert counts[hi].mean() > counts[lo].mean() + 20
+
+
+def test_deadline_rate_matches_empirical_completion():
+    n, trials = 500, 400
+    m = make_completion("deadline", n, deadline=0.9, spread=0.5, sigma=0.3)
+    sel = jnp.ones(n, bool)
+    counts = np.zeros(n)
+    for i in range(trials):
+        counts += np.asarray(m.sample(jax.random.PRNGKey(i), 0, sel))
+    emp = counts / trials
+    np.testing.assert_allclose(emp.mean(), float(np.asarray(m.rate(0)).mean()),
+                               atol=0.05)
+
+
+def test_resolve_completion_spec_overrides_scenario():
+    sc = get_scenario("dropout")      # availability_coupled by default
+    assert resolve_completion(sc, None, {}) == (
+        "availability_coupled", dict(sc.completion_kwargs))
+    # kwargs-only override overlays the scenario's kwargs
+    name, kw = resolve_completion(sc, None, {"gamma": 2.0})
+    assert name == "availability_coupled" and kw["gamma"] == 2.0
+    assert kw["floor"] == sc.completion_kwargs["floor"]
+    # naming a process replaces it wholesale
+    assert resolve_completion(sc, "bernoulli", {"q": 0.5}) == (
+        "bernoulli", {"q": 0.5})
+
+
+# ---------------------------------------------------------------------------
+# Strategy contract: finalize sees the completed mask
+# ---------------------------------------------------------------------------
+
+def test_rate_ema_counts_completions_not_selections():
+    n = 12
+    p = np.full(n, 1.0 / n, np.float32)
+    strategy = make_strategy("f3ast", n, p, beta=0.5, clients_per_round=4)
+    state = strategy.init(n)
+    avail = jnp.ones(n, bool)
+    drop_all = SelectCtx(t=0, complete=lambda m: jnp.zeros_like(m))
+    mask, w, new_state = strategy.select(state, jax.random.PRNGKey(0), avail,
+                                         jnp.asarray(4), drop_all)
+    assert int(np.asarray(mask).sum()) == 4          # selection unaffected
+    # every selected client dropped: zero weights, EMA decays toward 0
+    np.testing.assert_array_equal(np.asarray(w), np.zeros(n))
+    r0 = np.asarray(strategy_rates(strategy, state))
+    r1 = np.asarray(strategy_rates(strategy, new_state))
+    np.testing.assert_allclose(r1, 0.5 * r0, atol=1e-7)
+
+
+def test_weights_renormalize_over_survivors():
+    n = 10
+    p = np.full(n, 1.0 / n, np.float32)
+    strategy = make_strategy("uniform", n, p, clients_per_round=4)
+    state = strategy.init(n)
+    avail = jnp.ones(n, bool)
+    survivor = None
+
+    def keep_one(m):
+        nonlocal survivor
+        ids = jnp.flatnonzero(m, size=n, fill_value=0)
+        survivor = int(ids[0])
+        return jnp.zeros_like(m).at[ids[0]].set(True)
+
+    mask, w, _ = strategy.select(state, jax.random.PRNGKey(1), avail,
+                                 jnp.asarray(4), SelectCtx(complete=keep_one))
+    w = np.asarray(w)
+    assert w[survivor] == pytest.approx(1.0)          # 1/|survivors|
+    assert w.sum() == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Engine parity (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("completion,kwargs", [
+    ("bernoulli", {"q": 0.6}),
+    ("availability_coupled", {"gamma": 1.0, "floor": 0.05}),
+    ("deadline", {"deadline": 0.9}),
+])
+def test_dropout_parity_across_three_engines(completion, kwargs):
+    spec = RunSpec(scenario="scarce", strategy="f3ast", rounds=ROUNDS,
+                   eval_every=ROUNDS, completion=completion,
+                   completion_kwargs=kwargs)
+    host = _run(spec, engine="host")
+    dev = _run(spec)
+    sh = _run(spec, mesh=0)
+    assert sh.final_metrics["engine"] == "sharded"
+    # dropout actually happened
+    assert host.comp_history.sum() < host.sel_history.sum()
+    assert (host.comp_history <= host.sel_history).all()
+    # identical selection AND completion masks, bit-identical rates
+    np.testing.assert_array_equal(host.sel_history, dev.sel_history)
+    np.testing.assert_array_equal(host.comp_history, dev.comp_history)
+    np.testing.assert_array_equal(sh.sel_history, dev.sel_history)
+    np.testing.assert_array_equal(sh.comp_history, dev.comp_history)
+    np.testing.assert_allclose(host.rates, dev.rates, atol=1e-6)
+    np.testing.assert_array_equal(sh.rates, dev.rates)
+    assert host.final_metrics["test_loss"] == pytest.approx(
+        dev.final_metrics["test_loss"], abs=1e-5)
+    assert sh.final_metrics["test_loss"] == pytest.approx(
+        dev.final_metrics["test_loss"], abs=1e-5)
+
+
+def test_always_completion_is_bit_identical_to_default():
+    base = RunSpec(scenario="scarce", strategy="f3ast", rounds=ROUNDS,
+                   eval_every=ROUNDS)
+    for engine, mesh in (("host", None), ("device", None), ("device", 0)):
+        a = _run(base, engine=engine, mesh=mesh)
+        b = _run(base, engine=engine, mesh=mesh, completion="always")
+        np.testing.assert_array_equal(a.sel_history, b.sel_history)
+        np.testing.assert_array_equal(a.comp_history, a.sel_history)
+        np.testing.assert_array_equal(b.comp_history, b.sel_history)
+        np.testing.assert_array_equal(a.rates, b.rates)
+        assert a.final_metrics["test_loss"] == b.final_metrics["test_loss"]
+
+
+def test_rate_ema_reconstructs_from_completed_stream():
+    # r(T) is exactly the EMA of the streamed *completed* masks — the
+    # documented RoundStream reconstruction contract under dropout.
+    from repro.configs import PAPER_TASKS
+    beta = PAPER_TASKS["synthetic11"].beta
+    res = _run(RunSpec(scenario="scarce", strategy="f3ast", rounds=ROUNDS,
+                       eval_every=ROUNDS, completion="bernoulli",
+                       completion_kwargs={"q": 0.5}))
+    n = res.comp_history.shape[1]
+    m = PAPER_TASKS["synthetic11"].clients_per_round
+    r = np.full(n, m / n, np.float32)
+    for t in range(ROUNDS):
+        r = (1.0 - beta) * r + beta * res.comp_history[t]
+    np.testing.assert_allclose(res.rates, r, atol=1e-6)
+
+
+def test_dropout_chunk_size_independence():
+    spec = RunSpec(scenario="scarce", strategy="f3ast", rounds=12,
+                   eval_every=12, completion="bernoulli",
+                   completion_kwargs={"q": 0.5})
+    a = _run(spec, chunk_size=12)
+    b = _run(spec, chunk_size=5)
+    np.testing.assert_array_equal(a.comp_history, b.comp_history)
+    assert a.final_metrics["test_loss"] == pytest.approx(
+        b.final_metrics["test_loss"], rel=1e-5)
+
+
+def test_vmapped_cells_stream_completion():
+    from repro.sim import run_cells_vmapped
+    vm = run_cells_vmapped("scarce", "f3ast", seeds=[0, 1], rounds=8,
+                           chunk_size=4, completion="bernoulli",
+                           completion_kwargs={"q": 0.6})
+    single = _run(RunSpec(scenario="scarce", strategy="f3ast", rounds=8,
+                          eval_every=8, chunk_size=4,
+                          completion="bernoulli",
+                          completion_kwargs={"q": 0.6}))
+    np.testing.assert_array_equal(vm["comp_history"][0], single.comp_history)
+    assert (vm["comp_history"] <= vm["sel_history"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Metrics JSONL: schema parity host ⇔ device
+# ---------------------------------------------------------------------------
+
+def test_metrics_jsonl_schema_parity_host_vs_device(tmp_path):
+    spec = RunSpec(scenario="scarce", strategy="f3ast", rounds=10,
+                   eval_every=5, completion="bernoulli",
+                   completion_kwargs={"q": 0.7})
+    paths = {}
+    for engine in ("host", "device"):
+        paths[engine] = str(tmp_path / f"{engine}.jsonl")
+        _run(spec, engine=engine, metrics_path=paths[engine])
+    recs = {e: [json.loads(line) for line in open(p)]
+            for e, p in paths.items()}
+    assert len(recs["host"]) == len(recs["device"]) == 10
+    eval_keys = {"test_loss", "test_acc"}
+    for rh, rd in zip(recs["host"], recs["device"]):
+        # identical base schema on every round (eval metrics land on
+        # different rounds by documented design: host evals at t ≡ 0 mod
+        # eval_every, the device engine at chunk boundaries)
+        assert set(rh) - eval_keys == set(rd) - eval_keys
+    assert (set().union(*map(set, recs["host"]))
+            == set().union(*map(set, recs["device"])))
+    for field in ("k_t", "n_selected", "n_available", "n_completed",
+                  "round"):
+        assert [r[field] for r in recs["host"]] \
+            == [r[field] for r in recs["device"]], field
+    # dropout is visible in the stream
+    assert any(r["n_completed"] < r["n_selected"] for r in recs["host"])
+
+
+# ---------------------------------------------------------------------------
+# RunSpec: round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_runspec_completion_fields_round_trip():
+    spec = RunSpec(scenario="scarce", strategy="f3ast",
+                   completion="deadline",
+                   completion_kwargs={"deadline": 0.8, "spread": 0.3})
+    assert RunSpec.from_json(spec.to_json()) == spec
+    # inline scenario with a completion entry round-trips too
+    sc = get_scenario("dropout")
+    spec2 = RunSpec(scenario=sc, strategy="f3ast")
+    back = RunSpec.from_json(spec2.to_json())
+    assert back.scenario.completion == "availability_coupled"
+    assert back == spec2
+
+
+@pytest.mark.parametrize("field,value,match", [
+    ("rounds", 0, "rounds"),
+    ("rounds", -3, "rounds"),
+    ("rounds", 2.5, "rounds"),
+    ("eval_every", 0, "eval_every"),
+    ("eval_every", -1, "eval_every"),
+    ("chunk_size", 0, "chunk_size"),
+    ("clients_per_round", 0, "clients_per_round"),
+    ("fed_mode", "bogus", "fed_mode"),
+])
+def test_runspec_resolved_rejects_bad_numeric_fields(field, value, match):
+    spec = RunSpec(**{field: value})
+    with pytest.raises(ValueError, match=match):
+        spec.resolved()
+    # and run_scenario surfaces it before any engine work
+    with pytest.raises(ValueError, match=match):
+        run_scenario(spec, log_fn=_silent)
+
+
+def test_runspec_resolved_rejects_unknown_completion():
+    with pytest.raises(KeyError, match="completion"):
+        RunSpec(completion="nope").resolved()
+
+
+def test_runspec_valid_spec_passes_validation():
+    rs = RunSpec(rounds=5, eval_every=2, chunk_size=3,
+                 completion="bernoulli").resolved()
+    assert rs.rounds == 5
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: tie-break biases
+# ---------------------------------------------------------------------------
+
+def test_fixed_f3ast_does_not_favor_low_indices_on_ties():
+    n, k = 20, 5
+    p = np.full(n, 1.0 / n, np.float32)
+    strategy = make_strategy("fixed_f3ast", n, p, clients_per_round=k)
+    state = strategy.init(n)             # uniform r -> all utilities tie
+    avail = jnp.ones(n, bool)
+    counts = np.zeros(n)
+    for i in range(40):
+        mask, _, _ = strategy.select(state, jax.random.PRNGKey(i), avail,
+                                     jnp.asarray(k), SelectCtx(t=i))
+        counts += np.asarray(mask)
+    # the old stable (score, id) tie-break selected exactly {0..k-1} every
+    # round; the random tie-break must spread selection across the fleet
+    assert counts[k:].sum() > 0
+    assert counts[:k].sum() < 40 * k
+    assert (counts > 0).sum() > k
+
+
+def test_nonempty_fallback_is_uniform_over_max_marginal_clients():
+    n = 8
+    down = jnp.zeros(n, bool)
+    q_flat = jnp.full(n, 0.3)
+    woken = set()
+    for i in range(40):
+        mask = np.asarray(_nonempty(down, q_flat,
+                                    jax.random.PRNGKey(i)))
+        assert mask.sum() == 1
+        woken.add(int(np.argmax(mask)))
+    assert len(woken) > 1            # argmax(q) would always wake client 0
+    # a strict max still always wins
+    q_peak = jnp.asarray([0.1, 0.2, 0.9, 0.2, 0.1, 0.1, 0.1, 0.1])
+    for i in range(10):
+        mask = np.asarray(_nonempty(down, q_peak, jax.random.PRNGKey(i)))
+        assert int(np.argmax(mask)) == 2
+    # the non-empty common path is untouched
+    up = jnp.asarray([False, True, False, True, False, False, False, False])
+    np.testing.assert_array_equal(
+        np.asarray(_nonempty(up, q_flat, jax.random.PRNGKey(0))),
+        np.asarray(up))
+
+
+def test_availability_fallback_unbiased_end_to_end():
+    # scarce q=0.01 on 5 clients: all-down rounds are common; the woken
+    # client must not deterministically be client 0
+    model = make_process("scarce", 5, q=0.01)
+    state = model.init()
+    counts = np.zeros(5)
+    key = jax.random.PRNGKey(0)
+    for t in range(300):
+        key, kt = jax.random.split(key)
+        state, mask = model.step(kt, state, t)
+        m = np.asarray(mask)
+        assert m.any()
+        if m.sum() == 1:
+            counts += m
+    assert counts.max() < 0.9 * counts.sum()   # spread across clients
+
+
+# ---------------------------------------------------------------------------
+# Sweep: the completion axis
+# ---------------------------------------------------------------------------
+
+def test_sweep_completion_axis(tmp_path):
+    from repro.sim.sweep import run_sweep
+    out = str(tmp_path / "sweep")
+    results = run_sweep(["scarce"], ["f3ast"],
+                        completions=["always", "bernoulli"],
+                        rounds=3, out_dir=out, log_fn=_silent)
+    assert set(results) == {("scarce", "f3ast", "always"),
+                            ("scarce", "f3ast", "bernoulli")}
+    spec = RunSpec.load(f"{out}/scarce__f3ast__bernoulli.spec.json")
+    assert spec.completion == "bernoulli"
+    summary = json.load(open(f"{out}/summary.json"))
+    assert set(summary) == {"scarce|f3ast|always", "scarce|f3ast|bernoulli"}

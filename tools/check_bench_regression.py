@@ -5,12 +5,17 @@ Compares a freshly measured ``BENCH_engine.json`` (see
 ``benchmarks/bench_engine.py``) against the committed baseline:
 
 1. Per-engine absolute throughput: each of ``host`` / ``device`` /
-   ``vmapped*`` must reach at least ``(1 - threshold)`` of the baseline
-   rounds/sec (default threshold 0.30, i.e. a >30% regression fails).
+   ``device_dropout`` / ``vmapped*`` must reach at least ``(1 -
+   threshold)`` of the baseline rounds/sec (default threshold 0.30, i.e. a
+   >30% regression fails).
 2. Relative speedup: ``speedup_device_over_host`` in the current run must
    stay above ``--min-speedup``.  This check is machine-independent (both
    numbers come from the same run), so it stays meaningful even when the CI
    runner is a different machine class than the baseline's.
+3. Dropout-path ratio: the completion-enabled device cell must hold at
+   least ``--min-dropout-ratio`` of the plain device engine's rounds/sec
+   in the current run (also machine-independent) — the guard that the
+   mid-round-dropout path cannot silently regress the compiled engine.
 
 With ``--nscale-current`` it additionally checks the client-scaling column
 (``benchmarks/bench_engine.py --nscale-only``): the largest-N *sharded* cell
@@ -45,7 +50,8 @@ def engine_keys(result: dict) -> list:
     return keys
 
 
-def check(baseline: dict, current: dict, threshold: float, min_speedup: float) -> list:
+def check(baseline: dict, current: dict, threshold: float, min_speedup: float,
+          min_dropout_ratio: float = 0.0) -> list:
     errors = []
     for name in engine_keys(baseline):
         if name not in current:
@@ -66,6 +72,16 @@ def check(baseline: dict, current: dict, threshold: float, min_speedup: float) -
             f"device engine speedup over host is {speedup:.2f}x, "
             f"below the required {min_speedup:.2f}x"
         )
+    if min_dropout_ratio > 0.0 and "device_dropout" in current \
+            and "device" in current:
+        ratio = (current["device_dropout"]["rounds_per_s"]
+                 / max(current["device"]["rounds_per_s"], 1e-9))
+        if ratio < min_dropout_ratio:
+            errors.append(
+                f"completion-enabled device cell runs at {ratio:.2f}x of the "
+                f"plain device engine, below the required "
+                f"{min_dropout_ratio:.2f}x"
+            )
     return errors
 
 
@@ -111,11 +127,19 @@ def main(argv=None) -> int:
         default=2.0,
         help="required device-over-host speedup in the current run",
     )
+    ap.add_argument(
+        "--min-dropout-ratio",
+        type=float,
+        default=0.6,
+        help="required device_dropout / device rounds-per-sec ratio in the "
+        "current run (0 disables the check)",
+    )
     args = ap.parse_args(argv)
 
     baseline = load(args.baseline)
     current = load(args.current)
-    errors = check(baseline, current, args.threshold, args.min_speedup)
+    errors = check(baseline, current, args.threshold, args.min_speedup,
+                   args.min_dropout_ratio)
     if args.nscale_current:
         errors += check_nscale(load(args.nscale_current))
     if errors:
