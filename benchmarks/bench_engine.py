@@ -14,6 +14,12 @@ is where XLA compiles) for the three execution paths of one
                        dropout path's throughput (the extra per-round cost
                        is one bernoulli draw + a mask multiply, so it must
                        stay close to ``device``).
+* ``device_buffered``— the buffered-async engine (``sim/engine_async.py``,
+                       ``aggregation="buffered"``): the same compiled scan
+                       plus the pending-arrival pool (insert + 3-pass sort
+                       + flush per server step); ``buffered_over_sync_ratio``
+                       guards how much of the sync engine's throughput the
+                       pool bookkeeping costs.
 * ``vmapped8``       — 8 cells (seeds 0..7) in one vmapped program
                        (``run_cells_vmapped``); rounds/sec counts all cells.
 
@@ -86,6 +92,17 @@ def bench_device(scenario: str, algo: str, rounds: int, seed: int,
                    seed=seed, eval_every=rounds, chunk_size=chunk_size,
                    engine="device", completion=completion,
                    completion_kwargs=completion_kwargs or {})
+    res = run_scenario(spec, log_fn=_silent)
+    return dict(rounds=rounds, chunk_size=chunk_size,
+                wall_s=round(res.final_metrics["wall_s"], 4),
+                rounds_per_s=round(res.final_metrics["steady_rounds_per_s"], 2))
+
+
+def bench_buffered(scenario: str, algo: str, rounds: int, seed: int,
+                   chunk_size: int) -> dict:
+    spec = RunSpec(scenario=scenario, strategy=algo, rounds=rounds,
+                   seed=seed, eval_every=rounds, chunk_size=chunk_size,
+                   engine="device", aggregation="buffered")
     res = run_scenario(spec, log_fn=_silent)
     return dict(rounds=rounds, chunk_size=chunk_size,
                 wall_s=round(res.final_metrics["wall_s"], 4),
@@ -249,6 +266,11 @@ def main(argv=None) -> dict:
         args.scenario, args.algo, dev_rounds, args.seed, chunk,
         completion="bernoulli", completion_kwargs={"q": 0.8})
     print(f"  -> {result['device_dropout']['rounds_per_s']:.1f} rounds/s")
+    print(f"benching device buffered  ({dev_rounds} rounds, "
+          f"chunk={chunk}) ...")
+    result["device_buffered"] = bench_buffered(
+        args.scenario, args.algo, dev_rounds, args.seed, chunk)
+    print(f"  -> {result['device_buffered']['rounds_per_s']:.1f} rounds/s")
     print(f"benching vmapped x{args.cells}       ({dev_rounds} rounds) ...")
     result[f"vmapped{args.cells}"] = bench_vmapped(
         args.scenario, args.algo, dev_rounds, args.cells, chunk)
@@ -264,6 +286,11 @@ def main(argv=None) -> dict:
     # compiled round — it must stay close to the plain device engine
     result["dropout_over_device_ratio"] = round(
         result["device_dropout"]["rounds_per_s"]
+        / result["device"]["rounds_per_s"], 3)
+    # the buffered engine adds pool insert/sort/flush per server step on
+    # top of the same compiled round — bound how much throughput that costs
+    result["buffered_over_sync_ratio"] = round(
+        result["device_buffered"]["rounds_per_s"]
         / result["device"]["rounds_per_s"], 3)
 
     with open(args.out, "w") as f:

@@ -141,6 +141,21 @@ def main():
     ap.add_argument("--completion-kwargs", default=None, metavar="JSON",
                     help="JSON dict of completion-process parameters, e.g. "
                          "'{\"q\": 0.7}'")
+    ap.add_argument("--aggregation", default="sync",
+                    choices=["sync", "buffered"],
+                    help="server semantics: round-synchronous (default) or "
+                         "FedBuff-style buffered-asynchronous aggregation "
+                         "(DESIGN.md §7.4)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="buffered aggregation: arrivals aggregated per "
+                         "server step (default: half the per-round budget)")
+    ap.add_argument("--staleness-power", type=float, default=0.5,
+                    help="buffered aggregation: staleness-discount exponent "
+                         "(weight ∝ 1/(1+staleness)^power)")
+    ap.add_argument("--staleness-discount", default="polynomial",
+                    help="buffered aggregation: discount family from the "
+                         "STALENESS_DISCOUNTS registry (polynomial, "
+                         "exponential, or a registered plug-in)")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--server-opt", default=None)
     ap.add_argument("--clients-per-round", type=int, default=None)
@@ -189,6 +204,10 @@ def main():
                        seed=args.seed, ckpt_dir=args.ckpt_dir,
                        prox_mu=args.prox_mu, engine=args.engine,
                        mesh=args.mesh, clients_axis=args.clients_axis,
+                       aggregation=args.aggregation,
+                       buffer_size=args.buffer_size,
+                       staleness_power=args.staleness_power,
+                       staleness_discount=args.staleness_discount,
                        metrics_path=args.metrics_jsonl)
     if args.save_spec:
         spec.save(args.save_spec)

@@ -46,3 +46,6 @@ from .runner import TrainResult, build_task, run_scenario, run_spec
 from .engine import (DeviceEngine, build_engine, run_cells_vmapped,
                      run_scenario_device)
 from .engine_sharded import ShardedEngine, resolve_client_mesh
+from .engine_async import (STALENESS_DISCOUNTS, AsyncEngine,
+                           register_staleness_discount,
+                           run_scenario_buffered, staleness_weights)

@@ -69,16 +69,29 @@ class CompletionModel:
       n_clients      — N
       trivial        — True iff ``sample`` is the identity (no RNG used);
                        engines skip the completion plumbing entirely
+      has_latency    — True iff the model carries a real latency
+                       distribution, i.e. ``latencies`` is implemented;
+                       the buffered/async engine requires it
       sample(key, t, sel_mask) -> (N,) bool   completed ⊆ sel_mask
+      latencies(key, t) -> (N,) float32       per-client round latency draw
+                       (server-step units, > 0); the *same* draw ``sample``
+                       thresholds against its deadline where applicable
       rate(t)        — (N,) expected completion probability *given
                        selection* (diagnostics / calibration)
     """
 
     n_clients: int
     trivial: bool = False
+    has_latency: bool = False
 
     def sample(self, key: jax.Array, t, sel_mask: jnp.ndarray) -> jnp.ndarray:
         raise NotImplementedError
+
+    def latencies(self, key: jax.Array, t) -> jnp.ndarray:
+        raise NotImplementedError(
+            f"{type(self).__name__} has no latency distribution; the "
+            "buffered/async engine needs a latency-capable completion "
+            "process ('always' or 'deadline')")
 
     def rate(self, t) -> jnp.ndarray:
         raise NotImplementedError
@@ -90,9 +103,16 @@ class AlwaysComplete(CompletionModel):
 
     n_clients: int
     trivial: bool = True
+    has_latency: bool = True
 
     def sample(self, key, t, sel_mask):
         return sel_mask
+
+    def latencies(self, key, t):
+        # deterministic unit latency: every dispatch arrives exactly one
+        # server step later, so the async buffer degenerates to FIFO with
+        # ties broken by client id
+        return jnp.ones((self.n_clients,), jnp.float32)
 
     def rate(self, t):
         return jnp.ones((self.n_clients,), jnp.float32)
@@ -178,6 +198,7 @@ class DeadlineCompletion(CompletionModel):
     spread: float = 0.4
     sigma: float = 0.25
     seed: int = 0
+    has_latency: bool = True
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -185,14 +206,21 @@ class DeadlineCompletion(CompletionModel):
         object.__setattr__(self, "_scale", jnp.asarray(s_k, jnp.float32))
 
     def rate(self, t):
-        # P(s_k e^{sigma eps} <= D) = Phi(log(D / s_k) / sigma)
+        # Per-client: P(s_k e^{sigma eps} <= D) = Phi(log(D / s_k) / sigma).
+        # sigma = 0 makes the latency deterministic (= s_k); the cdf formula
+        # would produce 0/0 = NaN for clients with s_k == D, so that edge is
+        # the indicator s_k <= D instead.
+        if self.sigma <= 0:
+            return (self._scale <= self.deadline).astype(jnp.float32)
         z = jnp.log(self.deadline / self._scale) / self.sigma
         return jax.scipy.stats.norm.cdf(z).astype(jnp.float32)
 
-    def sample(self, key, t, sel_mask):
+    def latencies(self, key, t):
         eps = jax.random.normal(key, (self.n_clients,))
-        latency = self._scale * jnp.exp(self.sigma * eps)
-        return sel_mask & (latency <= self.deadline)
+        return self._scale * jnp.exp(self.sigma * eps)
+
+    def sample(self, key, t, sel_mask):
+        return sel_mask & (self.latencies(key, t) <= self.deadline)
 
 
 # ---------------------------------------------------------------------------

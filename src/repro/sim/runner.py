@@ -74,7 +74,11 @@ class TrainResult:
     empirical_rates: np.ndarray   # time-average of the *selection* masks
     sel_history: Optional[np.ndarray] = None   # (T, N) bool selection masks
     comp_history: Optional[np.ndarray] = None  # (T, N) bool completed masks
-    #   (== sel_history under completion="always"; the r_k EMA tracks these)
+    #   (== sel_history under completion="always"; the r_k EMA tracks these;
+    #   under aggregation="buffered" it marks the clients aggregated at t)
+    async_history: Optional[dict] = None       # buffered runs only: per-step
+    #   buf_ids/buf_valid/buf_staleness/buf_weights (T, M) plus n_buffered /
+    #   mean_staleness / n_overflow (T,) — see sim.engine_async
 
 
 def build_task(task_id: str, seed: int, **task_kwargs):
@@ -195,6 +199,25 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
     algo_label = spec.strategy       # requested name (pre-alias), for logs
     sc = get_scenario(rs.scenario)
     entry = get_strategy_entry(rs.strategy)
+    if rs.aggregation == "buffered":
+        # FedBuff-style buffered-asynchronous server loop (DESIGN.md §7.4);
+        # rs.engine picks the compiled scan or the event-driven reference.
+        from .engine_async import run_scenario_buffered  # lazy: ↔ runner
+        return run_scenario_buffered(
+            sc, rs.strategy, algo_label=algo_label, rounds=rs.rounds,
+            server_opt=rs.server_opt, server_lr=rs.server_lr,
+            clients_per_round=rs.clients_per_round, beta=rs.beta,
+            seed=rs.seed, eval_every=rs.eval_every,
+            chunk_size=rs.chunk_size, ckpt_dir=rs.ckpt_dir,
+            prox_mu=rs.prox_mu,
+            positively_correlated=rs.positively_correlated,
+            metrics_path=rs.metrics_path, fed_mode=rs.fed_mode,
+            strategy_kwargs=rs.strategy_kwargs, completion=rs.completion,
+            completion_kwargs=rs.completion_kwargs,
+            buffer_size=rs.buffer_size,
+            staleness_power=rs.staleness_power,
+            staleness_discount=rs.staleness_discount,
+            engine=rs.engine, log_fn=log_fn)
     if rs.engine == "host" and rs.mesh is not None:
         raise ValueError("mesh= shards the device engine's client dimension; "
                          "it cannot apply to engine='host' (drop mesh or use "

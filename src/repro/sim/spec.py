@@ -69,6 +69,12 @@ class RunSpec:
     clients_per_round: Optional[int] = None     # None -> task default M
     beta: Optional[float] = None                # rate-EMA step; task default
     positively_correlated: bool = False         # H(r) variant (paper Eq. 3)
+    # server aggregation semantics
+    aggregation: str = "sync"                   # "sync" | "buffered" (§7.4)
+    buffer_size: Optional[int] = None           # buffered: arrivals per server
+    #   step (None -> max(1, M // 2), resolved when the cell is built)
+    staleness_power: float = 0.5                # buffered: discount exponent
+    staleness_discount: str = "polynomial"      # STALENESS_DISCOUNTS key
     # server side
     server_opt: str = "sgd"
     server_lr: Optional[float] = None           # None -> opt default (resolve)
@@ -109,6 +115,26 @@ class RunSpec:
         if self.fed_mode not in ("parallel", "sequential"):
             raise ValueError(f"fed_mode must be 'parallel' or 'sequential', "
                              f"got {self.fed_mode!r}")
+        if self.aggregation not in ("sync", "buffered"):
+            raise ValueError(f"aggregation must be 'sync' or 'buffered', "
+                             f"got {self.aggregation!r}")
+        if self.aggregation == "buffered":
+            if self.mesh is not None:
+                raise ValueError(
+                    "aggregation='buffered' has no client-sharded engine "
+                    "yet; drop mesh= or use aggregation='sync'")
+            from .engine_async import STALENESS_DISCOUNTS  # lazy: spec↔engine
+            if self.staleness_discount not in STALENESS_DISCOUNTS:
+                raise KeyError(
+                    f"unknown staleness discount "
+                    f"{self.staleness_discount!r}; "
+                    f"known: {sorted(STALENESS_DISCOUNTS)}")
+            if not (isinstance(self.staleness_power, (int, float))
+                    and not isinstance(self.staleness_power, bool)
+                    and self.staleness_power >= 0):
+                raise ValueError(f"RunSpec.staleness_power must be a "
+                                 f"float >= 0, got {self.staleness_power!r}")
+        _check_positive_int(self.buffer_size, "buffer_size", optional=True)
         _check_positive_int(self.rounds, "rounds", optional=True)
         _check_positive_int(self.eval_every, "eval_every")
         _check_positive_int(self.chunk_size, "chunk_size", optional=True)

@@ -40,14 +40,16 @@ _UNSET = object()   # "kwarg not passed" — lets base_spec keep its value
 
 def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = None,
               *, completions: Optional[Sequence[str]] = None,
+              aggregations: Optional[Sequence[str]] = None,
               rounds=_UNSET, out_dir: str = "experiments/sweep",
               seed=_UNSET, server_opt=_UNSET, server_lr=_UNSET,
               eval_every: Optional[int] = None, engine=_UNSET,
               mesh=_UNSET, clients_axis=_UNSET,
               base_spec: Optional[RunSpec] = None,
               log_fn: Callable = print) -> dict:
-    """Run the grid; returns {(scenario, algorithm): final_metrics} — or
-    {(scenario, algorithm, completion): ...} when ``completions`` is given.
+    """Run the grid; returns {(scenario, algorithm): final_metrics} — with
+    ``completions`` and/or ``aggregations`` given, the key tuple grows a
+    completion / aggregation entry per extra axis.
 
     Every cell is ``dataclasses.replace(base_spec, scenario=...,
     strategy=..., ...)`` of one base :class:`RunSpec` — pass ``base_spec``
@@ -56,6 +58,11 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
     only when explicitly passed.
 
     ``algorithms=None`` uses each scenario's own default grid.
+    ``aggregations`` adds a server-semantics grid axis over
+    ``("sync", "buffered")`` (DESIGN.md §7.4) — e.g. ``["sync",
+    "buffered"]`` compares round-synchronous aggregation against the
+    FedBuff-style buffered server cell by cell; ``None`` keeps every cell
+    synchronous and the aggregation key out of the result tuple.
     ``completions`` adds a third grid axis of completion-process keys
     (``repro.sim.completion``) — e.g. ``["always", "bernoulli"]`` compares
     idealized rounds against mid-round dropout cell by cell; ``None``
@@ -78,13 +85,18 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
         sc = get_scenario(sc_key)
         algos = tuple(algorithms) if algorithms else sc.algorithms
         comps = tuple(completions) if completions else (None,)
+        aggs = tuple(aggregations) if aggregations else (None,)
         for algo in algos:
             for comp in comps:
+              for agg in aggs:
                 cell = f"{sc.name}__{algo}"
                 cell_key = (sc.name, algo)
                 if completions:
                     cell = f"{cell}__{comp}"
                     cell_key = (sc.name, algo, comp)
+                if aggregations:
+                    cell = f"{cell}__{agg}"
+                    cell_key = cell_key + (agg,)
                 path = os.path.join(out_dir, f"{cell}.jsonl")
                 ev = eval_every or max(1, (base.rounds or sc.rounds or 150)
                                        // 5)
@@ -92,6 +104,8 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
                                            eval_every=ev, metrics_path=path)
                 if comp is not None:
                     spec = dataclasses.replace(spec, completion=comp)
+                if agg is not None:
+                    spec = dataclasses.replace(spec, aggregation=agg)
                 if spec.mesh is None or isinstance(spec.mesh, int):
                     spec.save(os.path.join(out_dir, f"{cell}.spec.json"))
                 else:   # runtime-only Mesh objects are not serializable
@@ -128,6 +142,11 @@ def main(argv=None) -> None:
                     help="comma-separated completion-process keys, or 'all' "
                          "— adds a mid-round-dropout axis to the grid "
                          "(default: each scenario's own completion process)")
+    ap.add_argument("--aggregations", default=None,
+                    help="comma-separated server-aggregation modes from "
+                         "{sync,buffered}, or 'all' — adds a sync-vs-"
+                         "FedBuff axis to the grid (DESIGN.md §7.4; "
+                         "default: sync only)")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--out", default="experiments/sweep")
     ap.add_argument("--seed", type=int, default=0)
@@ -159,7 +178,10 @@ def main(argv=None) -> None:
                   else None)
     completions = (_parse_list(args.completions, sorted(COMPLETION_REGISTRY))
                    if args.completions else None)
+    aggregations = (_parse_list(args.aggregations, ("sync", "buffered"))
+                    if args.aggregations else None)
     run_sweep(scenarios, algorithms, completions=completions,
+              aggregations=aggregations,
               rounds=args.rounds, out_dir=args.out,
               seed=args.seed, server_opt=args.server_opt,
               eval_every=args.eval_every,

@@ -1,7 +1,127 @@
+"""Shared fixtures + the cross-engine parity harness.
+
+The repo grows engines that must all reproduce the same trajectories —
+the host reference loop, the device ``lax.scan`` engine, the
+client-sharded engine, and the buffered-async host/device pair.  The
+parity assertions used to be copy-pasted across ``test_engine.py``,
+``test_engine_sharded.py``, and ``test_completion.py``; this module
+factors them into one harness parametrized over
+(engine × strategy × completion), so each new engine gets the full
+matrix for free (``test_parity_matrix.py``).
+
+Parity contract (DESIGN.md §7.1–§7.4):
+
+* integer/boolean trajectories — selection masks, completion masks,
+  buffer membership, staleness — are bit-identical across engines;
+* the r_k rate EMA is bit-identical between compiled engines
+  (``rates_exact=True``) and matches the host loop to float tolerance
+  (the host computes it eagerly, per-op);
+* losses agree to float tolerance (reduction/fusion order is the only
+  divergence).
+"""
 import numpy as np
 import pytest
+
+from repro.sim import RunSpec, run_scenario
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+def silent(*args, **kwargs):
+    """Drop-in ``log_fn`` that keeps engine runs quiet under pytest."""
+
+
+# ---------------------------------------------------------------------------
+# Engine matrix: name -> RunSpec overrides
+# ---------------------------------------------------------------------------
+
+ENGINE_OVERRIDES = {
+    "host": dict(engine="host"),
+    "device": dict(engine="device"),
+    "sharded": dict(engine="device", mesh=0),          # all visible devices
+    "host_buffered": dict(engine="host", aggregation="buffered"),
+    "device_buffered": dict(engine="device", aggregation="buffered"),
+}
+
+# Each compiled engine's ground-truth reference (always a host loop).
+REFERENCE_ENGINE = {
+    "device": "host",
+    "sharded": "host",
+    "device_buffered": "host_buffered",
+}
+
+# The parametrized parity matrix consumed by test_parity_matrix.py.
+COMPLETION_SETTINGS = {
+    "always": {},
+    "bernoulli": {"q": 0.6},
+    "deadline": {"deadline": 0.9},
+}
+PARITY_ENGINES = tuple(REFERENCE_ENGINE)
+PARITY_STRATEGIES = ("f3ast", "fedavg", "uniform")
+PARITY_COMPLETIONS = tuple(COMPLETION_SETTINGS)
+PARITY_ROUNDS = 8
+
+
+def parity_spec(strategy, completion=None, *, scenario="scarce",
+                rounds=PARITY_ROUNDS, **overrides):
+    """One parity-cell RunSpec: final-eval only, default completion kwargs."""
+    kw = dict(scenario=scenario, strategy=strategy, rounds=rounds,
+              eval_every=rounds, completion=completion)
+    if completion is not None and "completion_kwargs" not in overrides:
+        kw["completion_kwargs"] = dict(COMPLETION_SETTINGS.get(completion, {}))
+    kw.update(overrides)
+    return RunSpec(**kw)
+
+
+def run_cell(spec, engine="device", **overrides):
+    """Run ``spec`` on a named engine from the matrix, silently.
+
+    ``overrides`` are extra ``spec.replace`` fields applied on top of the
+    engine's own (engine/mesh/aggregation) overrides.
+    """
+    ov = dict(ENGINE_OVERRIDES[engine])
+    ov.update(overrides)
+    return run_scenario(spec.replace(**ov), log_fn=silent)
+
+
+def assert_cell_parity(ref, res, *, rates_exact=False, loss_abs=1e-5,
+                       loss_rel=1e-4):
+    """Assert ``res`` reproduces ``ref``'s trajectory (see module docstring).
+
+    ``rates_exact=True`` demands a bit-identical r_k EMA — the contract
+    between two compiled engines; against the host loop the EMA only
+    matches to float tolerance.
+    """
+    np.testing.assert_array_equal(ref.sel_history, res.sel_history)
+    np.testing.assert_array_equal(ref.comp_history, res.comp_history)
+    if ref.rates is not None and res.rates is not None:
+        if rates_exact:
+            np.testing.assert_array_equal(ref.rates, res.rates)
+        else:
+            np.testing.assert_allclose(ref.rates, res.rates, atol=1e-6)
+    if ref.empirical_rates is not None and res.empirical_rates is not None:
+        np.testing.assert_allclose(ref.empirical_rates, res.empirical_rates,
+                                   atol=1e-6)
+    ah_ref = getattr(ref, "async_history", None)
+    ah_res = getattr(res, "async_history", None)
+    assert (ah_ref is None) == (ah_res is None), \
+        "one result is buffered-async, the other is not"
+    if ah_ref is not None:
+        assert set(ah_ref) == set(ah_res)
+        for name in sorted(ah_ref):
+            # buffer membership, staleness, AND float weights: bit-identical
+            np.testing.assert_array_equal(ah_ref[name], ah_res[name],
+                                          err_msg=f"async_history[{name!r}]")
+    for name in ("test_loss", "train_loss"):
+        assert res.final_metrics[name] == pytest.approx(
+            ref.final_metrics[name], rel=loss_rel, abs=loss_abs), name
+
+
+@pytest.fixture(scope="session")
+def parity_reference_cache():
+    """Memoizes reference (host) runs across the parity matrix — each
+    (engine-family, strategy, completion) reference is computed once."""
+    return {}

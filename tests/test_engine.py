@@ -12,24 +12,19 @@ import pytest
 
 import jax
 
+from conftest import assert_cell_parity, parity_spec, run_cell, silent
 from repro.core.selection import cohort_ids_from_mask
 from repro.sim import run_cells_vmapped, run_scenario
 from repro.sim.engine import run_scenario_device
 
 ROUNDS = 25
 
-
-def _silent(*args, **kwargs):
-    pass
+_silent = silent
 
 
-def _run_pair(algo, scenario="scarce", rounds=ROUNDS, seed=0, **kw):
-    host = run_scenario(scenario, algo, rounds=rounds, seed=seed,
-                        eval_every=rounds, engine="host", log_fn=_silent, **kw)
-    dev = run_scenario(scenario, algo, rounds=rounds, seed=seed,
-                       eval_every=rounds, engine="device", log_fn=_silent,
-                       **kw)
-    return host, dev
+def _run_pair(algo, scenario="scarce", rounds=ROUNDS, **kw):
+    spec = parity_spec(algo, scenario=scenario, rounds=rounds, **kw)
+    return run_cell(spec, "host"), run_cell(spec, "device")
 
 
 # ---------------------------------------------------------------------------
@@ -40,26 +35,15 @@ def _run_pair(algo, scenario="scarce", rounds=ROUNDS, seed=0, **kw):
                                   "fedavg_weighted", "uniform", "fedadam"])
 def test_device_engine_matches_host_runner(algo):
     host, dev = _run_pair(algo)
-    # identical selection trajectory, round by round
-    np.testing.assert_array_equal(host.sel_history, dev.sel_history)
-    # identical learned rates (same EMA over the same masks)
-    np.testing.assert_allclose(host.rates, dev.rates, atol=1e-6)
-    np.testing.assert_allclose(host.empirical_rates, dev.empirical_rates,
-                               atol=1e-6)
-    # identical batches + same jitted round ⇒ same final model (float tol)
-    assert host.final_metrics["test_loss"] == pytest.approx(
-        dev.final_metrics["test_loss"], rel=1e-4)
-    assert host.final_metrics["train_loss"] == pytest.approx(
-        dev.final_metrics["train_loss"], rel=1e-4)
+    # identical selection trajectory / rate EMA / batches ⇒ same model
+    assert_cell_parity(host, dev)
     assert host.final_metrics["test_acc"] == pytest.approx(
         dev.final_metrics["test_acc"], abs=1e-3)
 
 
 def test_parity_holds_under_time_varying_budget():
     host, dev = _run_pair("f3ast", scenario="stepk", rounds=20)
-    np.testing.assert_array_equal(host.sel_history, dev.sel_history)
-    assert host.final_metrics["test_loss"] == pytest.approx(
-        dev.final_metrics["test_loss"], rel=1e-4)
+    assert_cell_parity(host, dev)
 
 
 def test_parity_independent_of_chunk_size():

@@ -1,0 +1,325 @@
+"""Buffered-async engine: host ⇔ device bit-parity, pool semantics, spec.
+
+The acceptance bar for ``sim/engine_async.py`` (DESIGN.md §7.4) is
+stricter than the sync engines' float-tolerance parity: buffer
+*membership*, *staleness*, and the *aggregation weights themselves* must
+be bit-identical between the event-driven host loop and the compiled
+``lax.scan`` pool — the weights are a pure function of integer staleness,
+so any divergence is a real ordering/semantics bug, not float noise.
+"""
+import json
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from conftest import assert_cell_parity, parity_spec, run_cell, silent
+from repro.sim import (RunSpec, STALENESS_DISCOUNTS,
+                       register_staleness_discount, run_scenario,
+                       staleness_weights)
+from repro.sim.engine_async import (ArrivalPool, default_pool_slots,
+                                    empty_pool, pool_flush, pool_insert,
+                                    run_scenario_buffered)
+
+
+def _pair(spec):
+    return run_cell(spec, "host_buffered"), run_cell(spec, "device_buffered")
+
+
+# ---------------------------------------------------------------------------
+# Host ⇔ device bit-parity (the tentpole's correctness bar)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scenario,completion", [
+    ("scarce", None),              # unit latency: FIFO arrivals
+    ("scarce", "deadline"),        # heterogeneous lognormal latencies
+    ("stepk", None),               # time-varying K_t dispatch rate
+])
+def test_buffered_host_device_bit_parity(scenario, completion):
+    spec = parity_spec("f3ast", completion, scenario=scenario, rounds=12)
+    host, dev = _pair(spec)
+    assert host.final_metrics["engine"] == "host"
+    assert dev.final_metrics["engine"] == "device"
+    assert_cell_parity(host, dev)
+    ah = dev.async_history
+    # every aggregated slot was genuinely buffered, never over-occupied
+    assert (ah["n_buffered"] == ah["buf_valid"].sum(axis=1)).all()
+    assert (ah["n_buffered"] <= ah["buf_ids"].shape[1]).all()
+    # weights normalized per step (or all-zero on an empty buffer)
+    sums = ah["buf_weights"].sum(axis=1)
+    occupied = ah["n_buffered"] > 0
+    np.testing.assert_allclose(sums[occupied], 1.0, atol=1e-6)
+    np.testing.assert_array_equal(sums[~occupied], 0.0)
+
+
+def test_buffered_parity_independent_of_chunk_size():
+    spec = parity_spec("f3ast", scenario="scarce", rounds=12)
+    a = run_cell(spec, "device_buffered", chunk_size=12)
+    b = run_cell(spec, "device_buffered", chunk_size=5)
+    assert_cell_parity(a, b)
+
+
+def test_buffered_exponential_discount_parity():
+    spec = parity_spec("f3ast", "deadline", rounds=10,
+                       staleness_discount="exponential", staleness_power=0.3)
+    host, dev = _pair(spec)
+    assert_cell_parity(host, dev)
+
+
+def test_buffered_overflow_is_counted_and_parity_holds():
+    # buffer_size=1 drains 1/step while ~K_t arrive per step: the pool hits
+    # capacity and drops the latest arrivals; both paths must agree on the
+    # drop count and on everything downstream of it
+    spec = parity_spec("f3ast", scenario="scarce", rounds=16, buffer_size=1)
+    host, dev = _pair(spec)
+    assert_cell_parity(host, dev)
+    assert dev.async_history["n_overflow"].sum() > 0
+    assert (dev.async_history["n_buffered"] <= 1).all()
+
+
+def test_buffered_backlog_grows_staleness():
+    # dispatch rate >> drain rate ⇒ mean staleness must climb: updates are
+    # genuinely waiting in the pool, not silently re-stamped fresh
+    spec = parity_spec("f3ast", scenario="scarce", rounds=12, buffer_size=2)
+    res = run_cell(spec, "device_buffered")
+    stale = res.async_history["mean_staleness"]
+    assert stale[-3:].mean() > stale[:3].mean() + 1.0
+
+
+def test_buffered_rate_ema_counts_dispatches():
+    # a buffered server has no within-step completion signal: the r_k EMA
+    # tracks *dispatches* (sel_history), by documented §7.4 semantics
+    from repro.configs import PAPER_TASKS
+    task = PAPER_TASKS["synthetic11"]
+    res = run_cell(parity_spec("f3ast", rounds=10), "device_buffered")
+    n = res.sel_history.shape[1]
+    r = np.full(n, task.clients_per_round / n, np.float32)
+    for t in range(10):
+        r = (1.0 - task.beta) * r + task.beta * res.sel_history[t]
+    np.testing.assert_allclose(res.rates, r, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Pool primitives vs plain-Python references
+# ---------------------------------------------------------------------------
+
+def test_empty_pool_sentinels_sort_last():
+    pool = empty_pool(6, n_clients=11)
+    assert pool.time.shape == (6,)
+    assert np.isinf(np.asarray(pool.time)).all()
+    assert (np.asarray(pool.cid) == 11).all()
+    assert not np.asarray(pool.valid).any()
+
+
+def _mk(entries, n_clients=11, pad_to=None):
+    """ArrivalPool from [(time, cid, round, valid)] rows, inf-padded."""
+    rows = list(entries)
+    if pad_to is not None:
+        rows += [(np.inf, n_clients, 0, False)] * (pad_to - len(rows))
+    t, c, r, v = zip(*rows)
+    return ArrivalPool(time=jnp.asarray(t, jnp.float32),
+                       cid=jnp.asarray(c, jnp.int32),
+                       round=jnp.asarray(r, jnp.int32),
+                       valid=jnp.asarray(v, bool))
+
+
+def test_pool_insert_matches_python_sort_with_ties(rng):
+    # coarse times from a tiny set force heavy ties: the device's 3-pass
+    # stable argsort must realize the same (time, cid, round) total order
+    # as Python's tuple sort, including the truncation-at-capacity edge
+    n, cap = 9, 7
+    for trial in range(25):
+        k_old = int(rng.integers(0, cap + 1))
+        k_new = int(rng.integers(1, 6))
+
+        def mk_rows(k):
+            return [(float(rng.integers(0, 3)), int(rng.integers(0, n)),
+                     int(rng.integers(0, 3)), True) for _ in range(k)]
+
+        old_rows = sorted(mk_rows(k_old))
+        pool = _mk(old_rows, n_clients=n, pad_to=cap)
+        new = _mk(mk_rows(k_new), n_clients=n, pad_to=k_new)
+        got, n_overflow = jax.jit(pool_insert)(pool, new)
+        want = sorted(old_rows + [tuple(map(float, r[:3])) + (True,)
+                                  for r in zip(np.asarray(new.time),
+                                               np.asarray(new.cid),
+                                               np.asarray(new.round))])
+        assert int(n_overflow) == max(0, len(want) - cap)
+        want = want[:cap]
+        for i, (t, c, r, _) in enumerate(want):
+            assert float(np.asarray(got.time)[i]) == t, trial
+            assert int(np.asarray(got.cid)[i]) == c, trial
+            assert int(np.asarray(got.round)[i]) == r, trial
+            assert bool(np.asarray(got.valid)[i])
+        assert not np.asarray(got.valid)[len(want):].any()
+
+
+def test_pool_flush_pads_like_the_cohort_convention():
+    n = 11
+    pool = _mk([(1.0, 4, 0, True), (2.0, 7, 1, True)], n_clients=n,
+               pad_to=8)
+    rest, ids, valid, stale = jax.jit(
+        lambda p: pool_flush(p, 4, 5, n))(pool)
+    # invalid slots repeat the first buffered client (cohort convention)
+    np.testing.assert_array_equal(np.asarray(ids), [4, 7, 4, 4])
+    np.testing.assert_array_equal(np.asarray(valid),
+                                  [True, True, False, False])
+    np.testing.assert_array_equal(np.asarray(stale), [5, 4, 0, 0])
+    # the flushed entries left the pool; capacity is preserved
+    assert not np.asarray(rest.valid).any()
+    assert rest.time.shape == (8,)
+
+
+def test_pool_flush_empty_pool_clamps_to_last_client():
+    n = 11
+    rest, ids, valid, stale = pool_flush(empty_pool(6, n), 3, 2, n)
+    assert not np.asarray(valid).any()
+    np.testing.assert_array_equal(np.asarray(ids), [n - 1] * 3)
+    np.testing.assert_array_equal(np.asarray(stale), [0, 0, 0])
+
+
+def test_default_pool_slots_scales_with_dispatch_rate():
+    assert default_pool_slots(5, 10) == 5 + 40
+    assert default_pool_slots(1, 1) == 5
+
+
+# ---------------------------------------------------------------------------
+# Staleness weights: the pluggable discount registry
+# ---------------------------------------------------------------------------
+
+def test_staleness_weights_normalized_and_masked():
+    w = np.asarray(staleness_weights([0, 2, 5, 9], [True, True, False, True],
+                                     power=0.5))
+    assert (w >= 0).all()
+    assert w[2] == 0.0
+    assert w.sum() == pytest.approx(1.0, abs=1e-6)
+    assert w[0] > w[1] > w[3]         # fresher ⇒ heavier
+
+
+def test_staleness_weights_empty_buffer_is_all_zero():
+    w = np.asarray(staleness_weights([0, 0, 0], [False] * 3, power=0.5))
+    np.testing.assert_array_equal(w, np.zeros(3))
+
+
+def test_staleness_weights_power_zero_is_uniform():
+    w = np.asarray(staleness_weights([0, 3, 17], [True] * 3, power=0.0))
+    np.testing.assert_allclose(w, np.full(3, 1 / 3), atol=1e-6)
+
+
+def test_staleness_weights_exponential_discount():
+    w = np.asarray(staleness_weights([0, 1], [True, True], power=1.0,
+                                     discount="exponential"))
+    assert w[0] / w[1] == pytest.approx(np.e, rel=1e-5)
+
+
+def test_staleness_weights_unknown_discount_fails_fast():
+    with pytest.raises(KeyError, match="nope.*known"):
+        staleness_weights([0], [True], power=0.5, discount="nope")
+
+
+def test_registered_discount_plugs_into_a_run():
+    register_staleness_discount("unit_test_flat", lambda s, p: s * 0.0 + 1.0)
+    assert "unit_test_flat" in STALENESS_DISCOUNTS
+    res = run_cell(parity_spec("f3ast", rounds=6,
+                               staleness_discount="unit_test_flat"),
+                   "device_buffered")
+    ah = res.async_history
+    # a flat discount ⇒ uniform weights over the occupied slots
+    row = int(np.argmax(ah["n_buffered"] > 1))
+    k = int(ah["n_buffered"][row])
+    np.testing.assert_allclose(ah["buf_weights"][row][ah["buf_valid"][row]],
+                               np.full(k, 1.0 / k), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RunSpec: round-trip + validation + dispatch errors
+# ---------------------------------------------------------------------------
+
+def test_runspec_async_fields_round_trip():
+    spec = RunSpec(scenario="scarce", strategy="f3ast",
+                   aggregation="buffered", buffer_size=4,
+                   staleness_power=0.3, staleness_discount="exponential")
+    assert RunSpec.from_json(spec.to_json()) == spec
+    assert RunSpec.from_json(RunSpec().to_json()).aggregation == "sync"
+
+
+@pytest.mark.parametrize("overrides,exc,match", [
+    (dict(aggregation="bogus"), ValueError, "aggregation"),
+    (dict(aggregation="buffered", buffer_size=0), ValueError, "buffer_size"),
+    (dict(aggregation="buffered", staleness_power=-1.0), ValueError,
+     "staleness_power"),
+    (dict(aggregation="buffered", staleness_discount="nope"), KeyError,
+     "staleness discount"),
+    (dict(aggregation="buffered", mesh=0), ValueError, "client-sharded"),
+])
+def test_runspec_rejects_bad_async_fields(overrides, exc, match):
+    spec = RunSpec(scenario="scarce", strategy="f3ast", **overrides)
+    with pytest.raises(exc, match=match):
+        spec.resolved()
+    with pytest.raises(exc, match=match):
+        run_scenario(spec, log_fn=silent)
+
+
+def test_buffered_rejects_host_only_strategies():
+    spec = RunSpec(scenario="scarce", strategy="poc", rounds=3,
+                   aggregation="buffered")
+    with pytest.raises(ValueError, match="host-only"):
+        run_scenario(spec, log_fn=silent)
+
+
+def test_run_scenario_buffered_rejects_unknown_engine():
+    with pytest.raises(ValueError, match="engine"):
+        run_scenario_buffered("scarce", "f3ast", rounds=2, engine="sharded")
+
+
+# ---------------------------------------------------------------------------
+# Metrics JSONL: async schema, host ⇔ device stream parity
+# ---------------------------------------------------------------------------
+
+def test_async_metrics_jsonl_schema_and_stream_parity(tmp_path):
+    spec = parity_spec("f3ast", "deadline", rounds=10, eval_every=5,
+                       buffer_size=4)
+    recs = {}
+    for engine in ("host_buffered", "device_buffered"):
+        path = str(tmp_path / f"{engine}.jsonl")
+        run_cell(spec, engine, metrics_path=path)
+        recs[engine] = [json.loads(line) for line in open(path)]
+    host, dev = recs["host_buffered"], recs["device_buffered"]
+    assert len(host) == len(dev) == 10
+    for r in dev:
+        for field in ("n_buffered", "mean_staleness", "n_overflow",
+                      "n_selected", "k_t", "round", "train_loss"):
+            assert field in r
+        assert r["n_buffered"] <= 4
+    # the async trajectory itself is identical stream-to-stream
+    for field in ("round", "k_t", "n_selected", "n_available", "n_buffered",
+                  "mean_staleness", "n_overflow"):
+        assert [r[field] for r in host] == [r[field] for r in dev], field
+    # eval metrics land on the final round in both streams, and the union
+    # of fields over the whole run is schema-identical
+    assert "test_loss" in dev[-1] and "test_loss" in host[-1]
+    assert (set().union(*map(set, host)) == set().union(*map(set, dev)))
+
+
+# ---------------------------------------------------------------------------
+# Sweep + dispatch integration
+# ---------------------------------------------------------------------------
+
+def test_sweep_aggregation_axis(tmp_path):
+    from repro.sim.sweep import run_sweep
+    out = str(tmp_path / "sweep")
+    results = run_sweep(["scarce"], ["f3ast"],
+                        aggregations=["sync", "buffered"],
+                        rounds=3, out_dir=out, log_fn=silent)
+    assert set(results) == {("scarce", "f3ast", "sync"),
+                            ("scarce", "f3ast", "buffered")}
+    spec = RunSpec.load(f"{out}/scarce__f3ast__buffered.spec.json")
+    assert spec.aggregation == "buffered"
+    recs = [json.loads(line)
+            for line in open(f"{out}/scarce__f3ast__buffered.jsonl")]
+    assert all("n_buffered" in r and "mean_staleness" in r for r in recs)
+    sync_recs = [json.loads(line)
+                 for line in open(f"{out}/scarce__f3ast__sync.jsonl")]
+    assert all("n_buffered" not in r for r in sync_recs)

@@ -1,0 +1,46 @@
+"""The full (engine × strategy × completion) parity matrix.
+
+Every compiled engine is checked against its host reference on every
+strategy/completion combination the engines support — the shared harness
+in ``conftest.py`` supplies the matrix, the spec builder, and the
+assertion contract, so a future engine only needs a row in
+``ENGINE_OVERRIDES``/``REFERENCE_ENGINE`` to inherit the whole grid.
+
+Unsupported combinations are contract-tested too: the buffered engine
+must *reject* completion processes with no latency semantics (bernoulli)
+rather than silently degrade.
+"""
+import pytest
+
+from conftest import (PARITY_COMPLETIONS, PARITY_ENGINES, PARITY_STRATEGIES,
+                      REFERENCE_ENGINE, assert_cell_parity, parity_spec,
+                      run_cell)
+
+
+def _buffered(engine):
+    return engine.endswith("buffered")
+
+
+@pytest.mark.parametrize("completion", PARITY_COMPLETIONS)
+@pytest.mark.parametrize("strategy", PARITY_STRATEGIES)
+@pytest.mark.parametrize("engine", PARITY_ENGINES)
+def test_engine_matches_its_reference(engine, strategy, completion,
+                                      parity_reference_cache):
+    spec = parity_spec(strategy, completion)
+    if _buffered(engine) and completion == "bernoulli":
+        # no arrival time to buffer on — must fail fast, not degrade
+        with pytest.raises(ValueError, match="latency"):
+            run_cell(spec, engine)
+        return
+    ref_engine = REFERENCE_ENGINE[engine]
+    key = (ref_engine, strategy, completion)
+    if key not in parity_reference_cache:
+        parity_reference_cache[key] = run_cell(spec, ref_engine)
+    ref = parity_reference_cache[key]
+    res = run_cell(spec, engine)
+    assert_cell_parity(ref, res)
+    if _buffered(engine):
+        assert res.final_metrics["aggregation"] == "buffered"
+        assert res.async_history is not None
+    else:
+        assert res.async_history is None

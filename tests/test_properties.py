@@ -1,0 +1,141 @@
+"""Property-based contracts for the sim registries (needs ``hypothesis``).
+
+Exhaustively randomized checks of the invariants every registered
+plug-in must satisfy — the duck-typed contracts the engines rely on but
+that example-based tests only spot-check:
+
+* availability processes: (N,) boolean masks, never empty, pure in
+  (key, state, t);
+* budget schedules: 1 ≤ K_t ≤ k_max ≤ N for every (key, t);
+* completion processes: completed ⊆ selected, pure in the key, rates in
+  [0, 1]; latency-capable models draw positive finite latencies and the
+  rest refuse loudly;
+* staleness weights: a proper distribution over the valid buffer slots
+  for every registered discount.
+
+``hypothesis`` is an optional dependency — the whole module skips when
+it is not installed (the image does not bake it in).
+"""
+import functools
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property suite needs the optional hypothesis dep")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.sim import staleness_weights
+from repro.sim.budgets import BUDGET_REGISTRY, make_budget
+from repro.sim.completion import COMPLETION_REGISTRY, make_completion
+from repro.sim.engine_async import STALENESS_DISCOUNTS
+from repro.sim.processes import PROCESS_REGISTRY, make_process
+
+N = 24
+
+COMMON = settings(max_examples=25, deadline=None,
+                  suppress_health_check=[HealthCheck.too_slow])
+
+
+@functools.lru_cache(maxsize=None)
+def _avail_models():
+    out = {}
+    for name in sorted(PROCESS_REGISTRY):
+        kw = {"p": np.full(N, 1.0 / N, np.float32)} if name == "uneven" else {}
+        out[name] = make_process(name, N, **kw)
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _completion_models():
+    av = _avail_models()["diurnal"]
+    kw = {"always": {},
+          "bernoulli": {"q": 0.6, "sigma": 0.5},
+          "availability_coupled": {"gamma": 1.0, "floor": 0.05},
+          "deadline": {"deadline": 0.9, "spread": 0.4, "sigma": 0.3}}
+    return {name: make_completion(name, N, avail_model=av, **kw[name])
+            for name in sorted(COMPLETION_REGISTRY)}
+
+
+@COMMON
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(0, 500))
+def test_availability_masks_are_boolean_nonempty_and_pure(seed, t):
+    key = jax.random.PRNGKey(seed)
+    for name, model in _avail_models().items():
+        state, mask = model.step(key, model.init(), t)
+        m = np.asarray(mask)
+        assert m.dtype == np.bool_, name
+        assert m.shape == (N,), name
+        assert m.any(), name                     # the non-empty contract
+        # pure function of (key, state, t): same inputs, same mask
+        _, mask2 = model.step(key, model.init(), t)
+        np.testing.assert_array_equal(m, np.asarray(mask2), err_msg=name)
+
+
+@COMMON
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(0, 10_000))
+def test_budget_samples_stay_in_range(seed, t):
+    key = jax.random.PRNGKey(seed)
+    for name in sorted(BUDGET_REGISTRY):
+        budget = make_budget(name)
+        assert 1 <= budget.k_max <= N, name
+        k = int(budget.sample(key, t))
+        assert 1 <= k <= budget.k_max, (name, k)
+
+
+@COMMON
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(0, 200),
+       bits=st.integers(0, 2**N - 1))
+def test_completed_is_subset_of_selected(seed, t, bits):
+    sel = jnp.asarray([(bits >> i) & 1 for i in range(N)], bool)
+    key = jax.random.PRNGKey(seed)
+    for name, model in _completion_models().items():
+        out = np.asarray(model.sample(key, t, sel))
+        assert out.dtype == np.bool_, name
+        assert out.shape == (N,), name
+        assert (out <= np.asarray(sel)).all(), name     # completed ⊆ selected
+        # pure in the key
+        np.testing.assert_array_equal(
+            out, np.asarray(model.sample(key, t, sel)), err_msg=name)
+        rate = np.asarray(model.rate(t))
+        assert rate.shape == (N,), name
+        assert np.isfinite(rate).all(), name
+        assert ((rate >= 0) & (rate <= 1)).all(), name
+
+
+@COMMON
+@given(seed=st.integers(0, 2**31 - 1), t=st.integers(0, 200))
+def test_latency_contract_split_by_capability(seed, t):
+    key = jax.random.PRNGKey(seed)
+    for name, model in _completion_models().items():
+        if getattr(model, "has_latency", False):
+            lat = np.asarray(model.latencies(key, t))
+            assert lat.shape == (N,), name
+            assert np.isfinite(lat).all(), name
+            assert (lat > 0).all(), name
+        else:
+            with pytest.raises(NotImplementedError, match="latency"):
+                model.latencies(key, t)
+
+
+@COMMON
+@given(rows=st.lists(st.tuples(st.integers(0, 40), st.booleans()),
+                     min_size=1, max_size=12),
+       power=st.floats(0.0, 2.0, allow_nan=False, allow_infinity=False),
+       discount=st.sampled_from(sorted(["polynomial", "exponential"])))
+def test_staleness_weights_are_a_distribution(rows, power, discount):
+    assert discount in STALENESS_DISCOUNTS
+    stale = [r[0] for r in rows]
+    valid = np.asarray([r[1] for r in rows])
+    w = np.asarray(staleness_weights(stale, valid, power, discount))
+    assert w.shape == valid.shape
+    assert np.isfinite(w).all()
+    assert (w >= 0).all()
+    assert (w[~valid] == 0).all()
+    if valid.any():
+        assert w.sum() == pytest.approx(1.0, abs=1e-5)
+    else:
+        np.testing.assert_array_equal(w, np.zeros_like(w))

@@ -16,6 +16,11 @@ Compares a freshly measured ``BENCH_engine.json`` (see
    least ``--min-dropout-ratio`` of the plain device engine's rounds/sec
    in the current run (also machine-independent) — the guard that the
    mid-round-dropout path cannot silently regress the compiled engine.
+4. Buffered-path ratio: the buffered-async device cell must hold at least
+   ``--min-buffered-ratio`` of the plain device engine's rounds/sec in
+   the current run (also machine-independent) — the guard that the
+   pending-pool bookkeeping (insert + sort + flush per server step)
+   cannot silently eat the compiled engine's throughput.
 
 With ``--nscale-current`` it additionally checks the client-scaling column
 (``benchmarks/bench_engine.py --nscale-only``): the largest-N *sharded* cell
@@ -50,8 +55,14 @@ def engine_keys(result: dict) -> list:
     return keys
 
 
-def check(baseline: dict, current: dict, threshold: float, min_speedup: float,
-          min_dropout_ratio: float = 0.0) -> list:
+def check(
+    baseline: dict,
+    current: dict,
+    threshold: float,
+    min_speedup: float,
+    min_dropout_ratio: float = 0.0,
+    min_buffered_ratio: float = 0.0,
+) -> list:
     errors = []
     for name in engine_keys(baseline):
         if name not in current:
@@ -81,6 +92,16 @@ def check(baseline: dict, current: dict, threshold: float, min_speedup: float,
                 f"completion-enabled device cell runs at {ratio:.2f}x of the "
                 f"plain device engine, below the required "
                 f"{min_dropout_ratio:.2f}x"
+            )
+    if min_buffered_ratio > 0.0 and "device_buffered" in current \
+            and "device" in current:
+        ratio = (current["device_buffered"]["rounds_per_s"]
+                 / max(current["device"]["rounds_per_s"], 1e-9))
+        if ratio < min_buffered_ratio:
+            errors.append(
+                f"buffered-async device cell runs at {ratio:.2f}x of the "
+                f"plain device engine, below the required "
+                f"{min_buffered_ratio:.2f}x"
             )
     return errors
 
@@ -134,12 +155,19 @@ def main(argv=None) -> int:
         help="required device_dropout / device rounds-per-sec ratio in the "
         "current run (0 disables the check)",
     )
+    ap.add_argument(
+        "--min-buffered-ratio",
+        type=float,
+        default=0.0,
+        help="required device_buffered / device rounds-per-sec ratio in the "
+        "current run (0 disables the check)",
+    )
     args = ap.parse_args(argv)
 
     baseline = load(args.baseline)
     current = load(args.current)
     errors = check(baseline, current, args.threshold, args.min_speedup,
-                   args.min_dropout_ratio)
+                   args.min_dropout_ratio, args.min_buffered_ratio)
     if args.nscale_current:
         errors += check_nscale(load(args.nscale_current))
     if errors:
