@@ -94,7 +94,39 @@ def format_table(rows) -> str:
     return "\n".join(lines)
 
 
+HBM_GBS = 819.0          # TPU v5e HBM bandwidth (GB/s), matches docstring
+
+
+def selection_roofline(ns=(10_000, 100_000, 1_000_000), hbm_gbs=HBM_GBS):
+    """Analytic roofline for the fused selection kernel
+    (``repro.kernels.fed_select``): one pass over the client axis.
+
+    Per client the kernel reads scores/avail/r/p/r_weight (5 × 4 B) and
+    writes mask/new_r/weights (1 + 2 × 4 B), so the HBM floor is ~29 B·N /
+    BW.  The in-VMEM bitonic sort is O(N log² N) compare-exchanges — VPU
+    compute against registers, not HBM traffic — so the kernel stays
+    memory-bound and the fusion win is exactly the eliminated
+    intermediate round-trips of the unfused XLA pipeline (sort indices,
+    scattered mask, separate EMA and weight kernels).
+    """
+    import math
+    rows = []
+    for n in ns:
+        bytes_moved = n * (5 * 4 + 1 + 2 * 4)
+        t_mem = bytes_moved / (hbm_gbs * 1e9)
+        n_pad = 1 << max(1, math.ceil(math.log2(n)))
+        stages = int(math.log2(n_pad))
+        compare_exchanges = n_pad // 2 * stages * (stages + 1) // 2
+        rows.append(dict(n_clients=n, bytes=bytes_moved, t_mem_us=t_mem * 1e6,
+                         sort_cmpex=compare_exchanges))
+    return rows
+
+
 def run(log_fn=print, mesh="single"):
+    for r in selection_roofline():
+        log_fn(f"roofline,fed_select,n{r['n_clients']},"
+               f"{r['t_mem_us']:.2f},hbm-floor-us "
+               f"(bytes={r['bytes']}, sort_cmpex={r['sort_cmpex']})")
     rows = build_table(mesh)
     if not rows:
         log_fn(f"roofline: no dry-run artifacts in {DRYRUN_DIR} — run "

@@ -49,8 +49,13 @@ def bench_scenarios(full: bool):
 
 def bench_selection(full: bool):
     from . import selection_overhead
-    selection_overhead.run(ns=(100, 1000, 10_000, 100_000) if full
-                           else (100, 10_000))
+    if full:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        selection_overhead.run(
+            ns=selection_overhead.BASELINE_NS,
+            out=os.path.join(OUT_DIR, "BENCH_selection.json"))
+    else:
+        selection_overhead.run(ns=(100, 10_000))
 
 
 def bench_kernels(full: bool):

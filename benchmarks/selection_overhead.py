@@ -1,23 +1,55 @@
 """Framework-perf microbench: server-side cost of one F3AST control step
-(selection + rate update + weight computation) vs fleet size N.
+(selection + rate update + weight computation) vs fleet size N, for both
+top-k cut implementations (``select_impl="xla"`` vs the fused Pallas
+selection kernel, ``repro.kernels.fed_select``).
 
 The paper evaluates accuracy only; this table quantifies the *system* cost
-of the technique — it must stay negligible next to a training round.
+of the technique — it must stay negligible next to a training round — and
+guards the fused kernel's speedup over the reference XLA pipeline.  Each
+cell is configured through a :class:`repro.sim.spec.RunSpec` (the same
+frozen spec the engines consume), so the bench measures exactly the
+strategy a run would build.
+
+Writes the JSON consumed by ``tools/check_bench_regression.py`` in CI:
+``selection_kernel_over_xla_ratio`` (XLA time / fused-kernel time at the
+gate size N=100k) must stay >= ``--min-selection-ratio`` — the guard that
+the fused path cannot silently become slower than the pipeline it
+replaces.  Off-TPU the kernel's autodetect runs the fused jnp reference
+(same fusion structure, no Pallas interpreter), so the ratio is
+meaningful on the CPU CI runner too.
+
+    PYTHONPATH=src python benchmarks/selection_overhead.py \\
+        --out experiments/bench/BENCH_selection.json   # refresh baseline
+    PYTHONPATH=src python benchmarks/selection_overhead.py --ns 100 10000
+
 Prints ``name,us_per_call,derived`` CSV rows.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import platform
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import make_strategy
+sys.path.insert(0, "src")
+
+from repro.core import make_strategy            # noqa: E402
+from repro.sim.spec import RunSpec              # noqa: E402
+
+#: fleet size whose xla/pallas ratio is gated in CI (the paper-scale N).
+GATE_N = 100_000
+
+#: default fleet sizes for the committed baseline artifact.
+BASELINE_NS = (10_000, 100_000, 1_000_000)
 
 
 def _time(fn, *args, iters=50):
-    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))  # compile
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -25,21 +57,86 @@ def _time(fn, *args, iters=50):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run(ns=(100, 1000, 10_000, 100_000), m=10, log_fn=print):
-    results = {}
+def _bench_cell(spec: RunSpec, n: int, iters: int) -> float:
+    """Microseconds per jitted ``strategy.select`` call for one spec cell."""
+    m = spec.clients_per_round or 10
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
+    strategy = make_strategy(spec.strategy, n, p, clients_per_round=m,
+                             select_impl=spec.select_impl,
+                             **dict(spec.strategy_kwargs))
+    state = strategy.init(n)
+    avail = jnp.asarray(rng.random(n) < 0.5)
+    key = jax.random.PRNGKey(0)
+
+    @jax.jit
+    def step(st, key, avail):
+        return strategy.select(st, key, avail, jnp.asarray(m), None)
+
+    return _time(step, state, key, avail, iters=iters)
+
+
+def run(ns=BASELINE_NS, m=10, strategy="f3ast", iters=50, out=None,
+        log_fn=print) -> dict:
+    base = RunSpec(strategy=strategy, clients_per_round=m).resolved()
+    cells = []
     for n in ns:
-        rng = np.random.default_rng(0)
-        p = jnp.asarray(rng.dirichlet(np.ones(n)), jnp.float32)
-        strategy = make_strategy("f3ast", n, p, clients_per_round=m)
-        state = strategy.init(n)
-        avail = jnp.asarray(rng.random(n) < 0.5)
-        key = jax.random.PRNGKey(0)
+        row = {"n_clients": int(n)}
+        for impl in ("xla", "pallas"):
+            us = _bench_cell(base.replace(select_impl=impl), int(n), iters)
+            row[f"{impl}_us"] = round(us, 2)
+            log_fn(f"{strategy}_select_{impl}_n{n},{us:.1f},"
+                   "per-round control-plane cost")
+        row["xla_over_pallas_ratio"] = round(
+            row["xla_us"] / max(row["pallas_us"], 1e-9), 3)
+        cells.append(row)
 
-        @jax.jit
-        def step(st, key, avail):
-            return strategy.select(st, key, avail, jnp.asarray(m), None)
+    gate = next((c for c in cells if c["n_clients"] == GATE_N), cells[-1])
+    result = {
+        "benchmark": "selection",
+        "strategy": base.strategy,
+        "clients_per_round": m,
+        "iters": iters,
+        "platform": {
+            "backend": jax.default_backend(),
+            "device_count": jax.device_count(),
+            "jax": jax.__version__,
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+        "cells": cells,
+        "gate_n": gate["n_clients"],
+        "selection_kernel_over_xla_ratio": gate["xla_over_pallas_ratio"],
+    }
+    log_fn(f"selection_kernel_over_xla_ratio,"
+           f"{result['selection_kernel_over_xla_ratio']},"
+           f"gate at N={result['gate_n']}")
+    if out:
+        with open(out, "w") as f:
+            json.dump(result, f, indent=1)
+            f.write("\n")
+        log_fn(f"wrote {out}")
+    return result
 
-        us = _time(step, state, key, avail)
-        results[n] = us
-        log_fn(f"f3ast_select_n{n},{us:.1f},per-round control-plane cost")
-    return results
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ns", type=int, nargs="+", default=list(BASELINE_NS),
+                    help="fleet sizes N to bench (default: "
+                         f"{' '.join(map(str, BASELINE_NS))})")
+    ap.add_argument("--m", type=int, default=10,
+                    help="per-round selection budget K (default 10)")
+    ap.add_argument("--strategy", default="f3ast",
+                    help="registered selection strategy (default f3ast)")
+    ap.add_argument("--iters", type=int, default=50,
+                    help="timed iterations per cell (default 50)")
+    ap.add_argument("--out", default=None, metavar="PATH",
+                    help="write the result JSON here (gated by "
+                         "tools/check_bench_regression.py)")
+    args = ap.parse_args(argv)
+    return run(ns=tuple(args.ns), m=args.m, strategy=args.strategy,
+               iters=args.iters, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,9 +9,10 @@ from .rates import RateState, empirical_rate, init_rates, update_rates
 from .aggregation import (fedavg_weights, streaming_aggregate_add,
                           streaming_aggregate_init, unbiased_weights,
                           uniform_weights, weighted_aggregate)
-from .strategies import (STRATEGY_ALIASES, STRATEGY_REGISTRY, RateTrackState,
-                         SelectCtx, SelectionStrategy, as_sharded,
-                         list_strategies, make_strategy, register_strategy,
-                         resolve_strategy, strategy_rates, topk_strategy)
+from .strategies import (SELECT_IMPLS, STRATEGY_ALIASES, STRATEGY_REGISTRY,
+                         RateTrackState, SelectCtx, SelectionStrategy,
+                         as_sharded, list_strategies, make_strategy,
+                         register_strategy, resolve_strategy, strategy_rates,
+                         topk_strategy)
 from .algorithms import Algorithm, AlgoState, make_algorithm
 from .fedstep import RoundMetrics, make_fed_round

@@ -35,9 +35,17 @@ def update_rates(state: RateState, sel_mask: jnp.ndarray, beta: float) -> RateSt
 
         r(t) = (1 − β) r(t−1) + β · 1_{S_t}
 
-    ``sel_mask`` is the (N,) boolean selection indicator 1_{S_t}.  β is the
-    paper's O(1/T) step size (1e-3 in all experiments); the update is the
-    stochastic-approximation iterate whose β→0 limit is argmin_R H(r).
+    ``sel_mask`` is the (N,) boolean selection indicator 1_{S_t} (with a
+    completion process active, the *completed* indicator — the EMA counts
+    deliveries, DESIGN.md §7.3).  β is the paper's O(1/T) step size (1e-3
+    in all experiments); the update is the stochastic-approximation iterate
+    whose β→0 limit is argmin_R H(r).
+
+    The fused selection kernel (``repro.kernels.fed_select``) inlines this
+    exact expression — same op order, β folded as the same f32 constant —
+    so the fused and unfused r_k trajectories are bit-identical
+    (``tests/test_kernels_select.py``).  Keep the two spellings in
+    lockstep.
     """
     r = (1.0 - beta) * state.r + beta * sel_mask.astype(jnp.float32)
     return RateState(r=r, t=state.t + 1)

@@ -1,35 +1,62 @@
-"""Client-selection policies.
+"""Client-selection policies (paper Alg. 1 line 4 and its baselines).
 
 All selectors are jit-safe pure functions
     (key, avail_mask (N,), k_budget scalar, ...) -> selection mask (N,) bool
-with |S| = min(k_budget, |available|).
+with |S| = min(k_budget, |available|): the paper's constraint that the
+cohort S_t ⊆ C_t (the available set) and |S_t| ≤ K_t (the round's
+time-varying communication budget, §2).
 
 Implemented policies
   * ``f3ast_select``   — Algorithm 1 line 4: greedy top-K_t available clients
                          by marginal utility −∇H(r) (exact maximizer of the
                          additive set objective, Eq. 4).
-  * ``fedavg_select``  — availability-agnostic baseline: sample K_t clients
-                         from the available set without replacement with
-                         probability ∝ p_k (Gumbel top-k).
+  * ``fedavg_select``  — availability-agnostic baseline (paper §4, Li et
+                         al. scheme II): sample K_t clients from the
+                         available set without replacement with probability
+                         ∝ p_k (Gumbel top-k).
   * ``uniform_select`` — uniform without replacement over the available set.
   * ``poc_select``     — Power-of-Choice (Cho et al.): sample d candidates
                          ∝ p_k from the available set, then keep the M with
                          the highest local loss.
   * ``fixed_policy_select`` — Algorithm 2: greedy w.r.t. a *fixed* target
                          rate r (static configuration-dependent policy).
+
+Tie-break contract (``(score, id)``): every top-k cut in the repo — the
+argsort path (:func:`_topk_mask`), the distributed path
+(:func:`sharded_topk_mask`), and the fused Pallas kernel
+(``repro.kernels.fed_select``) — resolves equal scores to the LOWER client
+id, i.e. ranks by the pair (−score, id).  This is what makes host, device,
+sharded, and kernel selection masks bit-identical for the same inputs
+(DESIGN.md §3.1); any new cut implementation must preserve it or the
+cross-engine parity matrix fails.
 """
 from __future__ import annotations
+
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .hfun import marginal_utility
 
+# Score sentinel for unavailable clients — low enough that no real score
+# (utility, Gumbel, uniform) reaches it, so unavailable clients rank last.
+# ``kernels.ref.SELECT_NEG`` must stay equal to it.
 _NEG = -1e30
 
 
 def _topk_mask(scores: jnp.ndarray, avail: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
-    """Boolean mask of the top-min(k, |avail|) available entries by score."""
+    """Boolean mask of the top-min(k, |avail|) available entries by score.
+
+    The reference spelling of the line-4 cut ``S_t ∈ argmax_{S ⊆ C_t,
+    |S| ≤ K_t} score·1_S``: rank every client by a stable descending
+    argsort of the availability-masked scores and keep ranks ``< k_eff``.
+    Stability of the argsort is load-bearing — it yields the ``(score,
+    id)`` tie-break of the module contract.  ``repro.kernels.fed_select``
+    reformulates this exact cut as a sort-free-of-argsort threshold pass
+    (bit-identical, ``tests/test_kernels_select.py``); strategies switch
+    between the two via ``RunSpec.select_impl``.
+    """
     n = scores.shape[0]
     masked = jnp.where(avail, scores, _NEG)
     # Rank positions by score (descending); position i selected iff its rank
@@ -43,7 +70,15 @@ def _topk_mask(scores: jnp.ndarray, avail: jnp.ndarray, k: jnp.ndarray) -> jnp.n
 def f3ast_select(avail: jnp.ndarray, k: jnp.ndarray, p: jnp.ndarray,
                  r: jnp.ndarray, positively_correlated: bool = False,
                  key: jax.Array | None = None) -> jnp.ndarray:
-    """F3AST greedy selection: S_t ∈ argmax_{S∈C_t} −∇H(r(t))·1_S."""
+    """F3AST greedy selection: S_t ∈ argmax_{S∈C_t} −∇H(r(t))·1_S.
+
+    Algorithm 1 line 4.  Because the surrogate objective H(r) (Eq. 3) is
+    separable across clients, the argmax over all ≤K_t-subsets of C_t is
+    exactly the top-K_t available clients by the marginal utility
+    −∂H/∂r_k (Eq. 4, ``hfun.marginal_utility``) — greedy is optimal, no
+    combinatorial search.  ``r`` is the tracked rate EMA r(t−1)
+    (``rates.update_rates`` advances it AFTER selection, line 5).
+    """
     util = marginal_utility(r, p, positively_correlated)
     if key is not None:
         # Infinitesimal random tie-break so identical utilities (e.g. at
@@ -56,35 +91,58 @@ def f3ast_select(avail: jnp.ndarray, k: jnp.ndarray, p: jnp.ndarray,
 def fixed_policy_select(avail: jnp.ndarray, k: jnp.ndarray, p: jnp.ndarray,
                         r_target: jnp.ndarray,
                         positively_correlated: bool = False) -> jnp.ndarray:
-    """Fixed-policy F3AST (Algorithm 2): greedy w.r.t. a frozen rate."""
+    """Fixed-policy F3AST (Algorithm 2): greedy w.r.t. a frozen rate.
+
+    Identical to Alg. 1 line 4 except the utility is evaluated at a
+    *static* target rate r (configuration-dependent, computed offline)
+    instead of the tracked EMA — the paper's deployment mode when the
+    availability statistics are known and per-round adaptation is not
+    wanted.
+    """
     util = marginal_utility(r_target, p, positively_correlated)
     return _topk_mask(util, avail, k)
 
 
 def fedavg_select(key: jax.Array, avail: jnp.ndarray, k: jnp.ndarray,
-                  p: jnp.ndarray) -> jnp.ndarray:
+                  p: jnp.ndarray,
+                  topk: Optional[Callable] = None) -> jnp.ndarray:
     """Sample min(k,|avail|) available clients w/o replacement, prob ∝ p_k.
 
     Uses the Gumbel top-k trick: adding i.i.d. Gumbel noise to log p and
     taking the top-k is exactly sequential sampling without replacement with
-    probabilities proportional to p.
+    probabilities proportional to p.  The paper's FedAvg baseline (§4):
+    selection ignores r, so under intermittent availability the resulting
+    update is biased toward frequently-available clients (the bias Eq. 6's
+    p_k/r_k reweighting removes).
+
+    ``topk`` optionally swaps the cut implementation (``RunSpec.
+    select_impl="pallas"`` passes ``kernels.fed_select.fed_select_mask``);
+    defaults to :func:`_topk_mask` — same mask either way.
     """
     g = jax.random.gumbel(key, p.shape)
     scores = jnp.log(jnp.maximum(p, 1e-12)) + g
-    return _topk_mask(scores, avail, k)
+    return (topk or _topk_mask)(scores, avail, k)
 
 
 def uniform_select(key: jax.Array, avail: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Uniform without replacement over the available set: i.i.d. uniform
+    scores + top-k is a uniformly random ≤k-subset of C_t (the
+    availability-aware 'uniform' baseline of §4)."""
     scores = jax.random.uniform(key, avail.shape)
     return _topk_mask(scores, avail, k)
 
 
 def poc_select(key: jax.Array, avail: jnp.ndarray, m: jnp.ndarray,
-               p: jnp.ndarray, losses: jnp.ndarray, d: int) -> jnp.ndarray:
+               p: jnp.ndarray, losses: jnp.ndarray, d: int,
+               topk: Optional[Callable] = None) -> jnp.ndarray:
     """Power-of-Choice: candidate set of size d sampled ∝ p_k from the
-    available pool, then the top-m candidates by current loss are selected."""
-    cand = fedavg_select(key, avail, jnp.asarray(d, jnp.int32), p)
-    return _topk_mask(losses, cand, m)
+    available pool, then the top-m candidates by current loss are selected
+    (Cho et al., the paper's loss-based baseline).  ``topk`` as in
+    :func:`fedavg_select` — both cuts (candidate draw and loss cut) route
+    through it."""
+    cut = topk or _topk_mask
+    cand = fedavg_select(key, avail, jnp.asarray(d, jnp.int32), p, topk=cut)
+    return cut(losses, cand, m)
 
 
 def sharded_topk_mask(scores: jnp.ndarray, avail: jnp.ndarray,

@@ -54,12 +54,37 @@ from .hfun import R_MIN, marginal_utility
 from .rates import RateState, init_rates, update_rates
 
 __all__ = [
-    "STRATEGY_ALIASES", "STRATEGY_REGISTRY", "RateTrackState", "SelectCtx",
-    "SelectionStrategy", "StrategyAlias", "apply_completion", "as_sharded",
-    "get_strategy_entry", "list_strategies", "make_strategy",
+    "SELECT_IMPLS", "STRATEGY_ALIASES", "STRATEGY_REGISTRY", "RateTrackState",
+    "SelectCtx", "SelectionStrategy", "StrategyAlias", "apply_completion",
+    "as_sharded", "get_strategy_entry", "list_strategies", "make_strategy",
     "register_strategy", "resolve_strategy", "strategy_rates",
     "topk_strategy",
 ]
+
+# Top-k cut implementations a strategy can run on (RunSpec.select_impl):
+#   "xla"    — selection._topk_mask (argsort + scatter), the reference
+#   "pallas" — kernels.fed_select: the fused cut (+ EMA + weights when no
+#              completion hook splits the pipeline); on TPU a compiled
+#              Pallas kernel, elsewhere the fused jnp reference.
+# The sharded mesh engine always uses selection.sharded_topk_mask — RunSpec
+# validation rejects select_impl="pallas" with mesh set.
+SELECT_IMPLS = ("xla", "pallas")
+
+
+def _check_select_impl(select_impl: str) -> str:
+    if select_impl not in SELECT_IMPLS:
+        raise ValueError(f"unknown select_impl {select_impl!r}; "
+                         f"known: {SELECT_IMPLS}")
+    return select_impl
+
+
+def _topk_fn(select_impl: str):
+    """The (scores, avail, k) -> mask cut for ``select_impl`` — bit-identical
+    outputs either way (tests/test_kernels_select.py)."""
+    if select_impl == "pallas":
+        from ..kernels.fed_select import fed_select_mask
+        return fed_select_mask
+    return sel._topk_mask
 
 
 class SelectCtx(NamedTuple):
@@ -131,7 +156,9 @@ def strategy_rates(strategy: SelectionStrategy, state):
 
 def topk_strategy(name: str, init: Callable, score: Callable,
                   finalize: Callable, *, n_clients: Optional[int] = None,
-                  rates_of: Optional[Callable] = None) -> SelectionStrategy:
+                  rates_of: Optional[Callable] = None,
+                  select_impl: str = "xla",
+                  fused: Optional[Callable] = None) -> SelectionStrategy:
     """Build a strategy from the canonical score → top-k → weight shape.
 
     ``score(state, key, avail, k_t, ctx) -> (N,) f32`` ranks clients;
@@ -146,11 +173,27 @@ def topk_strategy(name: str, init: Callable, score: Callable,
     returns to the engine.  Strategies built this way run on all three
     engines — :func:`as_sharded` reuses the same two pieces around the
     distributed top-k.
+
+    ``select_impl`` swaps the top-k cut: ``"xla"`` (default) is the argsort
+    path, ``"pallas"`` the fused ``kernels.fed_select`` kernel —
+    bit-identical masks either way.  ``fused(state, scores, avail, k_t) ->
+    (mask, weights, new_state)`` is the optional fully-fused spelling of
+    cut + ``finalize`` in one kernel pass (see :func:`_fused_rate_select`);
+    it is used only under ``select_impl="pallas"`` with no completion hook
+    in play — a completion process rewrites the mask between cut and
+    ``finalize``, which cannot fuse, so those rounds take the fused cut +
+    unfused ``finalize`` instead.  Custom strategies may omit ``fused`` and
+    still get the kernel cut.
     """
+    _check_select_impl(select_impl)
+    topk = _topk_fn(select_impl)
+    use_fused = select_impl == "pallas" and fused is not None
 
     def select(state, key, avail, k_t, ctx: Optional[SelectCtx] = None):
         scores = score(state, key, avail, k_t, ctx)
-        mask = sel._topk_mask(scores, avail, k_t)
+        if use_fused and (ctx is None or ctx.complete is None):
+            return fused(state, scores, avail, k_t)
+        mask = topk(scores, avail, k_t)
         completed = apply_completion(ctx, mask)
         weights, new_state = finalize(state, completed, ctx)
         return mask, weights, new_state
@@ -158,6 +201,28 @@ def topk_strategy(name: str, init: Callable, score: Callable,
     return SelectionStrategy(name=name, init=init, select=select,
                              score=score, finalize=finalize,
                              rates_of=rates_of, n_clients=n_clients)
+
+
+def _fused_rate_select(p, beta: float, weight_mode: str,
+                       r_weight_of: Optional[Callable] = None) -> Callable:
+    """Fully-fused select for the built-in :class:`RateTrackState`
+    strategies: one ``kernels.fed_select`` call yields mask, the Alg. 1
+    line-5 rate EMA, and the line-9 weights — bit-identical to the unfused
+    cut → ``update_rates`` → weight-rule pipeline (the fused-vs-unfused
+    cells of the parity matrix assert it).  ``r_weight_of(state)`` supplies
+    the frozen rate for ``weight_mode="unbiased_frozen"`` (Alg. 2)."""
+    from ..kernels.fed_select import fed_select
+
+    def fused(state, scores, avail, k_t):
+        rw = None if r_weight_of is None else r_weight_of(state)
+        mask, new_r, w = fed_select(scores, avail, k_t, state.rates.r, p,
+                                    beta, weight_mode=weight_mode,
+                                    r_weight=rw)
+        new_state = RateTrackState(
+            rates=RateState(r=new_r, t=state.rates.t + 1))
+        return mask, w, new_state
+
+    return fused
 
 
 def as_sharded(strategy: SelectionStrategy, *, axis: str, k_max: int,
@@ -304,7 +369,7 @@ def resolve_strategy(name: str, server_opt: str = "sgd",
 # keys every engine passes by default; factories may ignore them, so they
 # alone are dropped silently when a factory's signature lacks them
 _ENGINE_DEFAULT_KEYS = frozenset(
-    {"beta", "positively_correlated", "clients_per_round"})
+    {"beta", "positively_correlated", "clients_per_round", "select_impl"})
 
 
 def make_strategy(name: str, n_clients: int, p, **hyper) -> SelectionStrategy:
@@ -384,7 +449,8 @@ def _ema_finalize(beta: float, weights_from_mask: Callable) -> Callable:
 @register_strategy("f3ast")
 def _make_f3ast(n_clients, p, beta: float = 1e-3,
                 positively_correlated: bool = False,
-                clients_per_round: Optional[int] = None) -> SelectionStrategy:
+                clients_per_round: Optional[int] = None,
+                select_impl: str = "xla") -> SelectionStrategy:
     """Algorithm 1: greedy −∇H(r) selection, unbiased p_k/r_k weights."""
 
     def score(state, key, avail, k_t, ctx=None):
@@ -401,14 +467,16 @@ def _make_f3ast(n_clients, p, beta: float = 1e-3,
         return w, RateTrackState(rates=new_rates)
 
     return topk_strategy("f3ast", _rate_init(n_clients, clients_per_round),
-                         score, finalize, n_clients=n_clients)
+                         score, finalize, n_clients=n_clients,
+                         select_impl=select_impl,
+                         fused=_fused_rate_select(p, beta, "unbiased"))
 
 
 @register_strategy("fixed_f3ast")
 def _make_fixed_f3ast(n_clients, p, beta: float = 1e-3,
                       positively_correlated: bool = False, r_target=None,
-                      clients_per_round: Optional[int] = None
-                      ) -> SelectionStrategy:
+                      clients_per_round: Optional[int] = None,
+                      select_impl: str = "xla") -> SelectionStrategy:
     """Algorithm 2: greedy w.r.t. a *frozen* target rate (falls back to the
     tracked r(t−1) when no target is given)."""
     rt_fixed = None if r_target is None else jnp.asarray(r_target, jnp.float32)
@@ -429,7 +497,13 @@ def _make_fixed_f3ast(n_clients, p, beta: float = 1e-3,
 
     return topk_strategy("fixed_f3ast",
                          _rate_init(n_clients, clients_per_round),
-                         score, finalize, n_clients=n_clients)
+                         score, finalize, n_clients=n_clients,
+                         select_impl=select_impl,
+                         fused=_fused_rate_select(
+                             p, beta, "unbiased_frozen",
+                             r_weight_of=lambda s: (
+                                 rt_fixed if rt_fixed is not None
+                                 else s.rates.r)))
 
 
 def _gumbel_score(p):
@@ -444,52 +518,59 @@ def _gumbel_score(p):
 
 @register_strategy("fedavg")
 def _make_fedavg(n_clients, p, beta: float = 1e-3,
-                 clients_per_round: Optional[int] = None) -> SelectionStrategy:
+                 clients_per_round: Optional[int] = None,
+                 select_impl: str = "xla") -> SelectionStrategy:
     """Paper baseline: sample available clients ∝ p_k, plain-mean
     aggregation (Li et al. scheme II) — biased under intermittent
     availability, which is the failure mode F3AST's reweighting removes."""
     return topk_strategy("fedavg", _rate_init(n_clients, clients_per_round),
                          _gumbel_score(p),
                          _ema_finalize(beta, uniform_weights),
-                         n_clients=n_clients)
+                         n_clients=n_clients, select_impl=select_impl,
+                         fused=_fused_rate_select(p, beta, "uniform"))
 
 
 @register_strategy("fedavg_weighted")
 def _make_fedavg_weighted(n_clients, p, beta: float = 1e-3,
-                          clients_per_round: Optional[int] = None
-                          ) -> SelectionStrategy:
+                          clients_per_round: Optional[int] = None,
+                          select_impl: str = "xla") -> SelectionStrategy:
     return topk_strategy("fedavg_weighted",
                          _rate_init(n_clients, clients_per_round),
                          _gumbel_score(p),
                          _ema_finalize(beta,
                                        lambda mask: fedavg_weights(p, mask)),
-                         n_clients=n_clients)
+                         n_clients=n_clients, select_impl=select_impl,
+                         fused=_fused_rate_select(p, beta, "fedavg"))
 
 
 @register_strategy("uniform")
 def _make_uniform(n_clients, p, beta: float = 1e-3,
-                  clients_per_round: Optional[int] = None) -> SelectionStrategy:
+                  clients_per_round: Optional[int] = None,
+                  select_impl: str = "xla") -> SelectionStrategy:
     def score(state, key, avail, k_t, ctx=None):
         return jax.random.uniform(key, avail.shape)
 
     return topk_strategy("uniform", _rate_init(n_clients, clients_per_round),
                          score, _ema_finalize(beta, uniform_weights),
-                         n_clients=n_clients)
+                         n_clients=n_clients, select_impl=select_impl,
+                         fused=_fused_rate_select(p, beta, "uniform"))
 
 
 @register_strategy("poc", needs_losses=True)
 def _make_poc(n_clients, p, beta: float = 1e-3, d: int = 30,
-              clients_per_round: Optional[int] = None) -> SelectionStrategy:
+              clients_per_round: Optional[int] = None,
+              select_impl: str = "xla") -> SelectionStrategy:
     """Power-of-Choice (Cho et al.): d candidates ∝ p_k, keep the top
     K_t by current local loss.  Host-only: the two-stage draw consumes
     fresh per-client losses the compiled engines do not have."""
+    topk = _topk_fn(_check_select_impl(select_impl))
 
     def select(state, key, avail, k_t, ctx: Optional[SelectCtx] = None):
         losses = None if ctx is None else ctx.losses
         if losses is None:
             raise ValueError("'poc' needs ctx.losses (fresh per-client "
                              "losses of the current global model)")
-        mask = sel.poc_select(key, avail, k_t, p, losses, d)
+        mask = sel.poc_select(key, avail, k_t, p, losses, d, topk=topk)
         completed = apply_completion(ctx, mask)
         new_rates = update_rates(state.rates, completed, beta)
         return (mask, uniform_weights(completed),

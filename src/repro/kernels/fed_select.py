@@ -1,0 +1,253 @@
+"""Pallas TPU kernel for the F3AST per-round selection step (Alg. 1 l.4–5+9):
+
+    mask  = top-min(K_t, |C_t|) available clients by score   (line 4)
+    r(t)  = (1 − β) r(t−1) + β · 1_{S_t}                     (line 5)
+    w_k   = weight rule on the cohort (p_k / r_k, 1/|S|, …)  (line 9)
+
+This is the round's control plane — a chain of (N,)-vector ops XLA leaves
+unfused (argsort + scatter + compare + EMA + renormalize reads the client
+axis ~6×).  The kernel runs the whole pipeline in ONE pass over a single
+VMEM-resident block: sort once (in-VMEM bitonic network), cut at the
+k_eff-th-largest threshold, then compute the EMA and weights from the mask
+while it is still in registers — every (N,) array streams HBM→VMEM exactly
+once.
+
+Bit-parity contract: the threshold cut reproduces ``core.selection.
+_topk_mask``'s stable ``(score, id)`` tie-break exactly (see
+``kernels.ref.topk_threshold_mask`` for the reformulation + proof sketch),
+and the EMA/weight arithmetic is op-for-op the unfused ``update_rates`` /
+``core.aggregation`` expressions — masks, r_k, and weights are
+bit-identical to the XLA strategy path (``tests/test_kernels_select.py``,
+``tests/test_parity_matrix.py``).
+
+Backend dispatch (``interpret=None``) differs deliberately from
+``fed_aggregate``: on TPU the compiled kernel runs; elsewhere we dispatch
+to the *fused jnp reference* (``kernels.ref.fed_select_ref``), NOT the
+Pallas interpreter.  The interpreter is a debugging tool (~100× slow) and
+selection is per-round hot-path — falling back to it would dominate the
+round, while the fused reference is itself faster than the unfused XLA
+chain (``benchmarks/selection_overhead.py``).  ``interpret=True`` forces
+the interpreter explicitly (the parity tests do).
+
+The compiled kernel holds the full (N,) block in VMEM: ~6 f32 arrays ≈
+24·N bytes of the ~16 MB/core budget, so N beyond ``MAX_KERNEL_N`` (2^19)
+falls back to the fused reference rather than overflowing VMEM — at that
+scale the pipeline is HBM-bandwidth-bound either way.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref as _ref
+from .ref import SELECT_WEIGHT_MODES
+
+# Largest client axis the single-block compiled kernel accepts (VMEM cap);
+# beyond it the autodetect path uses the fused jnp reference.
+MAX_KERNEL_N = 1 << 19
+
+# Test/debug hook: when set, overrides the ``interpret=None`` autodetect.
+# One of None | "compiled" | "interpret" | "ref".  The parity tests pin
+# "interpret" to drive the engines through the actual Pallas kernel on CPU.
+AUTODETECT_OVERRIDE = None
+
+
+def _dispatch(interpret: bool | None, n: int) -> str:
+    """Resolve the execution mode per call (never at import), mirroring
+    ``fed_aggregate._default_interpret`` so ``JAX_PLATFORMS`` is honored."""
+    if interpret is True:
+        return "interpret"
+    if interpret is False:
+        return "compiled"
+    if AUTODETECT_OVERRIDE is not None:
+        return AUTODETECT_OVERRIDE
+    if jax.default_backend() == "tpu" and n <= MAX_KERNEL_N:
+        return "compiled"
+    return "ref"
+
+
+def _pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _bitonic_sort(x: jnp.ndarray) -> jnp.ndarray:
+    """Exact ascending bitonic sort of a power-of-two-length f32 vector.
+
+    Pure compare-exchange network spelled with reshapes — partner pairs
+    (i, i^j) are rows ``[:, 0, :]``/``[:, 1, :]`` of ``x.reshape(-1, 2, j)``
+    — so it needs no gathers and no 1-D iota, both of which Mosaic rejects
+    inside TPU kernels (2-D ``broadcasted_iota`` supplies the block index).
+    log²(n)/2 elementwise stages; an exact permutation, so the threshold
+    read off it is bit-identical to ``jnp.sort``'s.
+    """
+    n = x.shape[0]
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            nb = n // (2 * j)
+            xb = x.reshape(nb, 2, j)
+            lo, hi = xb[:, 0, :], xb[:, 1, :]
+            blk = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0)
+            up = ((blk * (2 * j)) & k) == 0          # ascending sub-block?
+            mn, mx = jnp.minimum(lo, hi), jnp.maximum(lo, hi)
+            x = jnp.stack([jnp.where(up, mn, mx),
+                           jnp.where(up, mx, mn)], axis=1).reshape(n)
+            j //= 2
+        k *= 2
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies — same traced math as kernels.ref, different memory story:
+# scalars prefetched to SMEM, every (N,) operand a single VMEM block.
+# ---------------------------------------------------------------------------
+
+def _mask_kernel(k_ref, scores_ref, avail_ref, mask_ref):
+    avail = avail_ref[...] != 0
+    mask_ref[...] = _ref.topk_threshold_mask(
+        scores_ref[...], avail, k_ref[0], sort_fn=_bitonic_sort)
+
+
+def _select_kernel(k_ref, scores_ref, avail_ref, r_ref, p_ref, rw_ref,
+                   mask_ref, newr_ref, w_ref, *, beta: float,
+                   weight_mode: str, n: int):
+    avail = avail_ref[...] != 0
+    mask = _ref.topk_threshold_mask(
+        scores_ref[...], avail, k_ref[0], sort_fn=_bitonic_sort)
+    # β is a *static* Python float so (1.0 − β) folds to the identical f32
+    # constant the unfused update_rates path uses — a traced SMEM β would
+    # compute 1−β in f32 and could differ by 1 ulp, breaking bit-parity.
+    new_r = (1.0 - beta) * r_ref[...] + beta * mask.astype(jnp.float32)
+    mask_ref[...] = mask
+    newr_ref[...] = new_r
+    # Weight rules reduce over the client axis (1/|S|, Σ p_k): run them on
+    # the static [:n] slice so the reduction has the *real* length — summing
+    # the zero-padded (n_pad,) block would associate differently and drift
+    # the denominator by an ulp, breaking bit-parity with the unfused path.
+    w = _ref.select_weights_ref(mask[:n], new_r[:n], p_ref[:n], rw_ref[:n],
+                                weight_mode)
+    w_ref[...] = jnp.pad(w, (0, mask.shape[0] - n))
+
+
+def _pad_to(x, n_pad: int):
+    return jnp.pad(x, (0, n_pad - x.shape[0]))
+
+
+def _vec_spec(n_pad: int):
+    return pl.BlockSpec((n_pad,), lambda: (0,))
+
+
+_SMEM_SPEC = pl.BlockSpec(memory_space=pltpu.SMEM)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _mask_pallas(scores, avail, k, *, interpret: bool):
+    n = scores.shape[0]
+    n_pad = _pow2(n)
+    out = pl.pallas_call(
+        _mask_kernel,
+        in_specs=[_SMEM_SPEC, _vec_spec(n_pad), _vec_spec(n_pad)],
+        out_specs=_vec_spec(n_pad),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        interpret=interpret,
+    )(k.reshape(1), _pad_to(scores, n_pad),
+      _pad_to(avail.astype(jnp.int32), n_pad))
+    return out[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("beta", "weight_mode", "interpret"))
+def _select_pallas(scores, avail, k, r, p, rw, *, beta: float,
+                   weight_mode: str, interpret: bool):
+    n = scores.shape[0]
+    n_pad = _pow2(n)
+    vec = _vec_spec(n_pad)
+    mask, new_r, w = pl.pallas_call(
+        functools.partial(_select_kernel, beta=beta,
+                          weight_mode=weight_mode, n=n),
+        in_specs=[_SMEM_SPEC, vec, vec, vec, vec, vec],
+        out_specs=(vec, vec, vec),
+        out_shape=(jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_pad,), jnp.float32)),
+        interpret=interpret,
+    )(k.reshape(1), _pad_to(scores, n_pad),
+      _pad_to(avail.astype(jnp.int32), n_pad), _pad_to(r, n_pad),
+      _pad_to(p, n_pad), _pad_to(rw, n_pad))
+    return mask[:n], new_r[:n], w[:n]
+
+
+# jitted fused-jnp fallbacks (the off-TPU production path)
+_mask_ref_jit = jax.jit(_ref.topk_threshold_mask)
+_select_ref_jit = functools.partial(
+    jax.jit, static_argnames=("weight_mode", "beta"))(
+        lambda scores, avail, k, r, p, rw, *, beta, weight_mode:
+        _ref.fed_select_ref(scores, avail, k, r, p, beta,
+                            weight_mode=weight_mode, r_weight=rw))
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def fed_select_mask(scores: jnp.ndarray, avail: jnp.ndarray,
+                    k: jnp.ndarray, *,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Fused top-k cut: drop-in for ``core.selection._topk_mask``.
+
+    Same signature, bit-identical mask (stable ``(score, id)`` tie-break).
+    Used by the strategy layer when a completion hook separates the
+    selection cut from ``finalize`` — the EMA/weights then run on the
+    *completed* mask and cannot be fused with the cut.
+
+    ``interpret=None`` autodetects: compiled Pallas on TPU, fused jnp
+    reference elsewhere; ``interpret=True`` forces the Pallas interpreter.
+    """
+    k = jnp.asarray(k, jnp.int32)
+    mode = _dispatch(interpret, scores.shape[0])
+    if mode == "ref":
+        return _mask_ref_jit(scores, avail, k)
+    return _mask_pallas(scores, avail, k, interpret=(mode == "interpret"))
+
+
+def fed_select(scores: jnp.ndarray, avail: jnp.ndarray, k: jnp.ndarray,
+               r: jnp.ndarray, p: jnp.ndarray, beta: float, *,
+               weight_mode: str = "unbiased", r_weight=None,
+               interpret: bool | None = None):
+    """The fused selection step: ``(mask, new_r, weights)`` in one pass.
+
+    ``scores``/``avail``/``r``/``p``: (N,) round inputs; ``k``: the round
+    budget K_t (traced int scalar); ``beta``: the rate-EMA step (static
+    Python float).  ``weight_mode`` picks the built-in weight rule (see
+    ``kernels.ref.select_weights_ref``); ``unbiased_frozen`` additionally
+    needs ``r_weight`` — the frozen (N,) rate Alg. 2 weights against.
+
+    Bit-identical to the unfused pipeline ``_topk_mask`` → ``update_rates``
+    → weight rule, on every backend mode (asserted in
+    ``tests/test_kernels_select.py``).  ``interpret=None`` autodetects as
+    in :func:`fed_select_mask`.
+    """
+    if weight_mode not in SELECT_WEIGHT_MODES:
+        raise ValueError(f"unknown weight_mode {weight_mode!r}; "
+                         f"known: {SELECT_WEIGHT_MODES}")
+    if weight_mode == "unbiased_frozen" and r_weight is None:
+        raise ValueError("weight_mode='unbiased_frozen' needs r_weight= "
+                         "(the frozen target rate)")
+    beta = float(beta)
+    k = jnp.asarray(k, jnp.int32)
+    rw = p if r_weight is None else jnp.asarray(r_weight, jnp.float32)
+    mode = _dispatch(interpret, scores.shape[0])
+    if mode == "ref":
+        return _select_ref_jit(scores, avail, k, r, p, rw, beta=beta,
+                               weight_mode=weight_mode)
+    return _select_pallas(scores, avail, k, r, p, rw, beta=beta,
+                          weight_mode=weight_mode,
+                          interpret=(mode == "interpret"))

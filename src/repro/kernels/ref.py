@@ -35,6 +35,99 @@ def fed_aggregate_ref(deltas, weights):
     return acc.astype(deltas.dtype)
 
 
+# ---------------------------------------------------------------------------
+# fed_select: fused selection pipeline (kernels/fed_select.py)
+# ---------------------------------------------------------------------------
+
+# Sentinel for unavailable clients — must match core.selection._NEG so the
+# threshold cut reproduces ``_topk_mask`` bit-for-bit.
+SELECT_NEG = -1e30
+
+SELECT_WEIGHT_MODES = ("unbiased", "unbiased_frozen", "uniform", "fedavg")
+
+
+def topk_threshold_mask(scores, avail, k, *, sort_fn=jnp.sort):
+    """``core.selection._topk_mask`` reformulated as a threshold cut.
+
+    ``_topk_mask`` ranks via a stable ``argsort(-masked)`` and keeps ranks
+    ``< k_eff``; equivalently, with ``thr`` the ``k_eff``-th largest masked
+    score, the selected set is
+
+        {i : masked_i > thr}  ∪  the first (k_eff − |{masked > thr}|)
+                                 ties (masked_i == thr) in ascending id order
+
+    which needs only a *value* sort (no argsort + scatter) plus a cumsum —
+    cheaper, fusable, and kernel-friendly.  The tie prefix in ascending id
+    order is exactly the stable-sort ``(score, id)`` tie-break, so the
+    returned mask is bit-identical to ``_topk_mask`` (asserted in
+    ``tests/test_kernels_select.py``).
+
+    ``sort_fn`` must be an exact ascending sort of a (N,) f32 vector; the
+    Pallas kernel body swaps in its in-VMEM bitonic network, the reference
+    uses ``jnp.sort`` — both are exact permutations, so the threshold (and
+    hence the mask) cannot differ between the two.
+    """
+    n = scores.shape[0]
+    avail = avail.astype(bool)
+    masked = jnp.where(avail, scores, SELECT_NEG).astype(jnp.float32)
+    n_avail = jnp.sum(avail.astype(jnp.int32))
+    k_eff = jnp.minimum(k.astype(jnp.int32), n_avail)
+    svals = sort_fn(masked)                      # ascending, exact
+    # k_eff-th largest lives at ascending index n - k_eff; k_eff == 0 clips
+    # to the maximum, for which the gt/tie counts below select nothing.
+    idx = jnp.clip(n - k_eff, 0, n - 1)
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    thr = jnp.sum(jnp.where(pos == idx, svals, 0.0))
+    gt = masked > thr
+    g = jnp.sum(gt.astype(jnp.int32))
+    eq = (masked == thr) & avail
+    eq_i = eq.astype(jnp.int32)
+    tie_rank = jnp.cumsum(eq_i) - eq_i           # exclusive: id-order prefix
+    return (gt | (eq & (tie_rank < (k_eff - g)))) & avail
+
+
+def select_weights_ref(mask, new_r, p, r_weight, weight_mode: str):
+    """The built-in strategies' weight rules on the fused mask.
+
+    Mirrors ``core.aggregation`` exactly (op-for-op, so the fused path is
+    bit-identical to the unfused ``finalize``):
+
+    * ``unbiased``        p_k / max(r_k(t), R_MIN) on the cohort (Alg. 1
+                          line 9, f3ast — uses the *updated* EMA)
+    * ``unbiased_frozen`` p_k / max(r_weight_k, R_MIN) (Alg. 2,
+                          fixed_f3ast — frozen target / pre-update rate)
+    * ``uniform``         1/|S| over the cohort (fedavg, uniform)
+    * ``fedavg``          p_k / Σ_{S} p_k  (fedavg_weighted)
+    """
+    from ..core.hfun import R_MIN
+    if weight_mode == "unbiased":
+        return jnp.where(mask, p / jnp.maximum(new_r, R_MIN), 0.0)
+    if weight_mode == "unbiased_frozen":
+        return jnp.where(mask, p / jnp.maximum(r_weight, R_MIN), 0.0)
+    if weight_mode == "uniform":
+        v = mask.astype(jnp.float32)
+        return v / jnp.maximum(v.sum(), 1.0)
+    if weight_mode == "fedavg":
+        w = jnp.where(mask, p, 0.0)
+        return w / jnp.maximum(w.sum(), 1e-12)
+    raise ValueError(f"unknown weight_mode {weight_mode!r}; "
+                     f"known: {SELECT_WEIGHT_MODES}")
+
+
+def fed_select_ref(scores, avail, k, r, p, beta, *,
+                   weight_mode: str = "unbiased", r_weight=None):
+    """jnp oracle for the fused selection step: (mask, new_r, weights).
+
+    One pass of Alg. 1 lines 4–5 + the line-9 weight rule: threshold top-k
+    cut → r_k EMA ``r(t) = (1−β) r(t−1) + β·1_{S_t}`` → cohort weights.
+    The Pallas kernel's allclose-and-bitwise target.
+    """
+    mask = topk_threshold_mask(scores, avail, k)
+    new_r = (1.0 - beta) * r + beta * mask.astype(jnp.float32)
+    w = select_weights_ref(mask, new_r, p, r_weight, weight_mode)
+    return mask, new_r, w
+
+
 def ssd_chunk_ref(x, dt, A, Bm, Cm):
     """Intra-chunk SSD pieces — mirrors models.ssm._ssd_chunked internals.
 

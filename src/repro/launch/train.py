@@ -168,6 +168,11 @@ def main():
     ap.add_argument("--engine", default="device", choices=["device", "host"],
                     help="device-resident scan engine (default) or the "
                          "reference host loop (DESIGN.md §7.1)")
+    ap.add_argument("--select-impl", default="xla",
+                    choices=["xla", "pallas"],
+                    help="top-k cut implementation: reference XLA "
+                         "(default) or the fused Pallas selection kernel "
+                         "(bit-identical masks/rates; docs/kernels.md)")
     ap.add_argument("--mesh", type=int, default=None,
                     help="shard the client dimension over this many devices "
                          "(0 = all visible devices; default: unsharded; "
@@ -203,6 +208,7 @@ def main():
                        clients_per_round=args.clients_per_round,
                        seed=args.seed, ckpt_dir=args.ckpt_dir,
                        prox_mu=args.prox_mu, engine=args.engine,
+                       select_impl=args.select_impl,
                        mesh=args.mesh, clients_axis=args.clients_axis,
                        aggregation=args.aggregation,
                        buffer_size=args.buffer_size,

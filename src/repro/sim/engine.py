@@ -186,7 +186,8 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  fed_mode: str = "parallel",
                  mesh=None, clients_axis: str = "clients",
                  strategy_kwargs=None,
-                 completion: Optional[str] = None, completion_kwargs=None):
+                 completion: Optional[str] = None, completion_kwargs=None,
+                 select_impl: str = "xla"):
     """Build the compiled cell for one (scenario × strategy).
 
     Returns ``(engine, ctx)`` where ``ctx`` carries the task pieces the
@@ -206,6 +207,11 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     from .engine_sharded import ShardedEngine, resolve_client_mesh
 
     mesh = resolve_client_mesh(mesh, clients_axis)
+    if mesh is not None and select_impl == "pallas":
+        raise ValueError(
+            "select_impl='pallas' fuses the single-device top-k cut; the "
+            "client-sharded engine keeps its distributed sharded_topk_mask "
+            "(drop mesh= or use select_impl='xla')")
     sc = get_scenario(scenario)
     algo_name, server_opt, server_lr = resolve_strategy(algo_name, server_opt,
                                                         server_lr)
@@ -227,7 +233,7 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                                      override_kwargs=completion_kwargs)
     # engine-supplied defaults; explicit strategy_kwargs win on overlap
     hyper = dict(beta=beta, positively_correlated=positively_correlated,
-                 clients_per_round=m)
+                 clients_per_round=m, select_impl=select_impl)
     hyper.update(strategy_kwargs or {})
     strategy = make_strategy(algo_name, n, p, **hyper)
     opt = make_optimizer(server_opt, lr=server_lr)
@@ -304,6 +310,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
                         strategy_kwargs=None,
                         completion: Optional[str] = None,
                         completion_kwargs=None,
+                        select_impl: str = "xla",
                         algo_label: Optional[str] = None,
                         log_fn=print):
     """Device-resident drop-in for ``runner.run_scenario``.
@@ -333,7 +340,8 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                clients_axis=clients_axis,
                                strategy_kwargs=strategy_kwargs,
                                completion=completion,
-                               completion_kwargs=completion_kwargs)
+                               completion_kwargs=completion_kwargs,
+                               select_impl=select_impl)
     engine_label = "sharded" if mesh is not None else "device"
     n_real = engine.n_clients
     sc, task = ctx["scenario"], ctx["task"]

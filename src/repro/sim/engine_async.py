@@ -324,7 +324,8 @@ class AsyncEngine:
 def _build_async_cell(scenario, algo_name, *, seed, clients_per_round, beta,
                       server_opt, server_lr, prox_mu, positively_correlated,
                       fed_mode, strategy_kwargs, completion, completion_kwargs,
-                      buffer_size, staleness_power, staleness_discount):
+                      buffer_size, staleness_power, staleness_discount,
+                      select_impl="xla"):
     from .runner import build_task    # local import: runner ↔ engine
     sc = get_scenario(scenario)
     algo_name, server_opt, server_lr = resolve_strategy(algo_name, server_opt,
@@ -359,7 +360,7 @@ def _build_async_cell(scenario, algo_name, *, seed, clients_per_round, beta,
     buffer_size = int(buffer_size) if buffer_size else max(1, m // 2)
 
     hyper = dict(beta=beta, positively_correlated=positively_correlated,
-                 clients_per_round=m)
+                 clients_per_round=m, select_impl=select_impl)
     hyper.update(strategy_kwargs or {})
     strategy = make_strategy(algo_name, n, p, **hyper)
     opt = make_optimizer(server_opt, lr=server_lr)
@@ -425,6 +426,7 @@ def run_scenario_buffered(scenario: Union[str, Scenario],
                           buffer_size: Optional[int] = None,
                           staleness_power: float = 0.5,
                           staleness_discount: str = "polynomial",
+                          select_impl: str = "xla",
                           engine: str = "device",
                           algo_label: Optional[str] = None,
                           log_fn=print):
@@ -444,7 +446,7 @@ def run_scenario_buffered(scenario: Union[str, Scenario],
         fed_mode=fed_mode, strategy_kwargs=strategy_kwargs,
         completion=completion, completion_kwargs=completion_kwargs,
         buffer_size=buffer_size, staleness_power=staleness_power,
-        staleness_discount=staleness_discount)
+        staleness_discount=staleness_discount, select_impl=select_impl)
     sc, task = ctx["scenario"], ctx["task"]
     rounds = rounds or ctx["rounds_default"]
     algo_label = algo_label or algo_name

@@ -217,6 +217,7 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             buffer_size=rs.buffer_size,
             staleness_power=rs.staleness_power,
             staleness_discount=rs.staleness_discount,
+            select_impl=rs.select_impl,
             engine=rs.engine, log_fn=log_fn)
     if rs.engine == "host" and rs.mesh is not None:
         raise ValueError("mesh= shards the device engine's client dimension; "
@@ -247,7 +248,8 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             mesh=rs.mesh, clients_axis=rs.clients_axis,
             strategy_kwargs=rs.strategy_kwargs,
             completion=rs.completion,
-            completion_kwargs=rs.completion_kwargs, log_fn=log_fn)
+            completion_kwargs=rs.completion_kwargs,
+            select_impl=rs.select_impl, log_fn=log_fn)
 
     task, fed, init, loss, acc = build_task(sc.task, rs.seed,
                                             **dict(sc.task_kwargs))
@@ -265,7 +267,7 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
     K_cohort = budget.k_max          # static cohort size: jit never resizes
     # engine-supplied defaults; explicit strategy_kwargs win on overlap
     hyper = dict(beta=beta, positively_correlated=rs.positively_correlated,
-                 clients_per_round=M)
+                 clients_per_round=M, select_impl=rs.select_impl)
     hyper.update(rs.strategy_kwargs)
     strategy = make_strategy(rs.strategy, N, p, **hyper)
     algo_state = strategy.init(N)    # built-ins calibrate r0 = M/N (Thm B.1)

@@ -29,7 +29,7 @@ from typing import Any, Mapping, Optional, Union
 
 import numpy as np
 
-from ..core.strategies import resolve_strategy
+from ..core.strategies import SELECT_IMPLS, resolve_strategy
 from .completion import COMPLETION_REGISTRY, resolve_completion
 from .scenario import Scenario, get_scenario
 
@@ -82,6 +82,11 @@ class RunSpec:
     # execution
     seed: int = 0
     engine: str = "device"                      # "device" | "host"
+    select_impl: str = "xla"                    # top-k cut: "xla" | "pallas"
+    #   "pallas" routes every topk_strategy through the fused selection
+    #   kernel (repro.kernels.fed_select) — bit-identical masks/rates,
+    #   one pass over the client axis.  Unsupported with mesh= (the
+    #   sharded engine keeps its distributed sharded_topk_mask).
     mesh: Optional[Any] = None                  # shard count | Mesh | None
     clients_axis: str = "clients"
     chunk_size: Optional[int] = None            # device engine rounds/chunk
@@ -112,6 +117,14 @@ class RunSpec:
         if self.engine not in ("device", "host"):
             raise ValueError(f"engine must be 'device' or 'host', "
                              f"got {self.engine!r}")
+        if self.select_impl not in SELECT_IMPLS:
+            raise ValueError(f"select_impl must be one of {SELECT_IMPLS}, "
+                             f"got {self.select_impl!r}")
+        if self.select_impl == "pallas" and self.mesh is not None:
+            raise ValueError(
+                "select_impl='pallas' fuses the single-device top-k cut; "
+                "the client-sharded engine keeps its distributed "
+                "sharded_topk_mask (drop mesh= or use select_impl='xla')")
         if self.fed_mode not in ("parallel", "sequential"):
             raise ValueError(f"fed_mode must be 'parallel' or 'sequential', "
                              f"got {self.fed_mode!r}")

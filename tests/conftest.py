@@ -62,6 +62,9 @@ COMPLETION_SETTINGS = {
 PARITY_ENGINES = tuple(REFERENCE_ENGINE)
 PARITY_STRATEGIES = ("f3ast", "fedavg", "uniform")
 PARITY_COMPLETIONS = tuple(COMPLETION_SETTINGS)
+# select_impl axis: the reference XLA cut vs the fused Pallas selection
+# kernel (tests force the actual kernel via the interpreter on CPU).
+PARITY_SELECT_IMPLS = ("xla", "pallas")
 PARITY_ROUNDS = 8
 
 

@@ -12,7 +12,8 @@ rather than silently degrade.
 """
 import pytest
 
-from conftest import (PARITY_COMPLETIONS, PARITY_ENGINES, PARITY_STRATEGIES,
+from conftest import (PARITY_COMPLETIONS, PARITY_ENGINES,
+                      PARITY_SELECT_IMPLS, PARITY_STRATEGIES,
                       REFERENCE_ENGINE, assert_cell_parity, parity_spec,
                       run_cell)
 
@@ -44,3 +45,27 @@ def test_engine_matches_its_reference(engine, strategy, completion,
         assert res.async_history is not None
     else:
         assert res.async_history is None
+
+
+@pytest.mark.parametrize("completion", PARITY_COMPLETIONS)
+@pytest.mark.parametrize("strategy", PARITY_STRATEGIES)
+@pytest.mark.parametrize("select_impl",
+                         [i for i in PARITY_SELECT_IMPLS if i != "xla"])
+def test_select_impl_matches_xla(select_impl, strategy, completion,
+                                 parity_reference_cache, monkeypatch):
+    """select_impl axis of the matrix: the device engine routed through the
+    *actual Pallas kernel* (forced interpreter — the CPU autodetect would
+    use the fused jnp reference) must reproduce the reference XLA cut
+    bit-for-bit: selection masks, completion masks, AND the r_k EMA
+    (``rates_exact=True`` — stronger than the cross-engine contract, which
+    only demands that between compiled engines)."""
+    from repro.kernels import fed_select
+    spec = parity_spec(strategy, completion)
+    key = ("device-xla", strategy, completion)
+    if key not in parity_reference_cache:
+        parity_reference_cache[key] = run_cell(spec, "device",
+                                               select_impl="xla")
+    ref = parity_reference_cache[key]
+    monkeypatch.setattr(fed_select, "AUTODETECT_OVERRIDE", "interpret")
+    res = run_cell(spec, "device", select_impl=select_impl)
+    assert_cell_parity(ref, res, rates_exact=True)

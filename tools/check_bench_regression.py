@@ -28,6 +28,14 @@ must have completed with nonzero throughput — the guard that the 100k-client
 regime keeps working at all (absolute rounds/sec are machine-dependent and
 not gated there).
 
+With ``--selection-current`` it additionally gates the fused selection
+kernel (``benchmarks/selection_overhead.py``):
+``selection_kernel_over_xla_ratio`` (XLA control-step time / fused-kernel
+time at the gate fleet size) must stay >= ``--min-selection-ratio``
+(default 1.0) — machine-independent, both numbers come from the same run —
+the guard that ``select_impl="pallas"`` cannot silently become slower than
+the reference pipeline it replaces.
+
 Usage:
     python tools/check_bench_regression.py \
         --baseline experiments/bench/BENCH_engine.json \
@@ -126,6 +134,24 @@ def check_nscale(result: dict) -> list:
     return []
 
 
+def check_selection(result: dict, min_ratio: float) -> list:
+    """The fused selection kernel must hold its speedup over the XLA cut."""
+    ratio = result.get("selection_kernel_over_xla_ratio")
+    if ratio is None:
+        return ["selection results lack 'selection_kernel_over_xla_ratio'"]
+    if ratio < min_ratio:
+        return [
+            f"fused selection kernel runs at {ratio:.2f}x of the XLA "
+            f"pipeline at N={result.get('gate_n', '?')}, below the "
+            f"required {min_ratio:.2f}x"
+        ]
+    print(
+        f"check_bench_regression: selection kernel {ratio:.2f}x over XLA "
+        f"at N={result.get('gate_n', '?')}"
+    )
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="experiments/bench/BENCH_engine.json")
@@ -135,6 +161,20 @@ def main(argv=None) -> int:
         default=None,
         help="optional N-scaling results (bench_engine.py --nscale-only); "
         "checks the largest-N sharded cell completed",
+    )
+    ap.add_argument(
+        "--selection-current",
+        default=None,
+        help="optional selection-kernel results "
+        "(benchmarks/selection_overhead.py --out); gates the fused-kernel "
+        "over-XLA ratio at the gate fleet size",
+    )
+    ap.add_argument(
+        "--min-selection-ratio",
+        type=float,
+        default=1.0,
+        help="required selection_kernel_over_xla_ratio in the current "
+        "selection results (used with --selection-current)",
     )
     ap.add_argument(
         "--threshold",
@@ -170,6 +210,10 @@ def main(argv=None) -> int:
                    args.min_dropout_ratio, args.min_buffered_ratio)
     if args.nscale_current:
         errors += check_nscale(load(args.nscale_current))
+    if args.selection_current:
+        errors += check_selection(
+            load(args.selection_current), args.min_selection_ratio
+        )
     if errors:
         print(f"check_bench_regression: FAIL ({len(errors)} issue(s))")
         for e in errors:
