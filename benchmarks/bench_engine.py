@@ -23,10 +23,21 @@ is where XLA compiles) for the three execution paths of one
 * ``vmapped8``       — 8 cells (seeds 0..7) in one vmapped program
                        (``run_cells_vmapped``); rounds/sec counts all cells.
 
-``--nscale`` adds the client-scaling column: a vectorized synthetic task at
-N up to 100k clients, run through the unsharded engine and the
-client-sharded engine (``sim/engine_sharded.py``, all visible devices —
-``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU).  The
+``--nscale`` adds the client-scaling column in two modes per N:
+
+* ``staged`` (N ≤ 1e5) — client data materialized and staged on device
+  (the legacy cells, kept for baseline continuity);
+* ``synth`` (N ≥ 1e5) — on-demand keyed cohort synthesis
+  (``data.SynthTask``): nothing O(N) is resident, which is what lets the
+  column reach N = 1e6 on both engines and N = 1e7 on the sharded engine
+  (``--n-smoke-1e7``, a few rounds, existence proof not throughput).
+
+Each engine cell also records the scale-accounting columns —
+``n_staged_bytes`` (resident client-data bytes; 0 for synth),
+``staged_bytes_per_client``, and ``selection_comm_bytes_per_round`` (the
+sharded engine's analytic per-shard selection traffic under the packed
+uint32 mask wire format).  Run the sharded cells with all visible devices
+— ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU.  The
 unsharded cell is attempted and recorded as ``oom`` if the single-device
 path cannot stage/run it.
 
@@ -60,7 +71,7 @@ sys.path.insert(0, "src")
 from repro.core.fedstep import make_fed_round
 from repro.core.strategies import make_strategy
 from repro.data.pipeline import stage_client_arrays
-from repro.data.synthetic import make_synthetic_client_arrays
+from repro.data.synthetic import SynthTask, make_synthetic_client_arrays
 from repro.launch.mesh import make_client_mesh
 from repro.models import softmax_reg
 from repro.models.softmax_reg import SoftmaxRegConfig
@@ -120,12 +131,23 @@ def bench_vmapped(scenario: str, algo: str, rounds: int, cells: int,
 
 def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
                          n_classes: int = 10, samples: int = 64,
-                         k: int = 10, seed: int = 0):
-    """One synthetic N-scaling cell (vectorized data, no per-client loop)."""
-    arrays, counts = make_synthetic_client_arrays(
-        n_clients, dim=dim, n_classes=n_classes, samples_per_client=samples,
-        seed=seed)
-    staged = stage_client_arrays(arrays, counts, mesh=mesh)
+                         k: int = 10, seed: int = 0, synth: bool = False,
+                         topk_impl: str = "stream"):
+    """One synthetic N-scaling cell (vectorized data, no per-client loop).
+
+    ``synth=True`` hands the engine a :class:`repro.data.SynthTask` instead
+    of staged arrays: cohort batches are synthesized on demand inside the
+    compiled loop, so device-resident client data is 0 bytes regardless of
+    N — the path that makes the 1e6/1e7 cells possible at all.
+    """
+    if synth:
+        staged = SynthTask(n_clients=n_clients, dim=dim, n_classes=n_classes,
+                           samples_per_client=samples, seed=seed)
+    else:
+        arrays, counts = make_synthetic_client_arrays(
+            n_clients, dim=dim, n_classes=n_classes,
+            samples_per_client=samples, seed=seed)
+        staged = stage_client_arrays(arrays, counts, mesh=mesh)
     cfg = SoftmaxRegConfig(dim=dim, n_classes=n_classes)
     loss = functools.partial(softmax_reg.loss_fn, cfg)
     opt = make_optimizer("sgd", lr=1.0)
@@ -143,6 +165,7 @@ def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
     else:
         engine = ShardedEngine(
             mesh=mesh, axis="clients", staged=staged, n_clients=n_clients,
+            topk_impl=topk_impl,
             fed_round=make_fed_round(loss, opt, cohort_axis="clients",
                                      cohort_slots=k), **common)
     return engine
@@ -169,20 +192,33 @@ def _time_engine(engine, rounds: int, chunk: int) -> dict:
                 rounds_per_s=round(rps, 2))
 
 
-def bench_nscale(n_values, rounds: int, chunk: int) -> dict:
-    """Unsharded vs client-sharded engine across client counts N."""
+def bench_nscale(cells_spec, rounds: int, chunk: int) -> dict:
+    """Unsharded vs client-sharded engine across client counts N.
+
+    ``cells_spec``: iterable of (n_clients, mode, engines, cell_rounds)
+    with mode "staged" | "synth"; ``cell_rounds=None`` uses ``rounds``.
+    """
     mesh = make_client_mesh(axis_name="clients")
     out = dict(devices=jax.device_count(),
                task=dict(dim=32, n_classes=10, samples_per_client=64, k=10),
                cells=[])
-    for n in n_values:
-        cell = dict(n_clients=n)
+    for n, mode, engines, cell_rounds in cells_spec:
+        r = cell_rounds or rounds
+        cell = dict(n_clients=n, mode=mode)
         for label, m in (("device", None), ("sharded", mesh)):
-            print(f"  N={n:>7d} {label:>8s} ...", end=" ", flush=True)
+            if label not in engines:
+                continue
+            print(f"  N={n:>8d} {mode:>6s} {label:>8s} ...", end=" ",
+                  flush=True)
             engine = None
             try:
-                engine = _build_nscale_engine(n, m)
-                cell[label] = _time_engine(engine, rounds, chunk)
+                engine = _build_nscale_engine(n, m, synth=(mode == "synth"))
+                cell[label] = _time_engine(engine, r, chunk)
+                cell[label]["n_staged_bytes"] = engine.n_staged_bytes
+                cell[label]["staged_bytes_per_client"] = round(
+                    engine.n_staged_bytes / n, 2)
+                cell[label]["selection_comm_bytes_per_round"] = (
+                    engine.selection_comm_bytes_per_round)
                 print(f"{cell[label]['rounds_per_s']:.1f} rounds/s")
             except (MemoryError, RuntimeError) as e:   # XLA OOM surfaces as
                 cell[label] = dict(status="oom",       # RuntimeError on CPU
@@ -215,8 +251,12 @@ def main(argv=None) -> dict:
     ap.add_argument("--nscale-only", action="store_true",
                     help="run only the client-scaling column (use with "
                          "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
-    ap.add_argument("--n-max", type=int, default=100_000,
+    ap.add_argument("--n-max", type=int, default=1_000_000,
                     help="largest client count in the N-scaling column")
+    ap.add_argument("--n-smoke-1e7", action="store_true",
+                    help="add a sharded-only N=1e7 on-demand-synthesis "
+                         "smoke cell (a few rounds; proves the round fits, "
+                         "not a throughput claim)")
     ap.add_argument("--out", default="experiments/bench/BENCH_engine.json",
                     help="output path (the default overwrites the committed "
                          "CI baseline — pass an explicit path to compare)")
@@ -240,10 +280,19 @@ def main(argv=None) -> dict:
                       machine=platform.machine()),
     )
     if args.nscale or args.nscale_only:
-        n_values = [n for n in (1_000, 10_000, 100_000) if n <= args.n_max]
+        both = ("device", "sharded")
+        cells_spec = [(n, "staged", both, None)
+                      for n in (1_000, 10_000, 100_000) if n <= args.n_max]
+        cells_spec += [(n, "synth", both, None)
+                       for n in (100_000, 1_000_000) if n <= args.n_max]
+        if args.n_smoke_1e7:
+            # chunk + 2 rounds: one compile chunk plus a measurable tail
+            cells_spec.append((10_000_000, "synth", ("sharded",),
+                               nscale_chunk + 2))
         print(f"benching N-scaling column (unsharded vs sharded, "
               f"{jax.device_count()} devices, {nscale_rounds} rounds) ...")
-        result["nscale"] = bench_nscale(n_values, nscale_rounds, nscale_chunk)
+        result["nscale"] = bench_nscale(cells_spec, nscale_rounds,
+                                        nscale_chunk)
     if args.nscale_only:
         with open(args.out, "w") as f:
             json.dump(result, f, indent=1)

@@ -2,9 +2,12 @@
 from .availability import (AVAILABILITY_REGISTRY, Always, CommBudget,
                            HomeDevices, MarkovClusters, Scarce, SmartPhones,
                            Uneven, make_availability)
+from .bitmask import (all_gather_bits, n_words, pack_bits, unpack_bits,
+                      unpack_bits_np)
 from .hfun import R_MIN, h_grad, h_value, marginal_utility
-from .selection import (cohort_ids_from_mask, f3ast_select, fedavg_select,
-                        fixed_policy_select, poc_select, uniform_select)
+from .selection import (TOPK_IMPLS, cohort_ids_from_mask, f3ast_select,
+                        fedavg_select, fixed_policy_select, poc_select,
+                        uniform_select)
 from .rates import RateState, empirical_rate, init_rates, update_rates
 from .aggregation import (fedavg_weights, streaming_aggregate_add,
                           streaming_aggregate_init, unbiased_weights,

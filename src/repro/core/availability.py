@@ -42,6 +42,28 @@ def force_nonempty(mask: jnp.ndarray, q: jnp.ndarray,
     return jnp.where(mask.any(), mask, fallback)
 
 
+def force_nonempty_block(mask_blk: jnp.ndarray, cand_blk: jnp.ndarray,
+                         off, axis: str) -> jnp.ndarray:
+    """Blockwise :func:`force_nonempty` for one shard of a client mesh.
+
+    ``cand_blk`` is this shard's slice of the full-width candidate vector
+    ``where(q >= q.max(), tie, -1)`` (out-of-range pad lanes forced to
+    −1).  Reproduces the full-width result bitwise without materializing
+    (N,) anywhere: per-shard (max, first-argmax) pairs reduce across the
+    mesh with the same first-occurrence tie order as a global ``argmax``
+    (shards are ordered by offset, ``argmax`` picks the first shard
+    attaining the global max, and within a shard the first local index).
+    """
+    v = cand_blk.max()
+    j = jnp.argmax(cand_blk).astype(jnp.int32)
+    vs = jax.lax.all_gather(v, axis)                    # (D,) tiny
+    js = jax.lax.all_gather(off + j, axis)
+    idx = js[jnp.argmax(vs)]
+    nonempty = jax.lax.psum(mask_blk.sum().astype(jnp.int32), axis) > 0
+    ids = off + jnp.arange(mask_blk.shape[0], dtype=jnp.int32)
+    return jnp.where(nonempty, mask_blk, ids == idx)
+
+
 @dataclasses.dataclass(frozen=True)
 class AvailabilityProcess:
     """Base class: per-client marginal probabilities, possibly time-varying."""

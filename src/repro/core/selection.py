@@ -145,31 +145,113 @@ def poc_select(key: jax.Array, avail: jnp.ndarray, m: jnp.ndarray,
     return cut(losses, cand, m)
 
 
+TOPK_IMPLS = ("stream", "allgather")
+
+
+def _axis_size(axis: str) -> int:
+    """Static size of a shard_map axis (psum of a concrete 1 constant-folds
+    to the axis size at trace time)."""
+    return int(jax.lax.psum(1, axis))
+
+
+def _merge_desc(va, ga, vb, gb, keep: int):
+    """Merge two (score, gid) candidate lists sorted by (−score, gid) and
+    keep the best ``keep`` — the associative reduction step of the
+    streaming top-k.  gids are globally unique, so (−score, gid) is a
+    strict total order: merging pairwise and cutting to ``keep`` yields
+    exactly the first ``keep`` entries of the fully-sorted union
+    (top-k(A ∪ B) = top-k(top-k(A) ∪ top-k(B)))."""
+    neg_v, g = jax.lax.sort((jnp.concatenate([-va, -vb]),
+                             jnp.concatenate([ga, gb])), num_keys=2)
+    return -neg_v[:keep], g[:keep]
+
+
+def _stream_topk_candidates(vals, gids, axis: str, k_max: int):
+    """Reduce per-shard sorted candidate lists to the replicated global
+    top-``min(k_max, total)`` via ppermute rounds — no full ``all_gather``.
+
+    Power-of-2 shard counts run a butterfly (log2(D) exchange+merge
+    stages, partner ``i XOR 2^s``, list length capped at ``k_max``);
+    other counts fall back to a ring reduction (D−1 single-neighbor
+    steps).  Both are all-reduces: every shard ends with the same sorted
+    global candidate list, in the exact (−score, gid) order the
+    ``all_gather`` + global-sort path produces.
+    """
+    d = _axis_size(axis)
+    kk = vals.shape[0]
+    if d == 1:
+        return vals, gids
+    if d & (d - 1) == 0:                      # butterfly: log2(D) stages
+        length = kk
+        for s in range(d.bit_length() - 1):
+            bit = 1 << s
+            perm = [(j, j ^ bit) for j in range(d)]
+            ov = jax.lax.ppermute(vals, axis, perm)
+            og = jax.lax.ppermute(gids, axis, perm)
+            length = min(int(k_max), 2 * length)
+            vals, gids = _merge_desc(vals, gids, ov, og, length)
+        return vals, gids
+    # ring: pass a fixed-size buffer around, merging as it goes
+    perm = [(j, (j + 1) % d) for j in range(d)]
+    buf_v, buf_g = vals, gids
+    for step in range(1, d):
+        buf_v = jax.lax.ppermute(buf_v, axis, perm)
+        buf_g = jax.lax.ppermute(buf_g, axis, perm)
+        keep = min(int(k_max), kk * (step + 1))
+        vals, gids = _merge_desc(vals, gids, buf_v, buf_g, keep)
+    return vals, gids
+
+
 def sharded_topk_mask(scores: jnp.ndarray, avail: jnp.ndarray,
-                      k: jnp.ndarray, axis: str, k_max: int) -> jnp.ndarray:
+                      k: jnp.ndarray, axis: str, k_max: int,
+                      method: str = "allgather") -> jnp.ndarray:
     """Distributed :func:`_topk_mask` for use inside ``shard_map``.
 
     ``scores``/``avail`` are this shard's block of the client dimension.
-    Per-shard top-``min(k_max, n_local)`` candidates are all-gathered and cut
-    globally at ``k_eff = min(k, |avail|)``, sorting by (−score, global id) —
-    the exact tie-break of the single-device ``argsort`` path (stable sort ⇒
-    equal scores resolve to the lower client id; ``lax.top_k`` keeps the
-    lower local index on ties, preserving that order within a shard).  Any
-    globally-selected client is necessarily among its own shard's top-k_max,
-    so the candidate cut loses nothing.  Returns this shard's (n_local,)
-    boolean mask block, bit-identical to ``_topk_mask`` on the full arrays.
+    Per-shard top-``min(k_max, n_local)`` candidates are reduced to the
+    global candidate list and cut at ``k_eff = min(k, |avail|)``, ordering
+    by (−score, global id) — the exact tie-break of the single-device
+    ``argsort`` path (stable sort ⇒ equal scores resolve to the lower
+    client id; ``lax.top_k`` keeps the lower local index on ties,
+    preserving that order within a shard).  Any globally-selected client
+    is necessarily among its own shard's top-k_max, so the candidate cut
+    loses nothing.  Returns this shard's (n_local,) boolean mask block,
+    bit-identical to ``_topk_mask`` on the full arrays.
+
+    ``method`` picks the reduction (``RunSpec.topk_impl``):
+
+    * ``"allgather"`` — gather every shard's full candidate list and sort
+      globally: O(D · min(k_max, N/D)) gathered pairs per shard, the
+      reference spelling.
+    * ``"stream"`` — merge candidate lists pairwise over ppermute rounds
+      (:func:`_stream_topk_candidates`), so each shard moves O(k_max ·
+      log D) pairs instead of the full candidate matrix, and membership
+      is recovered by a scatter instead of an O(k_max · n_local)
+      broadcast compare.  Same mask, bit for bit.
     """
+    if method not in TOPK_IMPLS:
+        raise ValueError(f"unknown sharded top-k method {method!r}; "
+                         f"known: {TOPK_IMPLS}")
     n_local = scores.shape[0]
     i = jax.lax.axis_index(axis)
     masked = jnp.where(avail, scores, _NEG)
     kk = min(int(k_max), n_local)
     vals, loc = jax.lax.top_k(masked, kk)
     gids = (loc + i * n_local).astype(jnp.int32)
+    n_avail = jax.lax.psum(avail.sum().astype(jnp.int32), axis)
+    k_eff = jnp.minimum(k.astype(jnp.int32), n_avail)
+    if method == "stream":
+        top_v, top_g = _stream_topk_candidates(vals, gids, axis, k_max)
+        del top_v
+        take = jnp.arange(top_g.shape[0], dtype=jnp.int32) < k_eff
+        loc_ids = top_g - i * n_local
+        in_shard = take & (loc_ids >= 0) & (loc_ids < n_local)
+        hit = jnp.zeros((n_local,), bool).at[
+            jnp.where(in_shard, loc_ids, 0)].max(in_shard)
+        return hit & avail
     all_vals = jax.lax.all_gather(vals, axis, tiled=True)
     all_gids = jax.lax.all_gather(gids, axis, tiled=True)
     _, sorted_gids = jax.lax.sort((-all_vals, all_gids), num_keys=2)
-    n_avail = jax.lax.psum(avail.sum().astype(jnp.int32), axis)
-    k_eff = jnp.minimum(k.astype(jnp.int32), n_avail)
     take = jnp.arange(sorted_gids.shape[0], dtype=jnp.int32) < k_eff
     sel_gids = jnp.where(take, sorted_gids, -1)
     local_gids = i * n_local + jnp.arange(n_local, dtype=jnp.int32)
@@ -193,25 +275,66 @@ def cohort_ids_from_mask(mask: jnp.ndarray, cohort_size: int):
     return jnp.where(valid, ids, first), valid
 
 
+def _stream_min_ids(ids, axis: str, keep_max: int):
+    """Replicated global lowest-``keep_max`` of per-shard ascending id
+    lists via the same butterfly/ring schedule as the top-k reduction
+    (ascending ids are just (−score, gid) candidates with equal scores)."""
+    d = _axis_size(axis)
+    kk = ids.shape[0]
+    if d == 1:
+        return ids
+
+    def merge(a, b, keep):
+        return jnp.sort(jnp.concatenate([a, b]))[:keep]
+
+    if d & (d - 1) == 0:
+        length = kk
+        for s in range(d.bit_length() - 1):
+            perm = [(j, j ^ (1 << s)) for j in range(d)]
+            other = jax.lax.ppermute(ids, axis, perm)
+            length = min(int(keep_max), 2 * length)
+            ids = merge(ids, other, length)
+        return ids
+    perm = [(j, (j + 1) % d) for j in range(d)]
+    buf = ids
+    for step in range(1, d):
+        buf = jax.lax.ppermute(buf, axis, perm)
+        ids = merge(ids, buf, min(int(keep_max), kk * (step + 1)))
+    return ids
+
+
 def sharded_cohort_ids_from_mask(mask: jnp.ndarray, cohort_size: int,
-                                 axis: str, n_total: int):
+                                 axis: str, n_total: int,
+                                 method: str = "allgather"):
     """Distributed :func:`cohort_ids_from_mask` for use inside ``shard_map``.
 
     ``mask`` is this shard's block (which may cover padded clients — those
     are never set).  Each shard contributes its lowest-id selected clients
     (at most ``min(cohort_size, n_local)`` can be selected per shard since
-    |S| ≤ cohort_size globally); the gathered candidates are re-sorted and
-    cut to ``cohort_size``.  ``n_total`` is the *real* client count N — the
-    same sentinel the single-device path uses — so the returned (ids, valid)
+    |S| ≤ cohort_size globally); the candidates are reduced to the global
+    lowest ``cohort_size`` — via ``all_gather`` + sort, or with
+    ``method="stream"`` via the ppermute merge schedule of
+    :func:`sharded_topk_mask` (O(cohort · log D) ids moved instead of
+    O(cohort · D)).  ``n_total`` is the *real* client count N — the same
+    sentinel the single-device path uses — so the returned (ids, valid)
     are bit-identical to ``cohort_ids_from_mask`` on the full (N,) mask.
     The result is replicated across shards.
     """
+    if method not in TOPK_IMPLS:
+        raise ValueError(f"unknown sharded top-k method {method!r}; "
+                         f"known: {TOPK_IMPLS}")
     n_local = mask.shape[0]
     i = jax.lax.axis_index(axis)
     gids = (i * n_local + jnp.arange(n_local, dtype=jnp.int32))
     ranked = jnp.sort(jnp.where(mask, gids, n_total))
     kk = min(int(cohort_size), n_local)
-    cand = jnp.sort(jax.lax.all_gather(ranked[:kk], axis, tiled=True))
+    if method == "stream":
+        cand = _stream_min_ids(ranked[:kk], axis, cohort_size)
+        cand = jnp.concatenate(          # streamed list may be < cohort_size
+            [cand, jnp.full((max(0, cohort_size - cand.shape[0]),), n_total,
+                            cand.dtype)])
+    else:
+        cand = jnp.sort(jax.lax.all_gather(ranked[:kk], axis, tiled=True))
     ids = cand[:cohort_size]
     valid = ids < n_total
     first = jnp.minimum(cand[0], n_total - 1)

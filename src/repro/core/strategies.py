@@ -50,6 +50,7 @@ import jax.numpy as jnp
 
 from . import selection as sel
 from .aggregation import fedavg_weights, unbiased_weights, uniform_weights
+from .bitmask import all_gather_bits
 from .hfun import R_MIN, marginal_utility
 from .rates import RateState, init_rates, update_rates
 
@@ -131,6 +132,16 @@ class SelectionStrategy(NamedTuple):
     :func:`topk_strategy`) that :func:`as_sharded` needs; ``rates_of``
     optionally extracts a tracked (N,) participation rate for reporting;
     ``needs_losses``/``host_only`` route the strategy to the host loop.
+
+    ``score_block(state, key, avail_blk, k_t, ctx, off, n_total) ->
+    (n_local,) f32`` is an optional blockwise spelling of ``score`` for
+    the sharded engine: the slice ``[off, off + n_local)`` of the
+    full-width score vector, bitwise-identical to computing and slicing
+    it (random tie-breaks via the slice-consistent ``core.blockrng``
+    draws), at O(n_local) per-shard cost with no (N,) intermediate.
+    Out-of-range pad lanes must score 0 (matching the adapter's zero-pad
+    of the full-width path).  Strategies without it still run sharded
+    through the full-width ``score`` + slice.
     """
     name: str
     init: Callable[..., Any]
@@ -141,6 +152,7 @@ class SelectionStrategy(NamedTuple):
     n_clients: Optional[int] = None
     needs_losses: bool = False
     host_only: bool = False
+    score_block: Optional[Callable[..., Any]] = None
 
 
 def strategy_rates(strategy: SelectionStrategy, state):
@@ -158,7 +170,9 @@ def topk_strategy(name: str, init: Callable, score: Callable,
                   finalize: Callable, *, n_clients: Optional[int] = None,
                   rates_of: Optional[Callable] = None,
                   select_impl: str = "xla",
-                  fused: Optional[Callable] = None) -> SelectionStrategy:
+                  fused: Optional[Callable] = None,
+                  score_block: Optional[Callable] = None
+                  ) -> SelectionStrategy:
     """Build a strategy from the canonical score → top-k → weight shape.
 
     ``score(state, key, avail, k_t, ctx) -> (N,) f32`` ranks clients;
@@ -200,7 +214,8 @@ def topk_strategy(name: str, init: Callable, score: Callable,
 
     return SelectionStrategy(name=name, init=init, select=select,
                              score=score, finalize=finalize,
-                             rates_of=rates_of, n_clients=n_clients)
+                             rates_of=rates_of, n_clients=n_clients,
+                             score_block=score_block)
 
 
 def _fused_rate_select(p, beta: float, weight_mode: str,
@@ -226,22 +241,38 @@ def _fused_rate_select(p, beta: float, weight_mode: str,
 
 
 def as_sharded(strategy: SelectionStrategy, *, axis: str, k_max: int,
-               n_pad: int) -> Callable:
+               n_pad: int, topk_impl: str = "stream") -> Callable:
     """Generic blockwise adapter for the client-sharded engine.
 
-    Returns ``select_blk(state, key, avail_blk, k_t, ctx) ->
-    (mask_blk, weights_blk, new_state)`` for use inside ``shard_map`` over
-    ``axis``: ``avail_blk`` is this shard's block of the client dimension
-    padded to ``n_pad``; the strategy ``state`` is replicated (full real-N
-    shape on every shard).  Scores and weights are computed at full (N,)
-    shape from the strategy's own ``score``/``finalize`` — identical
-    computation, same key ⇒ same values as the single-device path — and
-    only the top-k cut is distributed (``selection.sharded_topk_mask``,
-    bit-identical tie-break), so the assembled global mask and the state
-    trajectory match the unsharded engine exactly.  Recomputing the O(N)
-    elementwise fields replicated is deliberate: they are a few hundred KB
-    at N = 100k, while the staged data, availability state, and the top-k
-    sort stay sharded.
+    Returns ``select_blk(state, key, avail_blk, k_t, ctx, avail_full=None)
+    -> (mask_blk, weights_blk, new_state, completed_full)`` for use inside
+    ``shard_map`` over ``axis``: ``avail_blk`` is this shard's block of the
+    client dimension padded to ``n_pad``; the strategy ``state`` is
+    replicated (full real-N shape on every shard).  Scores and weights are
+    computed at full (N,) shape from the strategy's own
+    ``score``/``finalize`` — identical computation, same key ⇒ same values
+    as the single-device path — and only the top-k cut is distributed
+    (``selection.sharded_topk_mask``, bit-identical tie-break), so the
+    assembled global mask and the state trajectory match the unsharded
+    engine exactly.  Recomputing the O(N) elementwise fields replicated is
+    deliberate: they are a few hundred KB at N = 100k, while the staged
+    data, availability state, and the top-k sort stay sharded.
+
+    Callers that already hold the replicated full-width availability mask
+    (the sharded engine steps the availability process at (N,) shape on
+    every shard) pass it as ``avail_full`` to skip the gather; otherwise it
+    is reassembled from ``avail_blk``.  ``completed_full`` is the
+    replicated full-width completed mask (identity to the selection mask
+    without a completion hook) — returned so the engine never re-gathers
+    or re-draws it.
+
+    ``topk_impl`` (``RunSpec.topk_impl``) picks the distributed cut's
+    reduction — ``"stream"`` (ppermute candidate merging, the default) or
+    ``"allgather"`` (the reference full-candidate gather) — bit-identical
+    masks either way.  The full-width bool gathers of the availability and
+    selection masks move bit-packed uint32 words when the shard block is
+    32-divisible (``core.bitmask``; the staging paths pad the client dim
+    to guarantee it), an 8× cut of the per-round mask traffic.
     """
     if strategy.score is None or strategy.finalize is None:
         raise ValueError(
@@ -252,28 +283,39 @@ def as_sharded(strategy: SelectionStrategy, *, axis: str, k_max: int,
     if n is None:
         raise ValueError(f"strategy {strategy.name!r} does not declare "
                          f"n_clients; as_sharded needs it to un-pad fields")
+    if topk_impl not in sel.TOPK_IMPLS:
+        raise ValueError(f"unknown topk_impl {topk_impl!r}; "
+                         f"known: {sel.TOPK_IMPLS}")
 
     def pad(x):
         return jnp.pad(x, [(0, n_pad - x.shape[0])]
                        + [(0, 0)] * (x.ndim - 1))
 
     def select_blk(state, key, avail_blk, k_t,
-                   ctx: Optional[SelectCtx] = None):
+                   ctx: Optional[SelectCtx] = None, avail_full=None):
         n_local = avail_blk.shape[0]
         off = jax.lax.axis_index(axis) * n_local
-        avail_full = jax.lax.all_gather(avail_blk, axis, tiled=True)[:n]
-        scores = strategy.score(state, key, avail_full, k_t, ctx)
-        scores_blk = jax.lax.dynamic_slice_in_dim(pad(scores), off, n_local)
+        if strategy.score_block is not None:
+            # O(n_local) blockwise score — no (N,) intermediate, no
+            # availability gather (bitwise-identical by contract)
+            scores_blk = strategy.score_block(state, key, avail_blk, k_t,
+                                              ctx, off, n)
+        else:
+            if avail_full is None:
+                avail_full = all_gather_bits(avail_blk, axis, n)
+            scores = strategy.score(state, key, avail_full, k_t, ctx)
+            scores_blk = jax.lax.dynamic_slice_in_dim(pad(scores), off,
+                                                      n_local)
         mask_blk = sel.sharded_topk_mask(scores_blk, avail_blk, k_t, axis,
-                                         k_max)
-        mask_full = jax.lax.all_gather(mask_blk, axis, tiled=True)[:n]
+                                         k_max, method=topk_impl)
+        mask_full = all_gather_bits(mask_blk, axis, n)
         # completion draws at full (N,) shape from the replicated key —
         # identical on every shard and to the single-device path
         completed_full = apply_completion(ctx, mask_full)
         weights, new_state = strategy.finalize(state, completed_full, ctx)
         w_blk = jax.lax.dynamic_slice_in_dim(
             pad(weights.astype(jnp.float32)), off, n_local)
-        return mask_blk, w_blk, new_state
+        return mask_blk, w_blk, new_state, completed_full
 
     return select_blk
 
@@ -446,6 +488,30 @@ def _ema_finalize(beta: float, weights_from_mask: Callable) -> Callable:
     return finalize
 
 
+def _rate_score_block(p, positively_correlated: bool,
+                      r_of: Callable) -> Callable:
+    """Blockwise spelling of the rate-utility score (f3ast family): the
+    slice of ``marginal_utility(r, p) * (1 + 1e-6·uniform)`` computed from
+    the block's own r/p rows and the slice-consistent ``core.blockrng``
+    tie-break — bitwise-identical to slicing the full-width score, pad
+    lanes 0 (matching the sharded adapter's zero-pad)."""
+    from .blockrng import block_uniform
+    p_arr = jnp.asarray(p, jnp.float32)
+
+    def score_block(state, key, avail_blk, k_t, ctx, off, n_total):
+        n_local = avail_blk.shape[0]
+        ids = off + jnp.arange(n_local, dtype=jnp.int32)
+        real = ids < n_total
+        safe = jnp.minimum(ids, n_total - 1)
+        r_blk = jnp.take(r_of(state), safe)
+        p_blk = jnp.take(p_arr, safe)
+        util = marginal_utility(r_blk, p_blk, positively_correlated)
+        tie = block_uniform(key, n_total, off, n_local)
+        return jnp.where(real, util * (1.0 + 1e-6 * tie), 0.0)
+
+    return score_block
+
+
 @register_strategy("f3ast")
 def _make_f3ast(n_clients, p, beta: float = 1e-3,
                 positively_correlated: bool = False,
@@ -469,7 +535,10 @@ def _make_f3ast(n_clients, p, beta: float = 1e-3,
     return topk_strategy("f3ast", _rate_init(n_clients, clients_per_round),
                          score, finalize, n_clients=n_clients,
                          select_impl=select_impl,
-                         fused=_fused_rate_select(p, beta, "unbiased"))
+                         fused=_fused_rate_select(p, beta, "unbiased"),
+                         score_block=_rate_score_block(
+                             p, positively_correlated,
+                             lambda s: s.rates.r))
 
 
 @register_strategy("fixed_f3ast")
@@ -503,7 +572,11 @@ def _make_fixed_f3ast(n_clients, p, beta: float = 1e-3,
                              p, beta, "unbiased_frozen",
                              r_weight_of=lambda s: (
                                  rt_fixed if rt_fixed is not None
-                                 else s.rates.r)))
+                                 else s.rates.r)),
+                         score_block=_rate_score_block(
+                             p, positively_correlated,
+                             lambda s: (rt_fixed if rt_fixed is not None
+                                        else s.rates.r)))
 
 
 def _gumbel_score(p):

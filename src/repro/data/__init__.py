@@ -1,6 +1,8 @@
 from .partition import dirichlet_partition, size_skewed_partition, client_fractions
-from .synthetic import (SyntheticDataset, make_synthetic_federated,
+from .synthetic import (SynthTask, SyntheticDataset,
+                        make_synthetic_federated,
                         make_synthetic_client_arrays,
                         make_char_lm_federated, make_vision_federated)
 from .pipeline import (FederatedData, CohortSampler, StagedData,
-                       stage_client_arrays, staged_cohort_batch)
+                       stage_client_arrays, stage_synth_task,
+                       staged_cohort_batch, synth_cohort_batch)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .synthetic import SyntheticDataset
+from .synthetic import SynthTask, SyntheticDataset
 
 
 @dataclasses.dataclass
@@ -84,18 +84,77 @@ def staged_cohort_batch(staged: StagedData, key: jax.Array,
             for name, arr in staged.arrays.items()}
 
 
+def synth_cohort_batch(task: SynthTask, key: jax.Array, ids: jnp.ndarray,
+                       local_steps: int, local_batch: int) -> dict:
+    """On-demand cohort batch: synthesize only the selected (K, S, ...) block.
+
+    Drop-in for :func:`staged_cohort_batch` with a :class:`SynthTask`
+    instead of staged (N, S, ...) arrays — the same ``randint`` draw (the
+    per-row bound is the task's uniform sample count, exactly the value
+    ``staged.counts[ids]`` holds on the staged path) followed by the same
+    gather, from a cohort-sized block generated inside jit.  Bitwise-equal
+    batches for the same (key, ids) — pinned against the materialized
+    arrays in ``tests/test_engine_sharded.py`` — at zero resident data
+    bytes per client, which is what lifts the N ceiling from "what fits
+    staged" (~1e5 per host/device) to "what the round computation itself
+    costs" (1e7 smoke-tested).
+    """
+    k = ids.shape[0]
+    counts = jnp.full((k,), task.samples_per_client, jnp.int32)
+    idx = jax.random.randint(key, (k, local_steps, local_batch), 0,
+                             counts[:, None, None])
+    block = task.client_block(ids)
+    rows = jnp.arange(k)[:, None, None]
+    return {name: arr[rows, idx] for name, arr in block.items()}
+
+
+def stage_synth_task(task: SynthTask, *, mesh=None, axis: str = "clients",
+                     block: int = 8192) -> StagedData:
+    """Materialize a :class:`SynthTask` into :class:`StagedData`.
+
+    Generates in blocks of ``block`` clients (bounded host peak beyond the
+    final stacked arrays) through the same keyed generator the on-demand
+    path uses, so ``staged_cohort_batch`` on the result is bitwise-equal
+    to ``synth_cohort_batch`` on the task — the cross-path parity anchor,
+    and the staged baseline the N-scaling benchmark compares against.
+    """
+    n = task.n_clients
+    arrays = None
+    for lo in range(0, n, block):
+        ids = jnp.arange(lo, min(lo + block, n), dtype=jnp.int32)
+        blk = jax.tree.map(np.asarray, task.client_block(ids))
+        if arrays is None:
+            arrays = {name: np.empty((n,) + v.shape[1:], v.dtype)
+                      for name, v in blk.items()}
+        for name, v in blk.items():
+            arrays[name][lo:lo + ids.shape[0]] = v
+    return stage_client_arrays(arrays, np.asarray(task.counts(), np.int32),
+                               mesh=mesh, axis=axis)
+
+
+# Client-dim padding quantum per mesh shard: keeps every per-shard block a
+# multiple of 32 so the sharded engine can stream bit-packed (uint32)
+# selection/completion masks without pad bits interleaving mid-mask
+# (repro.core.bitmask).  Padded clients stay semantically inert.
+SHARD_PAD_QUANTUM = 32
+
+
 def stage_client_arrays(arrays: dict, counts: np.ndarray, *, mesh=None,
                         axis: str = "clients") -> StagedData:
     """Place pre-stacked per-client arrays ({feature: (N, S, ...)}, counts
     (N,)) on device as a :class:`StagedData`.
 
     ``mesh=None`` reproduces the single-device layout.  With a mesh, dim 0
-    (clients) is zero-padded to a multiple of the ``axis`` size and sharded
-    over it; padded clients get sample-count 1 so a bounded ``randint`` over
-    ``counts`` stays well-defined (they are never selected, so the padding
-    rows are never aggregated).  This is the staging path both
-    ``CohortSampler.stage_device`` and the synthetic N-scaling benchmark
-    feed the sharded engine through.
+    (clients) is zero-padded to a multiple of ``axis_size * 32`` (see
+    :data:`SHARD_PAD_QUANTUM`) and sharded over the ``axis``; padded
+    clients get sample-count 1 so a bounded ``randint`` over ``counts``
+    stays well-defined (they are never selected, so the padding rows are
+    never aggregated).  Placement streams one per-shard block at a time
+    through ``jax.make_array_from_single_device_arrays`` — the transient
+    host copy is O(N/shards) per feature, not a second full padded (N, S,
+    ...) stack.  This is the staging path both ``CohortSampler.
+    stage_device`` and the synthetic N-scaling benchmark feed the sharded
+    engine through.
     """
     counts = np.asarray(counts, np.int32)
     if mesh is None:
@@ -105,16 +164,28 @@ def stage_client_arrays(arrays: dict, counts: np.ndarray, *, mesh=None,
     from jax.sharding import NamedSharding, PartitionSpec as P
     n = counts.shape[0]
     shards = mesh.shape[axis]
-    n_pad = -(-n // shards) * shards
-    pad = n_pad - n
+    quantum = shards * SHARD_PAD_QUANTUM
+    n_pad = -(-n // quantum) * quantum
+    nl = n_pad // shards
+    devices = list(mesh.devices.flat)
+    sharding = NamedSharding(mesh, P(axis))
     placed = {}
     for name, arr in arrays.items():
         arr = np.asarray(arr)
-        if pad:
-            arr = np.concatenate(
-                [arr, np.zeros((pad,) + arr.shape[1:], arr.dtype)])
-        placed[name] = jax.device_put(arr, NamedSharding(mesh, P(axis)))
-    counts_pad = np.concatenate([counts, np.ones(pad, np.int32)])
+        blocks = []
+        for si, dev in enumerate(devices):
+            lo = si * nl
+            m = max(0, min(lo + nl, n) - lo)
+            if m == nl:
+                blk = arr[lo:lo + nl]
+            else:
+                blk = np.zeros((nl,) + arr.shape[1:], arr.dtype)
+                if m > 0:
+                    blk[:m] = arr[lo:lo + m]
+            blocks.append(jax.device_put(blk, dev))
+        placed[name] = jax.make_array_from_single_device_arrays(
+            (n_pad,) + arr.shape[1:], sharding, blocks)
+    counts_pad = np.concatenate([counts, np.ones(n_pad - n, np.int32)])
     return StagedData(arrays=placed,
                       counts=jax.device_put(counts_pad,
                                             NamedSharding(mesh, P())))

@@ -19,6 +19,9 @@ from typing import List
 
 import numpy as np
 
+import jax
+import jax.numpy as jnp
+
 from .partition import dirichlet_partition
 
 
@@ -93,6 +96,78 @@ def make_synthetic_client_arrays(n_clients, dim=32, n_classes=10,
     logits = np.einsum("nsd,ndc->nsc", x, w) + b[:, None, :]
     y = logits.argmax(-1).astype(np.int32)
     return {"x": x, "y": y}, np.full(n, s, np.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthTask:
+    """On-demand keyed Synthetic(alpha, beta): data as a pure function.
+
+    The staged paths materialize every client's (S, ...) split up front —
+    O(N · S) device (or host) bytes, the hard wall between N = 1e5 and
+    N = 1e6+.  A :class:`SynthTask` instead *defines* client ``k``'s data
+    as a deterministic function of ``fold_in(PRNGKey(seed), k)``: the
+    engines synthesize only the selected cohort's (K, S, ...) block each
+    round (``data.pipeline.synth_cohort_batch``), so client data costs
+    zero resident bytes at any N.
+
+    Same generative family as :func:`make_synthetic_client_arrays`
+    (per-client model W_k, b_k ~ N(u_k, 1), features x ~ N(v_k, Σ) with
+    Σ_jj = j^{-1.2}), drawn from JAX's counter-based PRNG instead of the
+    numpy bit stream, which is what makes per-client generation exactly
+    reproducible from the id alone: :meth:`client_block` over any id
+    subset is bitwise-equal to the same rows of the full materialization
+    (``tests/test_engine_sharded.py`` pins this, and that
+    ``synth_cohort_batch`` == ``staged_cohort_batch`` on the
+    materialized arrays).
+
+    This is a plain frozen config (NOT a pytree) — engines close over it;
+    only the per-round ids/keys are traced.
+    """
+
+    n_clients: int
+    dim: int = 32
+    n_classes: int = 10
+    alpha: float = 1.0
+    beta: float = 1.0
+    samples_per_client: int = 64
+    seed: int = 0
+
+    def client_block(self, ids: jnp.ndarray) -> dict:
+        """ids (K,) int32 → {"x": (K, S, dim) f32, "y": (K, S) i32}.
+
+        Jit/vmap/scan-safe and row-wise deterministic: row ``j`` depends
+        only on ``ids[j]`` (every per-client draw is shaped per client and
+        the label matmul reduces over ``dim`` within the row), never on
+        the batch size or the other ids.
+        """
+        base = jax.random.PRNGKey(self.seed)
+        dim, c, s = self.dim, self.n_classes, self.samples_per_client
+        diag_sqrt = jnp.sqrt(
+            (jnp.arange(dim, dtype=jnp.float32) + 1.0) ** -1.2)
+
+        def one(cid):
+            k_u, k_b, k_v, k_w, k_bias, k_x = jax.random.split(
+                jax.random.fold_in(base, cid), 6)
+            u = self.alpha * jax.random.normal(k_u)
+            b_mean = self.beta * jax.random.normal(k_b)
+            v = b_mean + jax.random.normal(k_v, (dim,))
+            w = u + jax.random.normal(k_w, (dim, c))
+            b = u + jax.random.normal(k_bias, (c,))
+            x = v + jax.random.normal(k_x, (s, dim)) * diag_sqrt
+            logits = jnp.einsum("sd,dc->sc", x, w) + b
+            return {"x": x, "y": jnp.argmax(logits, -1).astype(jnp.int32)}
+
+        return jax.vmap(one)(jnp.asarray(ids, jnp.int32))
+
+    def counts(self, n: int = None) -> jnp.ndarray:
+        """(n,) int32 per-client sample counts (uniform by construction)."""
+        return jnp.full((self.n_clients if n is None else n,),
+                        self.samples_per_client, jnp.int32)
+
+    @property
+    def bytes_per_client(self) -> int:
+        """Staged footprint per client this task avoids: S·(dim·4 + 4)."""
+        return self.samples_per_client * (self.dim * 4 + 4)
 
 
 def make_char_lm_federated(n_clients=100, vocab=90, seq_len=80,

@@ -48,12 +48,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import save_checkpoint
+from ..core.bitmask import pack_bits, unpack_bits_np
 from ..core.fedstep import make_fed_round
 from ..core.selection import cohort_ids_from_mask
 from ..core.strategies import (SelectCtx, get_strategy_entry, make_strategy,
                                resolve_strategy, strategy_rates)
 from ..data import CohortSampler
-from ..data.pipeline import staged_cohort_batch
+from ..data.pipeline import staged_cohort_batch, synth_cohort_batch
+from ..data.synthetic import SynthTask
 from ..optim import make_optimizer
 from .completion import KEY_FOLD
 from .scenario import Scenario, get_scenario
@@ -78,15 +80,38 @@ class RoundStream(NamedTuple):
     deterministic EMA of the streamed *completed* masks, so consumers can
     reconstruct it exactly, and the final r(T) lives in the carry.
     ``completed`` equals ``sel_mask`` under ``completion="always"`` and is
-    streamed anyway — a duplicate bool mask per round is cheap next to one
+    streamed anyway — a duplicate mask per round is cheap next to one
     stream structure shared by every engine, driver, and test.
+
+    The two masks stream *bit-packed* — (C, ceil(N/32)) uint32 words
+    (``core.bitmask``, 8× less device→host traffic per chunk than (C, N)
+    bool at million-client N); the drivers unpack once per chunk
+    (``unpack_bits_np``) before any consumer sees them, so everything
+    downstream of a driver still works on (C, N) bool.
     """
-    sel_mask: jnp.ndarray      # (C, N) bool — selected cohort S_t
-    completed: jnp.ndarray     # (C, N) bool — survivors ⊆ S_t
+    sel_mask: jnp.ndarray      # (C, ceil(N/32)) u32 — packed cohort S_t
+    completed: jnp.ndarray     # (C, ceil(N/32)) u32 — packed survivors ⊆ S_t
     k_t: jnp.ndarray           # (C,) int32
     n_available: jnp.ndarray   # (C,) int32
     train_loss: jnp.ndarray    # (C,) f32
     delta_norm: jnp.ndarray    # (C,) f32
+
+
+def _unpack_stream(out_np: "RoundStream", n: int) -> "RoundStream":
+    """Driver-side decode of one chunk's streams: packed masks → (C, n)
+    bool (bits past ``n`` — client-dim padding — are never set)."""
+    return out_np._replace(sel_mask=unpack_bits_np(out_np.sel_mask, n),
+                           completed=unpack_bits_np(out_np.completed, n))
+
+
+def _staged_nbytes(staged) -> int:
+    """Resident device bytes of a staged client dataset (0 when the data
+    is synthesized on demand — nothing is resident)."""
+    if isinstance(staged, SynthTask):
+        return 0
+    return int(sum(int(np.prod(a.shape)) * a.dtype.itemsize
+                   for a in staged.arrays.values())
+               + int(staged.counts.shape[0]) * staged.counts.dtype.itemsize)
 
 
 class DeviceEngine:
@@ -106,8 +131,19 @@ class DeviceEngine:
         self.strategy = strategy
         self.completion = completion
         self.k_max = budget.k_max
-        self.n_clients = int(staged.counts.shape[0])
+        synth = isinstance(staged, SynthTask)
+        self.n_clients = (staged.n_clients if synth
+                          else int(staged.counts.shape[0]))
+        self.n_staged_bytes = _staged_nbytes(staged)
+        self.selection_comm_bytes_per_round = 0   # single device: no comm
         trivial = completion is None or completion.trivial
+
+        def cohort_batch(key, ids):
+            if synth:
+                return synth_cohort_batch(staged, key, ids, local_steps,
+                                          local_batch)
+            return staged_cohort_batch(staged, key, ids, local_steps,
+                                       local_batch)
 
         def round_step(carry, t, k_cap):
             # Same split order as the host loop in runner.py — parity.  The
@@ -126,8 +162,7 @@ class DeviceEngine:
             # same pure draw as inside select — identical completed mask
             completed = sel_mask if trivial else complete_fn(sel_mask)
             ids, valid = cohort_ids_from_mask(sel_mask, budget.k_max)
-            batch = staged_cohort_batch(staged, k_batch, ids, local_steps,
-                                        local_batch)
+            batch = cohort_batch(k_batch, ids)
             w = w_full[ids] * valid
             if not trivial:
                 # dropped slots contribute nothing even if the strategy's
@@ -136,7 +171,8 @@ class DeviceEngine:
             params, opt_state, m = fed_round(
                 carry.params, carry.opt_state, batch, w,
                 jnp.asarray(client_lr, jnp.float32))
-            out = RoundStream(sel_mask=sel_mask, completed=completed,
+            out = RoundStream(sel_mask=pack_bits(sel_mask),
+                              completed=pack_bits(completed),
                               k_t=k_t,
                               n_available=avail.sum().astype(jnp.int32),
                               train_loss=m.loss, delta_norm=m.delta_norm)
@@ -187,7 +223,7 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  mesh=None, clients_axis: str = "clients",
                  strategy_kwargs=None,
                  completion: Optional[str] = None, completion_kwargs=None,
-                 select_impl: str = "xla"):
+                 select_impl: str = "xla", topk_impl: str = "stream"):
     """Build the compiled cell for one (scenario × strategy).
 
     Returns ``(engine, ctx)`` where ``ctx`` carries the task pieces the
@@ -202,6 +238,10 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     dimension of availability state, selection, and staged data is
     partitioned over the ``clients_axis`` mesh axis.  Same seed ⇒ same
     selection masks / rates / losses as the unsharded engine.
+    ``topk_impl`` picks the sharded engine's distributed top-k reduction
+    (``"stream"`` — default, O(k) butterfly/ring exchange — or
+    ``"allgather"``, the legacy full-(N,) gather); both produce bitwise-
+    identical masks, and the flag is ignored off-mesh.
     """
     from .runner import build_task   # local import: runner ↔ engine
     from .engine_sharded import ShardedEngine, resolve_client_mesh
@@ -257,7 +297,8 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
         engine = ShardedEngine(mesh=mesh, axis=clients_axis,
                                staged=sampler.stage_device(
                                    mesh=mesh, axis=clients_axis),
-                               fed_round=fed_round, n_clients=n, **common)
+                               fed_round=fed_round, n_clients=n,
+                               topk_impl=topk_impl, **common)
     else:
         fed_round = make_fed_round(loss, opt, mode=fed_mode, prox_mu=prox_mu)
         engine = DeviceEngine(staged=sampler.stage_device(),
@@ -311,6 +352,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
                         completion: Optional[str] = None,
                         completion_kwargs=None,
                         select_impl: str = "xla",
+                        topk_impl: str = "stream",
                         algo_label: Optional[str] = None,
                         log_fn=print):
     """Device-resident drop-in for ``runner.run_scenario``.
@@ -341,7 +383,8 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                strategy_kwargs=strategy_kwargs,
                                completion=completion,
                                completion_kwargs=completion_kwargs,
-                               select_impl=select_impl)
+                               select_impl=select_impl,
+                               topk_impl=topk_impl)
     engine_label = "sharded" if mesh is not None else "device"
     n_real = engine.n_clients
     sc, task = ctx["scenario"], ctx["task"]
@@ -365,8 +408,9 @@ def run_scenario_device(scenario: Union[str, Scenario],
         for (t0, t1) in _chunk_spans(rounds, chunk_size):
             ts = jnp.arange(t0, t1, dtype=jnp.int32)
             carry, out = engine.chunk(carry, ts)
-            # One host↔device sync per chunk: pull the streamed metrics.
-            out_np = jax.tree.map(np.asarray, out)
+            # One host↔device sync per chunk: pull the streamed metrics
+            # (masks cross packed — unpack once here, see RoundStream).
+            out_np = _unpack_stream(jax.tree.map(np.asarray, out), n_real)
             if t_first_chunk is None:
                 t_first_chunk = time.time()
             streams.append(out_np)
@@ -423,6 +467,11 @@ def run_scenario_device(scenario: Union[str, Scenario],
     final = dict(history[-1])
     final["engine"] = engine_label
     final["wall_s"] = t_end - t_start
+    # scale accounting (ISSUE 8): resident staged-data bytes (0 when
+    # cohorts are synthesized on demand) and per-round selection traffic.
+    final["n_staged_bytes"] = engine.n_staged_bytes
+    final["selection_comm_bytes_per_round"] = (
+        engine.selection_comm_bytes_per_round)
     # steady-state throughput: exclude the first chunk (XLA compile)
     steady_rounds = rounds - min(chunk_size, rounds)
     if steady_rounds > 0 and t_end > t_first_chunk:
@@ -477,7 +526,8 @@ def run_cells_vmapped(scenario: Union[str, Scenario],
     for (t0, t1) in _chunk_spans(rounds, chunk_size):
         ts = jnp.arange(t0, t1, dtype=jnp.int32)
         carries, out = engine.vmapped_chunk(carries, ts, k_caps_arr)
-        streams.append(jax.tree.map(np.asarray, out))
+        streams.append(_unpack_stream(jax.tree.map(np.asarray, out),
+                                      engine.n_clients))
         if t_first_chunk is None:
             t_first_chunk = time.time()
     t_end = time.time()

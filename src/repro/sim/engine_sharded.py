@@ -15,18 +15,35 @@ loop inside ``shard_map``:
 * **selection** — the generic blockwise adapter
   :func:`repro.core.strategies.as_sharded` wraps any registered strategy's
   ``score``/``finalize`` pieces around the distributed top-k in
-  :func:`repro.core.selection.sharded_topk_mask` (per-shard top-k_max →
-  ``all_gather`` → global K_t cut with the single-device tie-break) — no
-  per-algorithm sharded branches anywhere;
-* **cohort** — each shard contributes the staged rows it owns for the
-  selected cohort (masked gather + ``psum``), then the cohort-slot axis is
-  itself laid over the mesh so local SGD for the cohort runs data-parallel
-  (``make_fed_round(cohort_axis=...)`` psums the weighted delta);
+  :func:`repro.core.selection.sharded_topk_mask` (per-shard top-k_max
+  candidates → streaming ppermute merge, or the legacy ``all_gather``,
+  per ``topk_impl`` — → global K_t cut with the single-device tie-break)
+  — no per-algorithm sharded branches anywhere;
+* **cohort** — with staged arrays, each shard contributes the rows it
+  owns for the selected cohort (masked gather + ``psum``); with a
+  :class:`repro.data.synthetic.SynthTask` the cohort block is synthesized
+  on demand from the client ids (``synth_cohort_batch`` — the identical
+  keyed generator call the unsharded engine makes, so batches are
+  bit-equal, and nothing O(N) is ever resident).  Either way the
+  cohort-slot axis is then laid over the mesh so local SGD runs
+  data-parallel (``make_fed_round(cohort_axis=...)`` psums the weighted
+  delta);
 * **completion** — the mid-round dropout draw (``sim/completion.py``)
   happens at full (N,) shape from the replicated derived key, like the
-  selection scores, so every shard sees the same completed mask; the
-  per-shard block streams out next to the selection mask and dropped
-  cohort slots are zero-weighted before the psum.
+  selection scores, so every shard sees the same completed mask; it is
+  drawn once, inside the selection adapter, from the adapter's gathered
+  selection mask; the per-shard block streams out next to the selection
+  mask and dropped cohort slots are zero-weighted before the psum;
+* **masks** — the one full-width mask crossing shards per round (the
+  selection mask inside ``as_sharded``; availability is already
+  replicated from the full-width step and completion derives from the
+  gathered selection mask in place) moves
+  bit-packed uint32 words (``core.bitmask.all_gather_bits``), and the
+  per-round selection/completion streams leave the compiled loop packed
+  as (C, n_pad/32) words — 8× less collective and device→host traffic
+  than byte-bools.  Per-shard packing is exact because the staging pad
+  quantum keeps every shard block a multiple of 32 clients
+  (``data.pipeline.SHARD_PAD_QUANTUM``).
 
 Parity is exact by construction and asserted in
 ``tests/test_engine_sharded.py``: per-round PRNG keys are replicated and
@@ -52,13 +69,50 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core.bitmask import pack_bits
 from ..core.selection import sharded_cohort_ids_from_mask
 from ..core.strategies import SelectCtx, as_sharded
+from ..data.pipeline import SHARD_PAD_QUANTUM, synth_cohort_batch
+from ..data.synthetic import SynthTask
 from ..sharding.rules import pad_client_dim, to_named_shardings
 from .completion import KEY_FOLD
-from .engine import EngineCarry, RoundStream
+from .engine import EngineCarry, RoundStream, _staged_nbytes
 
 __all__ = ["ShardedEngine", "resolve_client_mesh"]
+
+
+def _selection_comm_bytes(*, d: int, nl: int, k: int, topk_impl: str,
+                          gathers: int = 1) -> int:
+    """Analytic per-round selection traffic, bytes received per shard.
+
+    Counts the collectives selection is made of — the top-k candidate
+    reduction ((f32 score, i32 gid) pairs), the cohort-id reduction (i32
+    ids, same schedule), and ``gathers`` full-width mask gathers — under
+    the packed-uint32 mask wire format.  ``gathers`` is 1 on the fast
+    path (only the selection mask moves; availability is either stepped
+    blockwise or already replicated, and the completed mask is derived
+    from the gathered selection mask in place), 2 when the strategy has
+    no blockwise score and the availability mask must be reassembled for
+    it.  Cohort-batch / delta psums are model traffic, not selection, and
+    are excluded.  This is the ``selection_comm_bytes_per_round`` metric
+    the drivers surface; the benchmark's bytes-moved column and DESIGN.md
+    §7.2 derive from the same formulas.
+    """
+    if d == 1:
+        return 0
+    kk = min(k, nl)
+
+    def stream_items(cap: int) -> int:
+        if d & (d - 1) == 0:            # butterfly: send current list/stage
+            total, length = 0, kk
+            for _ in range(d.bit_length() - 1):
+                total += length
+                length = min(cap, 2 * length)
+            return total
+        return (d - 1) * kk             # ring: fixed kk-buffer, d-1 hops
+    items = stream_items(k) if topk_impl == "stream" else (d - 1) * kk
+    mask_bytes = gathers * (d - 1) * (nl // 8 if nl % 32 == 0 else nl)
+    return items * 8 + items * 4 + mask_bytes
 
 
 def resolve_client_mesh(mesh, axis: str = "clients") -> Mesh:
@@ -76,15 +130,20 @@ class ShardedEngine:
 
     Same driver surface (``init_carry`` / ``set_r0`` / ``chunk`` / ``k_max``
     / ``n_clients``); ``chunk`` compiles one ``shard_map``-wrapped
-    ``lax.scan`` over the round chunk.  ``staged`` must come from
-    ``CohortSampler.stage_device(mesh=...)`` / ``stage_client_arrays`` so
-    its client dimension is already padded and sharded.
+    ``lax.scan`` over the round chunk.  ``staged`` is either a
+    :class:`~repro.data.pipeline.StagedData` from ``CohortSampler.
+    stage_device(mesh=...)`` / ``stage_client_arrays`` (client dimension
+    already padded and sharded) or a :class:`~repro.data.synthetic.
+    SynthTask` — then no client data is resident at all and cohort
+    batches are synthesized on demand inside the compiled loop, which is
+    what makes N = 1e6–1e7 rounds fit.  ``topk_impl`` picks the
+    distributed top-k reduction (``core.selection.TOPK_IMPLS``).
     """
 
     def __init__(self, *, mesh: Mesh, axis: str = "clients", avail_model,
                  budget, strategy, staged, fed_round, init_params, opt,
                  client_lr, local_steps, local_batch, n_clients: int,
-                 completion=None):
+                 completion=None, topk_impl: str = "stream"):
         self.mesh, self.axis = mesh, axis
         self.strategy = strategy
         self.completion = completion
@@ -92,12 +151,26 @@ class ShardedEngine:
         self.n_clients = int(n_clients)
         self.k_max = budget.k_max
         self._staged = staged
+        self.topk_impl = topk_impl
+        synth = isinstance(staged, SynthTask)
+        self._synth = synth
         n_shards = mesh.shape[axis]
-        n_pad = int(staged.counts.shape[0])
+        if synth:
+            assert staged.n_clients == n_clients, (staged.n_clients,
+                                                   n_clients)
+            quantum = n_shards * SHARD_PAD_QUANTUM
+            n_pad = -(-n_clients // quantum) * quantum
+        else:
+            n_pad = int(staged.counts.shape[0])
         assert n_pad % n_shards == 0 and n_pad >= n_clients, \
             (n_pad, n_shards, n_clients)
         nl = n_pad // n_shards
+        assert nl % SHARD_PAD_QUANTUM == 0, (
+            f"per-shard block {nl} not a multiple of {SHARD_PAD_QUANTUM}: "
+            f"stage through data.pipeline.stage_client_arrays so packed "
+            f"mask streaming lines up with shard boundaries")
         k = budget.k_max
+        self.n_staged_bytes = _staged_nbytes(staged)
         k_pad = -(-k // n_shards) * n_shards
         kb = k_pad // n_shards
         n = self.n_clients
@@ -108,6 +181,17 @@ class ShardedEngine:
             lambda leaf: getattr(leaf, "ndim", 0) >= 1
             and leaf.shape[0] == n, avail0)
         self._avail_flags = flags
+        # blockwise availability: models exposing step_block (and carrying
+        # no (N,)-shaped state) step each shard's slice directly — O(nl)
+        # per shard, bitwise-identical to slicing the full-width step
+        block_avail = (hasattr(avail_model, "step_block")
+                       and not any(jax.tree.leaves(flags)))
+        # the availability mask is re-gathered only when a blockwise step
+        # left no replicated copy AND the strategy's score needs full width
+        gathers = 1 + (1 if block_avail and strategy.score_block is None
+                       else 0)
+        self.selection_comm_bytes_per_round = _selection_comm_bytes(
+            d=n_shards, nl=nl, k=k, topk_impl=topk_impl, gathers=gathers)
 
         def gather_state(state_blk):
             return jax.tree.map(
@@ -124,7 +208,8 @@ class ShardedEngine:
         e, b = local_steps, local_batch
         # generic blockwise selection: any strategy with a score/finalize
         # decomposition runs here without engine-specific code
-        select_blk = as_sharded(strategy, axis=axis, k_max=k, n_pad=n_pad)
+        select_blk = as_sharded(strategy, axis=axis, k_max=k, n_pad=n_pad,
+                                topk_impl=topk_impl)
 
         def round_step(carry, t, k_cap, arrays, counts):
             # Same split order as the host loop / device engine — parity.
@@ -136,31 +221,43 @@ class ShardedEngine:
             i = jax.lax.axis_index(axis)
             off = i * nl
 
-            # availability: full-width replicated step over sharded state
-            full_state = gather_state(carry.avail_state)
-            new_full, avail_full = avail_model.step(k_av, full_state, t)
-            avail_state = scatter_state(new_full, off)
-            avail_blk = jax.lax.dynamic_slice_in_dim(
-                pad_client_dim(avail_full, n_pad), off, nl)
+            if block_avail:
+                # blockwise: each shard steps only its slice (O(nl), no
+                # (N,) intermediate, non-empty fix via tiny collectives)
+                avail_state, avail_blk = avail_model.step_block(
+                    k_av, carry.avail_state, t, off=off, n_local=nl,
+                    axis=axis)
+                avail_full = None
+                n_avail = jax.lax.psum(
+                    avail_blk.sum().astype(jnp.int32), axis)
+            else:
+                # availability: full-width replicated step, sharded state
+                full_state = gather_state(carry.avail_state)
+                new_full, avail_full = avail_model.step(k_av, full_state, t)
+                avail_state = scatter_state(new_full, off)
+                avail_blk = jax.lax.dynamic_slice_in_dim(
+                    pad_client_dim(avail_full, n_pad), off, nl)
+                n_avail = avail_full.sum().astype(jnp.int32)
 
             k_t = jnp.minimum(budget.sample(k_bud, t),
                               jnp.asarray(k_cap, jnp.int32))
             complete_fn = (None if trivial else
                            lambda m: completion.sample(k_comp, t, m))
-            mask_blk, w_blk, algo_state = select_blk(
+            # avail_full is already replicated from the full-width step, so
+            # the adapter skips its gather; completed_full comes back from
+            # the adapter's own mask gather + completion draw — no second
+            # gather, no re-draw
+            mask_blk, w_blk, algo_state, completed_full = select_blk(
                 carry.algo_state, k_sel, avail_blk, k_t,
-                SelectCtx(t=t, complete=complete_fn))
+                SelectCtx(t=t, complete=complete_fn), avail_full=avail_full)
             if trivial:
-                completed_blk, completed_full = mask_blk, None
+                completed_blk = mask_blk
             else:
-                # same pure draw as inside select_blk's finalize step
-                mask_full = jax.lax.all_gather(mask_blk, axis,
-                                               tiled=True)[:n]
-                completed_full = complete_fn(mask_full)
                 completed_blk = jax.lax.dynamic_slice_in_dim(
                     pad_client_dim(completed_full, n_pad), off, nl)
 
-            ids, valid = sharded_cohort_ids_from_mask(mask_blk, k, axis, n)
+            ids, valid = sharded_cohort_ids_from_mask(mask_blk, k, axis, n,
+                                                      method=topk_impl)
             if k_pad > k:           # shard-count padding: zero-weight repeats
                 ids_p = jnp.concatenate(
                     [ids, jnp.broadcast_to(ids[0], (k_pad - k,))])
@@ -180,20 +277,32 @@ class ShardedEngine:
                 # ids_p are clamped < n)
                 w_sel = w_sel * completed_full[ids_p]
 
-            # minibatch indices: the same (K, E, B) draw as the unsharded
-            # engine; padded slots reuse index 0 with zero weight
-            idx = jax.random.randint(k_batch, (k, e, b), 0,
-                                     counts[ids][:, None, None])
-            if k_pad > k:
-                idx = jnp.concatenate(
-                    [idx, jnp.zeros((k_pad - k, e, b), idx.dtype)])
+            if synth:
+                # on-demand cohort: every shard makes the identical call
+                # the unsharded engine makes — same key, same (k,) ids,
+                # same vmap width — so the block is bit-equal and
+                # replicated with zero resident client data and no psum
+                batch = synth_cohort_batch(staged, k_batch, ids,
+                                           local_steps, local_batch)
+                if k_pad > k:   # shard-count padding: zero rows, zero weight
+                    batch = {name: jnp.concatenate(
+                        [v, jnp.zeros((k_pad - k,) + v.shape[1:], v.dtype)])
+                        for name, v in batch.items()}
+            else:
+                # minibatch indices: the same (K, E, B) draw as the
+                # unsharded engine; padded slots reuse index 0, zero weight
+                idx = jax.random.randint(k_batch, (k, e, b), 0,
+                                         counts[ids][:, None, None])
+                if k_pad > k:
+                    idx = jnp.concatenate(
+                        [idx, jnp.zeros((k_pad - k, e, b), idx.dtype)])
 
-            # sharded cohort gather: owner shards contribute, psum assembles
-            batch = {}
-            for name, arr in arrays.items():
-                rows = arr[loc[:, None, None], idx]
-                keep = in_range.reshape((k_pad,) + (1,) * (rows.ndim - 1))
-                batch[name] = jax.lax.psum(jnp.where(keep, rows, 0), axis)
+                # sharded cohort gather: owners contribute, psum assembles
+                batch = {}
+                for name, arr in arrays.items():
+                    rows = arr[loc[:, None, None], idx]
+                    keep = in_range.reshape((k_pad,) + (1,) * (rows.ndim - 1))
+                    batch[name] = jax.lax.psum(jnp.where(keep, rows, 0), axis)
 
             # cohort-slot axis onto the mesh: each shard trains its slice
             lb = {name: jax.lax.dynamic_slice_in_dim(v, i * kb, kb)
@@ -204,14 +313,17 @@ class ShardedEngine:
                 carry.params, carry.opt_state, lb, lw,
                 jnp.asarray(client_lr, jnp.float32), lm)
 
-            out = RoundStream(sel_mask=mask_blk, completed=completed_blk,
+            # masks stream packed per shard (nl % 32 == 0 ⇒ concatenated
+            # shard words == packing the full mask); drivers unpack once
+            out = RoundStream(sel_mask=pack_bits(mask_blk),
+                              completed=pack_bits(completed_blk),
                               k_t=k_t,
-                              n_available=avail_full.sum().astype(jnp.int32),
+                              n_available=n_avail,
                               train_loss=m.loss, delta_norm=m.delta_norm)
             return EngineCarry(key, params, opt_state, algo_state,
                                avail_state), out
 
-        def chunk_body(carry, ts, k_cap, arrays, counts):
+        def chunk_body(carry, ts, k_cap, arrays=None, counts=None):
             return jax.lax.scan(
                 lambda c, t: round_step(c, t, k_cap, arrays, counts),
                 carry, ts)
@@ -233,11 +345,14 @@ class ShardedEngine:
                                    completed=P(None, axis), k_t=P(),
                                    n_available=P(), train_loss=P(),
                                    delta_norm=P())
-        staged_specs = jax.tree.map(lambda _: P(axis), staged.arrays)
         self._carry_shardings = to_named_shardings(carry_specs, mesh)
+        if synth:
+            in_specs = (carry_specs, P(), P())
+        else:
+            staged_specs = jax.tree.map(lambda _: P(axis), staged.arrays)
+            in_specs = (carry_specs, P(), P(), staged_specs, P())
         self._chunk = jax.jit(shard_map(
-            chunk_body, mesh=mesh,
-            in_specs=(carry_specs, P(), P(), staged_specs, P()),
+            chunk_body, mesh=mesh, in_specs=in_specs,
             out_specs=(carry_specs, stream_specs), check_rep=False))
 
         def _make_init(r0):
@@ -264,5 +379,8 @@ class ShardedEngine:
         """Advance one chunk of rounds; returns (carry', RoundStream)."""
         if k_cap is None:
             k_cap = self.k_max
-        return self._chunk(carry, ts, jnp.asarray(k_cap, jnp.int32),
+        k_cap = jnp.asarray(k_cap, jnp.int32)
+        if self._synth:
+            return self._chunk(carry, ts, k_cap)
+        return self._chunk(carry, ts, k_cap,
                            self._staged.arrays, self._staged.counts)

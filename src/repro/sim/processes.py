@@ -46,6 +46,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import availability as core_av
+from ..core.blockrng import block_bernoulli, block_uniform
 
 
 def _nonempty(mask: jnp.ndarray, q: jnp.ndarray,
@@ -65,6 +66,17 @@ class AvailabilityModel:
       init()          — initial state pytree (``()`` for memoryless models)
       step(key, state, t) -> (state', mask)   mask: (N,) bool, non-empty
       marginals(t)    — (N,) expected availability probabilities
+
+    Optional fast path for the sharded engine:
+      step_block(key, state, t, *, off, n_local, axis)
+          -> (state', mask_blk)   mask_blk: (n_local,) bool
+      Computes only the shard's slice ``[off, off + n_local)`` of the
+      same draw ``step`` would make with the same key — *bitwise*
+      identical on real lanes, False on pad lanes past N — using the
+      slice-consistent PRNG in ``core.blockrng``.  Must enforce global
+      non-emptiness collectively (``core.availability.
+      force_nonempty_block`` over ``axis``).  Models without it fall
+      back to a replicated full-width ``step``.
     """
 
     n_clients: int
@@ -143,7 +155,9 @@ class Bernoulli(AvailabilityModel):
             qs = self.q * t_k / t_k.max()
         else:
             qs = np.full(self.n_clients, self.q)
-        object.__setattr__(self, "_q", jnp.asarray(qs, jnp.float32))
+        qs32 = np.asarray(qs, np.float32)
+        object.__setattr__(self, "_q", jnp.asarray(qs32))
+        object.__setattr__(self, "_q_max", float(qs32.max()))
 
     def marginals(self, t):
         return self._q
@@ -151,6 +165,24 @@ class Bernoulli(AvailabilityModel):
     def step(self, key, state, t):
         mask = jax.random.bernoulli(key, self._q)
         return state, _nonempty(mask, self._q, jax.random.fold_in(key, 1))
+
+    def step_block(self, key, state, t, *, off, n_local, axis):
+        """One shard's slice [off, off + n_local) of ``step``'s mask —
+        bitwise-identical to slicing, computed at O(n_local) cost with no
+        (N,)-shaped intermediate (``core.blockrng`` slice-consistent
+        draws; the non-empty guarantee reduces per-shard (max, argmax)
+        candidates over the ``axis`` collective).  Out-of-range pad lanes
+        come back False.
+        """
+        n = self.n_clients
+        ids = off + jnp.arange(n_local, dtype=jnp.int32)
+        real = ids < n
+        q_blk = jnp.where(real, jnp.take(self._q, jnp.minimum(ids, n - 1)),
+                          0.0)
+        mask = block_bernoulli(key, q_blk, n, off, n_local) & real
+        tie = block_uniform(jax.random.fold_in(key, 1), n, off, n_local)
+        cand = jnp.where(real & (q_blk >= self._q_max), tie, -1.0)
+        return state, core_av.force_nonempty_block(mask, cand, off, axis)
 
 
 @dataclasses.dataclass(frozen=True)

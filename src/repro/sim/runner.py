@@ -249,7 +249,8 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             strategy_kwargs=rs.strategy_kwargs,
             completion=rs.completion,
             completion_kwargs=rs.completion_kwargs,
-            select_impl=rs.select_impl, log_fn=log_fn)
+            select_impl=rs.select_impl, topk_impl=rs.topk_impl,
+            log_fn=log_fn)
 
     task, fed, init, loss, acc = build_task(sc.task, rs.seed,
                                             **dict(sc.task_kwargs))
@@ -390,6 +391,11 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
     if fallback_reason is not None:
         final["engine_fallback"] = fallback_reason
     final["wall_s"] = t_end - t_start
+    # scale accounting, mirroring the device engines: the host loop keeps
+    # client data in numpy (nothing device-resident) and runs selection on
+    # one process (no collective traffic).
+    final["n_staged_bytes"] = 0
+    final["selection_comm_bytes_per_round"] = 0
     # steady-state throughput: exclude round 0 (XLA compile of fed_round)
     if rounds > 1 and t_first_round is not None and t_end > t_first_round:
         final["steady_rounds_per_s"] = (rounds - 1) / (t_end - t_first_round)

@@ -87,6 +87,10 @@ class RunSpec:
     #   kernel (repro.kernels.fed_select) — bit-identical masks/rates,
     #   one pass over the client axis.  Unsupported with mesh= (the
     #   sharded engine keeps its distributed sharded_topk_mask).
+    topk_impl: str = "stream"                   # sharded top-k reduction:
+    #   "stream" (ppermute candidate merge, O(k·log D) traffic) |
+    #   "allgather" (legacy full candidate gather).  Bit-identical masks
+    #   either way (core.selection.TOPK_IMPLS); ignored off-mesh.
     mesh: Optional[Any] = None                  # shard count | Mesh | None
     clients_axis: str = "clients"
     chunk_size: Optional[int] = None            # device engine rounds/chunk
@@ -120,6 +124,10 @@ class RunSpec:
         if self.select_impl not in SELECT_IMPLS:
             raise ValueError(f"select_impl must be one of {SELECT_IMPLS}, "
                              f"got {self.select_impl!r}")
+        from ..core.selection import TOPK_IMPLS
+        if self.topk_impl not in TOPK_IMPLS:
+            raise ValueError(f"topk_impl must be one of {TOPK_IMPLS}, "
+                             f"got {self.topk_impl!r}")
         if self.select_impl == "pallas" and self.mesh is not None:
             raise ValueError(
                 "select_impl='pallas' fuses the single-device top-k cut; "

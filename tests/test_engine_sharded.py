@@ -97,16 +97,25 @@ def _client_mesh():
     return make_client_mesh(axis_name="clients")
 
 
-def test_sharded_topk_mask_matches_topk_mask():
+@pytest.mark.parametrize("method", ["allgather", "stream"])
+def test_sharded_topk_mask_matches_topk_mask(method):
     mesh = _client_mesh()
     shards = mesh.shape["clients"]
     n = 24 * shards
     k_max = 7
 
     f = jax.jit(shard_map(
-        lambda s, a, k: sharded_topk_mask(s, a, k, "clients", k_max),
+        lambda s, a, k: sharded_topk_mask(s, a, k, "clients", k_max,
+                                          method=method),
         mesh=mesh, in_specs=(P("clients"), P("clients"), P()),
         out_specs=P("clients"), check_rep=False))
+
+    def check(scores, avail, k, label):
+        want = np.asarray(_topk_mask(jnp.asarray(scores), jnp.asarray(avail),
+                                     jnp.asarray(np.int32(k))))
+        got = np.asarray(f(jnp.asarray(scores), jnp.asarray(avail),
+                           jnp.asarray(np.int32(k))))
+        np.testing.assert_array_equal(got, want, err_msg=str(label))
 
     rng = np.random.default_rng(0)
     for trial in range(20):
@@ -116,22 +125,29 @@ def test_sharded_topk_mask_matches_topk_mask():
         avail = rng.random(n) < 0.4
         if not avail.any():
             avail[rng.integers(n)] = True
-        k = np.int32(rng.integers(1, k_max + 1))
-        want = np.asarray(_topk_mask(jnp.asarray(scores), jnp.asarray(avail),
-                                     jnp.asarray(k)))
-        got = np.asarray(f(jnp.asarray(scores), jnp.asarray(avail),
-                           jnp.asarray(k)))
-        np.testing.assert_array_equal(got, want, err_msg=f"trial {trial}")
+        k = rng.integers(1, k_max + 1)
+        check(scores, avail, k, f"trial {trial}")
+
+    # edge cases: zero budget, budget above |available|, nobody available
+    scores = rng.integers(0, 3, n).astype(np.float32)
+    some = rng.random(n) < 0.3
+    sparse = np.zeros(n, bool)
+    sparse[rng.choice(n, size=min(3, k_max - 1), replace=False)] = True
+    check(scores, some, 0, "k=0")
+    check(scores, sparse, k_max, "k > |available|")
+    check(scores, np.zeros(n, bool), k_max, "all unavailable")
 
 
-def test_sharded_cohort_ids_matches_reference():
+@pytest.mark.parametrize("method", ["allgather", "stream"])
+def test_sharded_cohort_ids_matches_reference(method):
     mesh = _client_mesh()
     shards = mesh.shape["clients"]
     n = 16 * shards
     cohort = 6
 
     f = jax.jit(shard_map(
-        lambda m: sharded_cohort_ids_from_mask(m, cohort, "clients", n),
+        lambda m: sharded_cohort_ids_from_mask(m, cohort, "clients", n,
+                                               method=method),
         mesh=mesh, in_specs=P("clients"), out_specs=(P(), P()),
         check_rep=False))
 
@@ -180,6 +196,143 @@ def test_cohort_ids_all_zero_mask_is_all_invalid():
     ids2, valid2 = f(jnp.zeros(n2, bool))
     assert not np.asarray(valid2).any()
     np.testing.assert_array_equal(np.asarray(ids2), [n2 - 1] * k)
+
+
+# ---------------------------------------------------------------------------
+# On-demand cohort synthesis (SynthTask) vs staged arrays
+# ---------------------------------------------------------------------------
+
+def test_synth_cohort_batch_matches_staged_bitwise():
+    # the cross-path anchor: synthesizing only the cohort block must equal
+    # gathering from fully materialized (N, S, ...) arrays, bit for bit
+    from repro.data import SynthTask, stage_synth_task, synth_cohort_batch
+    from repro.data.pipeline import staged_cohort_batch
+    task = SynthTask(n_clients=300, seed=7)
+    staged = stage_synth_task(task)
+    rng = np.random.default_rng(2)
+    for trial in range(5):
+        key = jax.random.PRNGKey(trial)
+        ids = jnp.asarray(rng.integers(0, 300, 10), jnp.int32)
+        want = staged_cohort_batch(staged, key, ids, 5, 20)
+        got = synth_cohort_batch(task, key, ids, 5, 20)
+        assert set(want) == set(got)
+        for name in want:
+            np.testing.assert_array_equal(np.asarray(got[name]),
+                                          np.asarray(want[name]),
+                                          err_msg=f"{name} trial {trial}")
+
+
+def test_stage_client_arrays_mesh_pads_to_shard_quantum():
+    from repro.data import SynthTask, stage_synth_task
+    from repro.data.pipeline import SHARD_PAD_QUANTUM
+    mesh = _client_mesh()
+    shards = mesh.shape["clients"]
+    task = SynthTask(n_clients=300, seed=1)
+    staged = stage_synth_task(task, mesh=mesh)
+    n_pad = int(staged.counts.shape[0])
+    quantum = shards * SHARD_PAD_QUANTUM
+    assert n_pad % quantum == 0 and n_pad >= 300
+    counts = np.asarray(staged.counts)
+    assert (counts[:300] == task.samples_per_client).all()
+    assert (counts[300:] == 1).all()            # padded clients: inert
+    ref = stage_synth_task(task)                # unsharded layout
+    for name, arr in staged.arrays.items():
+        np.testing.assert_array_equal(
+            np.asarray(arr)[:300], np.asarray(ref.arrays[name]),
+            err_msg=name)
+        assert not np.asarray(arr)[300:].any()  # zero padding rows
+
+
+def _synth_engine(staged, n, mesh=None, topk_impl="stream"):
+    import functools
+    from repro.core.fedstep import make_fed_round
+    from repro.core.strategies import make_strategy
+    from repro.models import softmax_reg
+    from repro.models.softmax_reg import SoftmaxRegConfig
+    from repro.optim import make_optimizer
+    from repro.sim.budgets import make_budget
+    from repro.sim.engine import DeviceEngine
+    from repro.sim.engine_sharded import ShardedEngine
+    from repro.sim.processes import make_process
+    k = 8
+    cfg = SoftmaxRegConfig(dim=32, n_classes=10)
+    loss = functools.partial(softmax_reg.loss_fn, cfg)
+    opt = make_optimizer("sgd", lr=1.0)
+    common = dict(avail_model=make_process("bernoulli", n, q=0.3),
+                  budget=make_budget("constant", k=k),
+                  strategy=make_strategy(
+                      "f3ast", n, np.full(n, 1.0 / n, np.float32),
+                      clients_per_round=k),
+                  init_params=functools.partial(softmax_reg.init_params, cfg),
+                  opt=opt, client_lr=0.05, local_steps=3, local_batch=16)
+    if mesh is None:
+        return DeviceEngine(staged=staged,
+                            fed_round=make_fed_round(loss, opt), **common)
+    return ShardedEngine(mesh=mesh, axis="clients", staged=staged,
+                         n_clients=n, topk_impl=topk_impl,
+                         fed_round=make_fed_round(loss, opt,
+                                                  cohort_axis="clients",
+                                                  cohort_slots=k), **common)
+
+
+def test_synth_engines_match_staged_engine():
+    # SynthTask engines (device + sharded, both top-k impls) vs the staged
+    # device engine: masks/K_t bit-identical, losses to float tolerance
+    # (fusing the synthesis into the scan reorders a few f32 ops)
+    from repro.data import SynthTask, stage_synth_task
+    from repro.sim.engine import _unpack_stream
+    n, rounds = 200, 10
+    task = SynthTask(n_clients=n, seed=3)
+    mesh = _client_mesh()
+    engines = {
+        "staged": _synth_engine(stage_synth_task(task), n),
+        "synth": _synth_engine(task, n),
+        "sharded_stream": _synth_engine(task, n, mesh, "stream"),
+        "sharded_allgather": _synth_engine(task, n, mesh, "allgather"),
+    }
+    outs = {}
+    for name, engine in engines.items():
+        carry = engine.init_carry(jax.random.PRNGKey(0))
+        _, out = engine.chunk(carry, jnp.arange(rounds, dtype=jnp.int32))
+        outs[name] = _unpack_stream(jax.tree.map(np.asarray, out), n)
+    ref = outs["staged"]
+    for name in ("synth", "sharded_stream", "sharded_allgather"):
+        np.testing.assert_array_equal(ref.sel_mask, outs[name].sel_mask,
+                                      err_msg=name)
+        np.testing.assert_array_equal(ref.completed, outs[name].completed,
+                                      err_msg=name)
+        np.testing.assert_array_equal(ref.k_t, outs[name].k_t, err_msg=name)
+        np.testing.assert_allclose(ref.train_loss, outs[name].train_loss,
+                                   atol=1e-5, err_msg=name)
+    # scale accounting: on-demand synthesis keeps nothing resident
+    assert engines["staged"].n_staged_bytes > 0
+    assert engines["synth"].n_staged_bytes == 0
+    assert engines["sharded_stream"].n_staged_bytes == 0
+    if mesh.shape["clients"] > 1:
+        assert engines["sharded_stream"].selection_comm_bytes_per_round > 0
+        assert (engines["sharded_stream"].selection_comm_bytes_per_round
+                < engines["sharded_allgather"].selection_comm_bytes_per_round)
+
+
+def test_topk_impl_engine_parity():
+    # RunSpec.topk_impl: streaming and all_gather reductions must produce
+    # the same trajectory, bit for bit (rates included)
+    stream = _run("f3ast", "scarce", "device", mesh=0, topk_impl="stream")
+    allg = _run("f3ast", "scarce", "device", mesh=0, topk_impl="allgather")
+    assert_cell_parity(stream, allg, rates_exact=True)
+
+
+def test_spec_rejects_unknown_topk_impl():
+    with pytest.raises(ValueError, match="topk_impl"):
+        parity_spec("f3ast", topk_impl="bogus").resolved()
+
+
+def test_final_metrics_surface_scale_accounting():
+    res = _run("f3ast", "scarce", "device", mesh=0, rounds=4)
+    assert res.final_metrics["n_staged_bytes"] > 0       # staged scenario data
+    assert res.final_metrics["selection_comm_bytes_per_round"] >= 0
+    host = _run("f3ast", "scarce", "host", rounds=4)
+    assert host.final_metrics["n_staged_bytes"] == 0     # numpy-resident
 
 
 # ---------------------------------------------------------------------------

@@ -69,3 +69,21 @@ def test_select_impl_matches_xla(select_impl, strategy, completion,
     monkeypatch.setattr(fed_select, "AUTODETECT_OVERRIDE", "interpret")
     res = run_cell(spec, "device", select_impl=select_impl)
     assert_cell_parity(ref, res, rates_exact=True)
+
+
+@pytest.mark.parametrize("completion", PARITY_COMPLETIONS)
+@pytest.mark.parametrize("strategy", PARITY_STRATEGIES)
+def test_topk_impl_matches_allgather(strategy, completion,
+                                     parity_reference_cache):
+    """topk_impl axis of the matrix: the sharded engine's streaming
+    ppermute top-k reduction must reproduce the legacy all_gather
+    reduction bit-for-bit — selection masks, completion masks, and the
+    r_k EMA (``rates_exact=True``: both are compiled engines)."""
+    spec = parity_spec(strategy, completion)
+    key = ("sharded-allgather", strategy, completion)
+    if key not in parity_reference_cache:
+        parity_reference_cache[key] = run_cell(spec, "sharded",
+                                               topk_impl="allgather")
+    ref = parity_reference_cache[key]
+    res = run_cell(spec, "sharded", topk_impl="stream")
+    assert_cell_parity(ref, res, rates_exact=True)

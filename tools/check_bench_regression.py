@@ -24,9 +24,12 @@ Compares a freshly measured ``BENCH_engine.json`` (see
 
 With ``--nscale-current`` it additionally checks the client-scaling column
 (``benchmarks/bench_engine.py --nscale-only``): the largest-N *sharded* cell
-must have completed with nonzero throughput — the guard that the 100k-client
-regime keeps working at all (absolute rounds/sec are machine-dependent and
-not gated there).
+must have completed with nonzero throughput — the guard that the
+million-client regime keeps working at all (absolute rounds/sec are
+machine-dependent and not gated there) — and, with
+``--min-nscale-1e6-ratio``, the N=1e6 on-demand-synthesis cell must show
+the sharded engine at least that many times faster than the unsharded one
+(machine-independent: both numbers come from the same run).
 
 With ``--selection-current`` it additionally gates the fused selection
 kernel (``benchmarks/selection_overhead.py``):
@@ -114,24 +117,50 @@ def check(
     return errors
 
 
-def check_nscale(result: dict) -> list:
-    """The largest-N sharded cell must complete with nonzero throughput."""
+def check_nscale(result: dict, min_1e6_ratio: float = 0.0) -> list:
+    """The largest-N sharded cell must complete with nonzero throughput;
+    with ``min_1e6_ratio`` > 0 the N=1e6 cell must additionally show the
+    sharded engine at least that many times faster than the unsharded one
+    (machine-independent: both numbers come from the same run)."""
     cells = result.get("nscale", {}).get("cells", [])
     if not cells:
         return ["nscale results contain no cells"]
+    errors = []
     top = max(cells, key=lambda c: c["n_clients"])
     sharded = top.get("sharded", {})
     if sharded.get("rounds_per_s", 0.0) <= 0.0:
-        return [
+        errors.append(
             f"sharded engine did not complete the N={top['n_clients']} "
             f"cell: {sharded}"
-        ]
-    print(
-        f"check_bench_regression: nscale N={top['n_clients']}: sharded "
-        f"{sharded['rounds_per_s']:.1f} rounds/s over "
-        f"{result['nscale'].get('devices', '?')} devices"
-    )
-    return []
+        )
+    else:
+        print(
+            f"check_bench_regression: nscale N={top['n_clients']}: sharded "
+            f"{sharded['rounds_per_s']:.1f} rounds/s over "
+            f"{result['nscale'].get('devices', '?')} devices"
+        )
+    if min_1e6_ratio > 0.0:
+        at_1e6 = [c for c in cells if c["n_clients"] == 1_000_000
+                  and "speedup_sharded_over_device" in c]
+        if not at_1e6:
+            errors.append(
+                "nscale results have no N=1000000 cell with both engines "
+                "(needed for --min-nscale-1e6-ratio)"
+            )
+        else:
+            ratio = at_1e6[-1]["speedup_sharded_over_device"]
+            if ratio < min_1e6_ratio:
+                errors.append(
+                    f"sharded engine is only {ratio:.2f}x the unsharded "
+                    f"engine at N=1e6, below the required "
+                    f"{min_1e6_ratio:.2f}x"
+                )
+            else:
+                print(
+                    f"check_bench_regression: nscale N=1e6 sharded/device "
+                    f"ratio {ratio:.2f}x (>= {min_1e6_ratio:.2f}x)"
+                )
+    return errors
 
 
 def check_selection(result: dict, min_ratio: float) -> list:
@@ -168,6 +197,14 @@ def main(argv=None) -> int:
         help="optional selection-kernel results "
         "(benchmarks/selection_overhead.py --out); gates the fused-kernel "
         "over-XLA ratio at the gate fleet size",
+    )
+    ap.add_argument(
+        "--min-nscale-1e6-ratio",
+        type=float,
+        default=0.0,
+        help="required sharded-over-unsharded rounds/sec ratio at the "
+        "N=1e6 on-demand-synthesis cell (used with --nscale-current; "
+        "0 disables the check)",
     )
     ap.add_argument(
         "--min-selection-ratio",
@@ -209,7 +246,8 @@ def main(argv=None) -> int:
     errors = check(baseline, current, args.threshold, args.min_speedup,
                    args.min_dropout_ratio, args.min_buffered_ratio)
     if args.nscale_current:
-        errors += check_nscale(load(args.nscale_current))
+        errors += check_nscale(load(args.nscale_current),
+                               args.min_nscale_1e6_ratio)
     if args.selection_current:
         errors += check_selection(
             load(args.selection_current), args.min_selection_ratio
