@@ -5,6 +5,8 @@ from .availability import (AVAILABILITY_REGISTRY, Always, CommBudget,
 from .bitmask import (all_gather_bits, n_words, pack_bits, unpack_bits,
                       unpack_bits_np)
 from .hfun import R_MIN, h_grad, h_value, marginal_utility
+from .keys import (COMPLETION, KEY_FOLDS, NONEMPTY, get_key_fold,
+                   register_key_fold)
 from .selection import (TOPK_IMPLS, cohort_ids_from_mask, f3ast_select,
                         fedavg_select, fixed_policy_select, poc_select,
                         uniform_select)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .keys import NONEMPTY
+
 
 def force_nonempty(mask: jnp.ndarray, q: jnp.ndarray,
                    key: jax.Array) -> jnp.ndarray:
@@ -79,7 +81,7 @@ class AvailabilityProcess:
         the available set is non-empty at every round)."""
         q = self.probs(t)
         mask = jax.random.bernoulli(key, q)
-        return force_nonempty(mask, q, jax.random.fold_in(key, 1))
+        return force_nonempty(mask, q, jax.random.fold_in(key, NONEMPTY))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,13 +180,13 @@ class MarkovClusters(AvailabilityProcess):
         return jnp.arange(self.n_clients) % self.n_clusters
 
     def step(self, key: jax.Array, state: jnp.ndarray):
-        k1, k2 = jax.random.split(key)
+        k1, k1b, k2 = jax.random.split(key, 3)
         go_up = jax.random.bernoulli(k1, self.p_up_given_down, state.shape)
-        go_down = jax.random.bernoulli(k1, self.p_down_given_up, state.shape)
+        go_down = jax.random.bernoulli(k1b, self.p_down_given_up, state.shape)
         new_state = jnp.where(state, ~go_down, go_up)
         q = jnp.where(new_state[self.cluster_of()], self.q_up, self.q_down)
         mask = jax.random.bernoulli(k2, q)
-        mask = force_nonempty(mask, q, jax.random.fold_in(k2, 1))
+        mask = force_nonempty(mask, q, jax.random.fold_in(k2, NONEMPTY))
         return new_state, mask
 
     def probs(self, t):  # stationary marginal, for reporting only
@@ -231,6 +233,10 @@ AVAILABILITY_REGISTRY = {
 def make_availability(name: str, n_clients: int, p: Optional[np.ndarray] = None,
                       **kw) -> AvailabilityProcess:
     name = name.lower()
+    if name not in AVAILABILITY_REGISTRY:
+        raise KeyError(
+            f"unknown availability model {name!r}; registered: "
+            f"{sorted(AVAILABILITY_REGISTRY)}")
     if name == "uneven":
         assert p is not None, "Uneven availability needs client data fractions p"
         return Uneven(n_clients=n_clients, p=tuple(np.asarray(p).tolist()), **kw)

@@ -45,13 +45,18 @@ def pack_bits(mask: jnp.ndarray) -> jnp.ndarray:
     if pad:
         bits = jnp.pad(bits, [(0, 0)] * (mask.ndim - 1) + [(0, pad)])
     bits = bits.reshape(mask.shape[:-1] + (w, _WORD))
-    return (bits << jnp.arange(_WORD, dtype=jnp.uint32)).sum(
-        axis=-1, dtype=jnp.uint32)
+    # explicit broadcast of the shift vector: bit-identical, and clean
+    # under jax_numpy_rank_promotion="raise" (REPRO_SANITIZE=1)
+    shifts = jnp.broadcast_to(jnp.arange(_WORD, dtype=jnp.uint32), bits.shape)
+    return (bits << shifts).sum(axis=-1, dtype=jnp.uint32)
 
 
 def unpack_bits(words: jnp.ndarray, n: int) -> jnp.ndarray:
     """(…, W) uint32 → (…, n) bool with ``n <= 32*W`` (inverse of pack)."""
-    bits = (words[..., :, None] >> jnp.arange(_WORD, dtype=jnp.uint32)) & 1
+    expanded = words[..., :, None]
+    shifts = jnp.broadcast_to(jnp.arange(_WORD, dtype=jnp.uint32),
+                              expanded.shape[:-1] + (_WORD,))
+    bits = (expanded >> shifts) & 1
     flat = bits.reshape(words.shape[:-1] + (words.shape[-1] * _WORD,))
     return flat[..., :n].astype(bool)
 

@@ -1,0 +1,80 @@
+"""Runtime sanitizer wiring (the dynamic half of reprolint).
+
+``REPRO_SANITIZE=1`` turns on JAX's own checkers for the invariants the
+static pass cannot see:
+
+* ``jax_debug_key_reuse``        — typed-key reuse detection (note: JAX
+  only tracks new-style typed keys; the repo's uint32 keys are covered
+  statically by reprolint R1),
+* ``jax_numpy_rank_promotion="raise"`` — silent rank promotion becomes an
+  error (a promoted intermediate changes reduction order and breaks
+  cross-engine bit parity),
+* a **scoped** transfer guard around compiled round/chunk execution.
+
+The transfer guard deviates from a blanket ``jax_transfer_guard=
+"disallow"`` deliberately: applied globally, the guard rejects even
+constant materialization (``jnp.ones(3)`` is a host-to-device transfer),
+so instead engines wrap their compiled chunk calls in
+:func:`guard_transfers`.  Host-side JSONL streaming / unpacking at chunk
+boundaries stays outside the guard — the contract is "no stray transfer
+inside the compiled round path", not "no transfers ever"
+(docs/static_analysis.md).
+
+Everything here is a no-op unless ``REPRO_SANITIZE`` is set, so
+production paths pay nothing.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+
+import jax
+
+__all__ = ["sanitize_enabled", "enable_sanitizers", "guard_transfers"]
+
+
+def sanitize_enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def _try_update(option: str, value) -> bool:
+    """Set a jax config option, tolerating older jax versions that lack
+    it (the CI matrix pins an older floor)."""
+    try:
+        jax.config.update(option, value)
+        return True
+    except (AttributeError, ValueError):
+        return False
+
+
+def enable_sanitizers() -> list:
+    """Turn on the global sanitizer config; returns the options enabled.
+
+    The transfer guard is NOT enabled globally here — see
+    :func:`guard_transfers`.
+    """
+    enabled = []
+    for option, value in (
+        ("jax_debug_key_reuse", True),
+        ("jax_numpy_rank_promotion", "raise"),
+    ):
+        if _try_update(option, value):
+            enabled.append(option)
+    return enabled
+
+
+@contextlib.contextmanager
+def guard_transfers():
+    """Scoped ``transfer_guard("disallow")`` around compiled round/chunk
+    execution; a no-op unless ``REPRO_SANITIZE`` is set.
+
+    Any implicit host-to-device (a stray ``np`` array argument) or
+    device-to-host (a stray sync on a traced output) transfer inside the
+    guarded block raises instead of silently serializing the device
+    stream.
+    """
+    if sanitize_enabled():
+        with jax.transfer_guard("disallow"):
+            yield
+    else:
+        yield

@@ -153,8 +153,13 @@ class SynthTask:
             v = b_mean + jax.random.normal(k_v, (dim,))
             w = u + jax.random.normal(k_w, (dim, c))
             b = u + jax.random.normal(k_bias, (c,))
-            x = v + jax.random.normal(k_x, (s, dim)) * diag_sqrt
-            logits = jnp.einsum("sd,dc->sc", x, w) + b
+            # explicit broadcasts: bit-identical op order to `v + n*diag`,
+            # clean under jax_numpy_rank_promotion="raise"
+            x = (jnp.broadcast_to(v, (s, dim))
+                 + jax.random.normal(k_x, (s, dim))
+                 * jnp.broadcast_to(diag_sqrt, (s, dim)))
+            logits = (jnp.einsum("sd,dc->sc", x, w)
+                      + jnp.broadcast_to(b, (s, c)))
             return {"x": x, "y": jnp.argmax(logits, -1).astype(jnp.int32)}
 
         return jax.vmap(one)(jnp.asarray(ids, jnp.int32))

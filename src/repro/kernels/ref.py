@@ -76,7 +76,9 @@ def topk_threshold_mask(scores, avail, k, *, sort_fn=jnp.sort):
     # k_eff-th largest lives at ascending index n - k_eff; k_eff == 0 clips
     # to the maximum, for which the gt/tie counts below select nothing.
     idx = jnp.clip(n - k_eff, 0, n - 1)
-    pos = jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+    # 2-D iota + reshape: Mosaic rejects 1-D iota inside TPU kernel bodies,
+    # and this helper is traced from the Pallas kernels (docs/kernels.md).
+    pos = jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape(n)
     thr = jnp.sum(jnp.where(pos == idx, svals, 0.0))
     gt = masked > thr
     g = jnp.sum(gt.astype(jnp.int32))

@@ -22,17 +22,17 @@ def serve(arch_id: str, batch: int = 4, prompt_len: int = 16,
     arch = get_arch(arch_id)
     cfg = arch.smoke_model if smoke else arch.model
     api = get_model_api(cfg)
-    key = jax.random.PRNGKey(seed)
+    key, k_frames, k_prompt = jax.random.split(jax.random.PRNGKey(seed), 3)
     params = api.init_params(key)
     state = api.init_decode_state(batch, max_len)
 
     if cfg.family == "audio":
-        frames = jax.random.normal(key, (batch, cfg.enc_seq, cfg.d_model),
+        frames = jax.random.normal(k_frames, (batch, cfg.enc_seq, cfg.d_model),
                                    cfg.np_dtype)
         state = api.module.prefill(cfg, params, {"frames": frames}, state)
 
     step = jax.jit(api.decode_step)
-    prompt = jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab)
+    prompt = jax.random.randint(k_prompt, (batch, prompt_len), 0, cfg.vocab)
 
     # prefill by stepping the prompt (cache-consistent by construction)
     tok = prompt[:, :1]

@@ -98,7 +98,7 @@ def run_arch_smoke(arch_id: str, rounds: int = 3, seed: int = 0,
 
     losses = []
     for t in range(rounds):
-        key, k1, k2, kb = jax.random.split(key, 4)
+        key, k1, k2, kb, kb_aux = jax.random.split(key, 5)
         avail = avail_proc.sample(k1, t)
         sel, w_full, algo_state = strategy.select(algo_state, k2, avail,
                                                   jnp.asarray(K), None)
@@ -107,10 +107,10 @@ def run_arch_smoke(arch_id: str, rounds: int = 3, seed: int = 0,
         batch = {"tokens": jax.random.randint(kb, (K, E, B, S), 0, cfg.vocab)}
         if cfg.family == "vlm":
             batch["patch_embeds"] = jax.random.normal(
-                kb, (K, E, B, cfg.n_patches, cfg.vit_dim), cfg.np_dtype)
+                kb_aux, (K, E, B, cfg.n_patches, cfg.vit_dim), cfg.np_dtype)
         if cfg.family == "audio":
-            batch["frames"] = jax.random.normal(
-                kb, (K, E, B, cfg.enc_seq, cfg.d_model), cfg.np_dtype)
+            batch["frames"] = jax.random.normal(  # reprolint: disable=R1 -- vlm/audio branches are mutually exclusive; kb_aux is consumed once per run
+                kb_aux, (K, E, B, cfg.enc_seq, cfg.d_model), cfg.np_dtype)
         w = jnp.asarray(np.asarray(w_full)[ids])
         params, opt_state, m = fed_round(params, opt_state, batch, w,
                                          jnp.asarray(1e-2, jnp.float32))

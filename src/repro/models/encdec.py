@@ -84,7 +84,7 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
 
 def encode(cfg: ModelConfig, params, frames):
     x = frames.astype(cfg.np_dtype) + _sinusoid(frames.shape[1], cfg.d_model
-                                                ).astype(cfg.np_dtype)
+                                                ).astype(cfg.np_dtype)[None]
 
     def body(h, blk):
         h = h + _attn(blk["attn"], rms_norm(h, blk["ln1"], cfg.norm_eps),
@@ -167,7 +167,7 @@ def decode_step(cfg: ModelConfig, params, state, tok_t):
     idx = state["index"]
     x = params["embed"][tok_t].astype(cfg.np_dtype)
     pos_idx = jnp.minimum(idx, params["dec_pos"].shape[0] - 1)
-    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_idx, 1, 0)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos_idx, 1, 0)[None]
 
     def body(h, xs):
         blk, sk, sv, ck, cv = xs

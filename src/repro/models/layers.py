@@ -83,7 +83,10 @@ def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     y = x32 * jax.lax.rsqrt(var + eps)
-    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+    # explicit broadcast of the (d,) scale: bit-identical, and clean under
+    # jax_numpy_rank_promotion="raise" (REPRO_SANITIZE=1)
+    gain = jnp.broadcast_to(1.0 + scale.astype(jnp.float32), y.shape)
+    return (y * gain).astype(x.dtype)
 
 
 def init_rms(key, d, dtype):
@@ -100,6 +103,7 @@ def rotary(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
     """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
     hd = x.shape[-1]
     freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    freqs = freqs.reshape((1,) * positions.ndim + (-1,))  # rank-matched
     ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, hd/2)
     cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
     x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)

@@ -35,7 +35,10 @@ def group_norm(x, scale, bias, groups, eps=1e-5):
     mean = xg.mean(axis=(1, 2, 4), keepdims=True)
     var = xg.var(axis=(1, 2, 4), keepdims=True)
     xn = ((xg - mean) * jax.lax.rsqrt(var + eps)).reshape(B, H, W, C)
-    return (xn * scale + bias).astype(x.dtype)
+    # rank-matched affine: bit-identical, clean under
+    # jax_numpy_rank_promotion="raise" (REPRO_SANITIZE=1)
+    return (xn * scale.reshape(1, 1, 1, -1)
+            + bias.reshape(1, 1, 1, -1)).astype(x.dtype)
 
 
 def _init_conv(key, kh, kw, cin, cout):
@@ -98,7 +101,7 @@ def forward(cfg: ResNetConfig, params, strides, images):
     for p, s in zip(params["blocks"], strides):
         x = _block(p, x, s, cfg.groups)
     x = x.mean(axis=(1, 2))
-    return x @ params["fc_w"] + params["fc_b"]
+    return x @ params["fc_w"] + params["fc_b"].reshape(1, -1)
 
 
 def make_loss_fn(cfg: ResNetConfig, strides):

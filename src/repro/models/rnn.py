@@ -51,7 +51,7 @@ def _lstm_layer(p, x):
 
     def step(carry, x_t):
         h, c = carry
-        gates = x_t @ p["wx"] + h @ p["wh"] + p["b"]
+        gates = x_t @ p["wx"] + h @ p["wh"] + p["b"].reshape(1, -1)
         f, i, o, g = jnp.split(gates, 4, axis=-1)
         c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
         h = jax.nn.sigmoid(o) * jnp.tanh(c)
@@ -66,7 +66,7 @@ def forward(cfg: LstmConfig, params, tokens):
     x = params["embed"][tokens]
     for p in params["lstm"]:
         x = _lstm_layer(p, x)
-    return x @ params["out_w"] + params["out_b"]
+    return x @ params["out_w"] + params["out_b"].reshape(1, 1, -1)
 
 
 def loss_fn(cfg: LstmConfig, params, batch):

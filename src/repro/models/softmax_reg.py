@@ -24,7 +24,10 @@ def init_params(cfg: SoftmaxRegConfig, key):
 
 
 def forward(cfg: SoftmaxRegConfig, params, x):
-    return x @ params["w"] + params["b"]
+    # explicit broadcast: bit-identical to `+ b`, but rank-promotion-clean
+    # under REPRO_SANITIZE=1 (jax_numpy_rank_promotion="raise")
+    xw = x @ params["w"]
+    return xw + jnp.broadcast_to(params["b"], xw.shape)
 
 
 def loss_fn(cfg: SoftmaxRegConfig, params, batch):

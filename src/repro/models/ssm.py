@@ -21,15 +21,18 @@ def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray
     """x: (B, S, D); w: (W, D) depthwise taps; returns (B, S, D)."""
     W = w.shape[0]
     pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
-    out = sum(pad[:, i:i + x.shape[1], :] * w[i] for i in range(W))
-    return out + b
+    # rank-matched taps/bias: bit-identical, clean under
+    # jax_numpy_rank_promotion="raise" (REPRO_SANITIZE=1)
+    out = sum(pad[:, i:i + x.shape[1], :] * w[i].reshape(1, 1, -1)
+              for i in range(W))
+    return out + b.reshape(1, 1, -1)
 
 
 def causal_conv1d_step(x_t: jnp.ndarray, conv_state: jnp.ndarray,
                        w: jnp.ndarray, b: jnp.ndarray):
     """x_t: (B, 1, D); conv_state: (B, W-1, D) past inputs; returns (y_t, state)."""
     window = jnp.concatenate([conv_state, x_t], axis=1)        # (B, W, D)
-    y = jnp.einsum("bwd,wd->bd", window, w)[:, None, :] + b
+    y = jnp.einsum("bwd,wd->bd", window, w)[:, None, :] + b.reshape(1, 1, -1)
     return y, window[:, 1:, :]
 
 
@@ -137,7 +140,7 @@ def mamba2_block(p, x, cfg: ModelConfig, use_kernel: bool = False):
     xbc = causal_conv1d(jnp.concatenate([xs, Bm, Cm], -1), p["conv_w"], p["conv_b"])
     xbc = jax.nn.silu(xbc)
     xs, Bm, Cm = jnp.split(xbc, [d_inner, d_inner + N], axis=-1)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].reshape(1, 1, -1))
     A = -jnp.exp(p["A_log"])
     xh = xs.reshape(B, S, H, P)
     if use_kernel:
@@ -171,7 +174,8 @@ def mamba2_decode(p, x_t, cfg: ModelConfig, state):
         jnp.concatenate([xs, Bm, Cm], -1), state["conv"], p["conv_w"], p["conv_b"])
     xbc_t = jax.nn.silu(xbc_t)
     xs, Bm, Cm = jnp.split(xbc_t, [d_inner, d_inner + N], axis=-1)
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]   # (B, H)
+    dt = jax.nn.softplus(
+        dt.astype(jnp.float32) + p["dt_bias"].reshape(1, 1, -1))[:, 0]  # (B, H)
     A = -jnp.exp(p["A_log"])
     xh = xs.reshape(B, H, P).astype(jnp.float32)
     decay = jnp.exp(dt * A[None, :])                                     # (B, H)
@@ -214,9 +218,12 @@ def init_rglru(key, cfg: ModelConfig):
 
 
 def _rglru_gates(p, u):
-    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32) + p["b_a"])
-    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"].astype(jnp.float32) + p["b_i"])
-    log_a = -_RG_C * jax.nn.softplus(p["lam"]) * r                  # (B, S, w)
+    b_a = p["b_a"].reshape(1, 1, -1)
+    b_i = p["b_i"].reshape(1, 1, -1)
+    r = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_a"].astype(jnp.float32) + b_a)
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["w_i"].astype(jnp.float32) + b_i)
+    log_a = (-_RG_C * jax.nn.softplus(p["lam"]).reshape(1, 1, -1)
+             * r)                                                   # (B, S, w)
     a = jnp.exp(log_a)
     gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
         * (i * u.astype(jnp.float32))

@@ -109,7 +109,11 @@ _REGISTRY = {"sgd": sgd, "adam": adam, "adamw": adamw, "yogi": yogi}
 
 
 def make_optimizer(name: str, **kw) -> Optimizer:
-    return _REGISTRY[name.lower()](**kw)
+    key = name.lower()
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown optimizer {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[key](**kw)
 
 
 def apply_updates(params, updates):

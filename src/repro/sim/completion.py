@@ -50,6 +50,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import keys
+
 __all__ = [
     "COMPLETION_REGISTRY", "KEY_FOLD", "AlwaysComplete",
     "AvailabilityCoupled", "BernoulliCompletion", "CompletionModel",
@@ -59,7 +61,9 @@ __all__ = [
 # Engines derive the per-round completion key as fold_in(k_sel, KEY_FOLD):
 # a side stream off the selection key that consumes nothing from the main
 # split, keeping completion="always" bit-identical to pre-completion runs.
-KEY_FOLD = 0x5E1EC7
+# The constant lives in the central KEY_FOLD registry (core/keys.py);
+# this alias is kept for backwards compatibility.
+KEY_FOLD = keys.COMPLETION
 
 
 class CompletionModel:

@@ -57,7 +57,8 @@ from ..data import CohortSampler
 from ..data.pipeline import staged_cohort_batch, synth_cohort_batch
 from ..data.synthetic import SynthTask
 from ..optim import make_optimizer
-from .completion import KEY_FOLD
+from ..core.keys import COMPLETION as KEY_FOLD
+from ..core.sanitize import guard_transfers
 from .scenario import Scenario, get_scenario
 
 __all__ = ["DeviceEngine", "build_engine", "run_scenario_device",
@@ -185,6 +186,10 @@ class DeviceEngine:
 
         self._chunk = jax.jit(chunk)
         self._vchunk = jax.jit(jax.vmap(chunk, in_axes=(0, None, 0)))
+        # Device-resident default cap, staged at build time: drivers call
+        # chunk() inside the sanitizer transfer guard, so the default must
+        # not be a fresh host->device transfer per chunk.
+        self._k_max_dev = jnp.asarray(self.k_max, jnp.int32)
 
         def _make_init(r0):
             def init_carry(key):
@@ -206,7 +211,7 @@ class DeviceEngine:
     def chunk(self, carry, ts, k_cap=None):
         """Advance one chunk of rounds; returns (carry', RoundStream)."""
         if k_cap is None:
-            k_cap = self.k_max
+            return self._chunk(carry, ts, self._k_max_dev)
         return self._chunk(carry, ts, jnp.asarray(k_cap, jnp.int32))
 
     def vmapped_chunk(self, carries, ts, k_caps):
@@ -407,7 +412,10 @@ def run_scenario_device(scenario: Union[str, Scenario],
     try:
         for (t0, t1) in _chunk_spans(rounds, chunk_size):
             ts = jnp.arange(t0, t1, dtype=jnp.int32)
-            carry, out = engine.chunk(carry, ts)
+            # Under REPRO_SANITIZE=1 any stray implicit host<->device
+            # transfer inside the compiled chunk raises (core.sanitize).
+            with guard_transfers():
+                carry, out = engine.chunk(carry, ts)
             # One host↔device sync per chunk: pull the streamed metrics
             # (masks cross packed — unpack once here, see RoundStream).
             out_np = _unpack_stream(jax.tree.map(np.asarray, out), n_real)

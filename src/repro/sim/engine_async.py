@@ -67,7 +67,8 @@ from ..core.strategies import (SelectCtx, get_strategy_entry, make_strategy,
 from ..data import CohortSampler
 from ..data.pipeline import staged_cohort_batch
 from ..optim import make_optimizer
-from .completion import KEY_FOLD
+from ..core.keys import COMPLETION as KEY_FOLD
+from ..core.sanitize import guard_transfers
 from .scenario import Scenario, get_scenario
 
 __all__ = ["STALENESS_DISCOUNTS", "ArrivalPool", "AsyncCarry", "AsyncEngine",
@@ -510,7 +511,10 @@ def _run_buffered_device(ctx, *, rounds, seed, eval_every, chunk_size,
         for t0 in range(0, rounds, chunk_size):
             t1 = min(t0 + chunk_size, rounds)
             ts = jnp.arange(t0, t1, dtype=jnp.int32)
-            carry, out = engine.chunk(carry, ts)
+            # Under REPRO_SANITIZE=1 any stray implicit host<->device
+            # transfer inside the compiled chunk raises (core.sanitize).
+            with guard_transfers():
+                carry, out = engine.chunk(carry, ts)
             out_np = jax.tree.map(np.asarray, out)
             if t_first_chunk is None:
                 t_first_chunk = time.time()

@@ -75,7 +75,7 @@ from ..core.strategies import SelectCtx, as_sharded
 from ..data.pipeline import SHARD_PAD_QUANTUM, synth_cohort_batch
 from ..data.synthetic import SynthTask
 from ..sharding.rules import pad_client_dim, to_named_shardings
-from .completion import KEY_FOLD
+from ..core.keys import COMPLETION as KEY_FOLD
 from .engine import EngineCarry, RoundStream, _staged_nbytes
 
 __all__ = ["ShardedEngine", "resolve_client_mesh"]
@@ -370,6 +370,13 @@ class ShardedEngine:
 
         self._make_init = _make_init
         self.init_carry = _make_init(None)
+        # Mesh-replicated default cap, staged at build time: drivers call
+        # chunk() inside the sanitizer transfer guard (core.sanitize), so
+        # the default must not be a fresh host->device (or resharding)
+        # transfer per chunk.
+        self._k_max_dev = jax.device_put(
+            jnp.asarray(self.k_max, jnp.int32),
+            to_named_shardings(P(), mesh))
 
     def set_r0(self, r0: float) -> None:
         """Pin the rate-EMA initialization (runner uses the calibrated M/N)."""
@@ -378,8 +385,9 @@ class ShardedEngine:
     def chunk(self, carry, ts, k_cap: Optional[int] = None):
         """Advance one chunk of rounds; returns (carry', RoundStream)."""
         if k_cap is None:
-            k_cap = self.k_max
-        k_cap = jnp.asarray(k_cap, jnp.int32)
+            k_cap = self._k_max_dev
+        else:
+            k_cap = jnp.asarray(k_cap, jnp.int32)
         if self._synth:
             return self._chunk(carry, ts, k_cap)
         return self._chunk(carry, ts, k_cap,

@@ -47,6 +47,7 @@ import numpy as np
 
 from ..core import availability as core_av
 from ..core.blockrng import block_bernoulli, block_uniform
+from ..core.keys import NONEMPTY
 
 
 def _nonempty(mask: jnp.ndarray, q: jnp.ndarray,
@@ -164,7 +165,7 @@ class Bernoulli(AvailabilityModel):
 
     def step(self, key, state, t):
         mask = jax.random.bernoulli(key, self._q)
-        return state, _nonempty(mask, self._q, jax.random.fold_in(key, 1))
+        return state, _nonempty(mask, self._q, jax.random.fold_in(key, NONEMPTY))
 
     def step_block(self, key, state, t, *, off, n_local, axis):
         """One shard's slice [off, off + n_local) of ``step``'s mask —
@@ -180,7 +181,7 @@ class Bernoulli(AvailabilityModel):
         q_blk = jnp.where(real, jnp.take(self._q, jnp.minimum(ids, n - 1)),
                           0.0)
         mask = block_bernoulli(key, q_blk, n, off, n_local) & real
-        tie = block_uniform(jax.random.fold_in(key, 1), n, off, n_local)
+        tie = block_uniform(jax.random.fold_in(key, NONEMPTY), n, off, n_local)
         cand = jnp.where(real & (q_blk >= self._q_max), tie, -1.0)
         return state, core_av.force_nonempty_block(mask, cand, off, axis)
 
@@ -220,7 +221,7 @@ class GilbertElliott(AvailabilityModel):
         new = jnp.where(state, ~go_down, go_up)
         q = jnp.where(new, self.q_up, self.q_down)
         mask = jax.random.bernoulli(k_avail, q)
-        return new, _nonempty(mask, q, jax.random.fold_in(k_avail, 1))
+        return new, _nonempty(mask, q, jax.random.fold_in(k_avail, NONEMPTY))
 
     def marginals(self, t):
         pi = self.stationary_up
@@ -262,7 +263,7 @@ class Diurnal(AvailabilityModel):
     def step(self, key, state, t):
         q = self.marginals(t)
         mask = jax.random.bernoulli(key, q)
-        return state, _nonempty(mask, q, jax.random.fold_in(key, 1))
+        return state, _nonempty(mask, q, jax.random.fold_in(key, NONEMPTY))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -299,7 +300,7 @@ class NonStationaryDrift(AvailabilityModel):
     def step(self, key, state, t):
         q = self.marginals(t)
         mask = jax.random.bernoulli(key, q)
-        return state, _nonempty(mask, q, jax.random.fold_in(key, 1))
+        return state, _nonempty(mask, q, jax.random.fold_in(key, NONEMPTY))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -61,7 +61,7 @@ from ..data.synthetic import (make_char_lm_federated, make_synthetic_federated,
                               make_vision_federated)
 from ..models import resnet, rnn, softmax_reg
 from ..optim import make_optimizer
-from .completion import KEY_FOLD
+from ..core.keys import COMPLETION as KEY_FOLD
 from .scenario import Scenario, get_scenario
 from .spec import RunSpec
 

@@ -36,6 +36,12 @@ from .scenario import Scenario, get_scenario
 __all__ = ["RunSpec"]
 
 
+def _real(value) -> bool:
+    """True for int/float (not bool) — the scalars RunSpec accepts."""
+    return (isinstance(value, (int, float, np.integer, np.floating))
+            and not isinstance(value, bool))
+
+
 def _check_positive_int(value, field: str, *, optional: bool = False) -> None:
     """Reject zero/negative/non-integer run-shape fields with a clear error
     instead of a ``ZeroDivisionError`` (eval_every=0 inside ``t %
@@ -161,6 +167,34 @@ class RunSpec:
         _check_positive_int(self.chunk_size, "chunk_size", optional=True)
         _check_positive_int(self.clients_per_round, "clients_per_round",
                             optional=True)
+        for fname in ("strategy_kwargs", "completion_kwargs"):
+            kw = getattr(self, fname)
+            if not isinstance(kw, Mapping) or not all(
+                    isinstance(k, str) for k in kw):
+                raise ValueError(f"RunSpec.{fname} must be a mapping with "
+                                 f"string keys, got {kw!r}")
+        if self.beta is not None and not (
+                _real(self.beta) and 0.0 < float(self.beta) <= 1.0):
+            raise ValueError(f"RunSpec.beta must be None or a float in "
+                             f"(0, 1], got {self.beta!r}")
+        if not isinstance(self.positively_correlated, bool):
+            raise ValueError(f"RunSpec.positively_correlated must be a bool, "
+                             f"got {self.positively_correlated!r}")
+        if isinstance(self.seed, bool) or not isinstance(
+                self.seed, (int, np.integer)) or self.seed < 0:
+            raise ValueError(f"RunSpec.seed must be an int >= 0, "
+                             f"got {self.seed!r}")
+        if not (_real(self.prox_mu) and float(self.prox_mu) >= 0.0):
+            raise ValueError(f"RunSpec.prox_mu must be a float >= 0, "
+                             f"got {self.prox_mu!r}")
+        if not isinstance(self.clients_axis, str) or not self.clients_axis:
+            raise ValueError(f"RunSpec.clients_axis must be a non-empty "
+                             f"mesh-axis name, got {self.clients_axis!r}")
+        for fname in ("ckpt_dir", "metrics_path"):
+            val = getattr(self, fname)
+            if val is not None and (not isinstance(val, str) or not val):
+                raise ValueError(f"RunSpec.{fname} must be None or a "
+                                 f"non-empty path string, got {val!r}")
         return dataclasses.replace(self, strategy=name,
                                    server_opt=server_opt,
                                    server_lr=server_lr)

@@ -22,6 +22,16 @@ Parity contract (DESIGN.md §7.1–§7.4):
 import numpy as np
 import pytest
 
+from repro.core.sanitize import enable_sanitizers, sanitize_enabled
+
+# Sanitizer mode (the dynamic half of reprolint — docs/static_analysis.md):
+# REPRO_SANITIZE=1 runs the whole tier-1 suite with jax_debug_key_reuse +
+# rank-promotion errors globally and a scoped transfer guard around every
+# compiled chunk (core.sanitize.guard_transfers, wired in the engines).
+# Must happen before any jax array is created, hence at import time here.
+if sanitize_enabled():
+    enable_sanitizers()
+
 from repro.sim import RunSpec, run_scenario
 
 

@@ -1,0 +1,393 @@
+"""reprolint: per-rule good/bad fixtures, the src/repro self-check, and the
+baseline-only-shrinks regression pin (docs/static_analysis.md)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.reprolint import RULES, lint_source  # noqa: E402
+from tools.reprolint.baseline import DEFAULT_BASELINE, load_baseline  # noqa: E402
+
+
+def rules_of(source, path="<fixture>"):
+    return sorted({f.rule for f in lint_source(source, path=path)})
+
+
+# ---------------------------------------------------------------------------
+# R1 key-discipline
+# ---------------------------------------------------------------------------
+
+
+def test_r1_flags_key_consumed_twice():
+    src = """
+import jax
+def f(key):
+    a = jax.random.uniform(key, (3,))
+    b = jax.random.normal(key, (3,))
+    return a + b
+"""
+    assert rules_of(src) == ["R1"]
+
+
+def test_r1_flags_magic_fold_in_literal():
+    src = """
+import jax
+def f(key):
+    return jax.random.uniform(jax.random.fold_in(key, 1234), (3,))
+"""
+    findings = lint_source(src)
+    assert [f.rule for f in findings] == ["R1"]
+    assert "KEY_FOLD registry" in findings[0].message
+
+
+def test_r1_flags_closure_key():
+    src = """
+import jax
+def outer():
+    key = jax.random.PRNGKey(0)
+    def inner():
+        return jax.random.uniform(key, (3,))
+    return inner
+"""
+    assert rules_of(src) == ["R1"]
+
+
+def test_r1_flags_key_split_then_sampled():
+    src = """
+import jax
+def f(key):
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (3,))
+    b = jax.random.uniform(key, (3,))
+    return a + b
+"""
+    assert rules_of(src) == ["R1"]
+
+
+def test_r1_accepts_derived_stream_idiom():
+    # The repo's documented pattern: fold_in side streams off a consumed
+    # key, named constants, split-per-use, rebinding in a loop.
+    src = """
+import jax
+from repro.core.keys import NONEMPTY
+def f(key, q):
+    for t in range(10):
+        key, k_av, k_sel = jax.random.split(key, 3)
+        mask = jax.random.bernoulli(k_av, q)
+        tie = jax.random.uniform(jax.random.fold_in(k_av, NONEMPTY), q.shape)
+        sel = jax.random.gumbel(k_sel, q.shape)
+    return mask, tie, sel
+"""
+    assert rules_of(src) == []
+
+
+def test_r1_accepts_fold_in_of_variable():
+    src = """
+import jax
+def client_block(base, cid):
+    return jax.random.split(jax.random.fold_in(base, cid), 6)
+"""
+    assert rules_of(src) == []
+
+
+# ---------------------------------------------------------------------------
+# R2 mosaic-safety (path must be under kernels/)
+# ---------------------------------------------------------------------------
+
+KPATH = "src/repro/kernels/fixture.py"
+
+
+def test_r2_flags_1d_iota_in_kernel_body():
+    src = """
+import jax
+import jax.numpy as jnp
+def _foo_kernel(x_ref, o_ref):
+    pos = jax.lax.broadcasted_iota(jnp.int32, (128,), 0)
+    o_ref[...] = pos.astype(jnp.float32)
+"""
+    assert rules_of(src, KPATH) == ["R2"]
+
+
+def test_r2_flags_gather_and_argsort_in_closure():
+    # _helper is reached from the kernel root through a call edge.
+    src = """
+import jax.numpy as jnp
+def _helper(x, idx):
+    return jnp.take(x, idx) + jnp.argsort(x)[0]
+def _foo_kernel(x_ref, i_ref, o_ref):
+    o_ref[...] = _helper(x_ref[...], i_ref[...])
+"""
+    findings = lint_source(src, path=KPATH)
+    assert [f.rule for f in findings] == ["R2", "R2"]
+
+
+def test_r2_flags_reduction_directly_over_ref_block():
+    src = """
+import jax.numpy as jnp
+def _foo_kernel(x_ref, o_ref):
+    o_ref[0] = jnp.sum(x_ref[...])
+"""
+    findings = lint_source(src, path=KPATH)
+    assert [f.rule for f in findings] == ["R2"]
+    assert "[:n]" in findings[0].message
+
+
+def test_r2_accepts_true_length_reduction_and_2d_iota():
+    src = """
+import jax
+import jax.numpy as jnp
+def _foo_kernel(x_ref, o_ref, *, n):
+    x = x_ref[...]
+    pos = jax.lax.broadcasted_iota(jnp.int32, (128, 1), 0)
+    o_ref[0] = jnp.sum(x[:n]) + pos[0, 0]
+"""
+    assert rules_of(src, KPATH) == []
+
+
+def test_r2_ignores_non_kernel_files():
+    # Same source outside kernels/ is not a Pallas body.
+    src = """
+import jax
+import jax.numpy as jnp
+def _foo_kernel(x_ref, o_ref):
+    o_ref[...] = jax.lax.broadcasted_iota(jnp.int32, (128,), 0)
+"""
+    assert rules_of(src, "src/repro/core/whatever.py") == []
+
+
+def test_r2_finds_function_valued_arguments():
+    # sort_fn=_bitonic is a call edge into the kernel closure.
+    src = """
+import jax.numpy as jnp
+def _bitonic(x):
+    return jnp.argsort(x)
+def _cut(x, sort_fn):
+    return sort_fn(x)
+def _foo_kernel(x_ref, o_ref):
+    o_ref[...] = _cut(x_ref[...], sort_fn=_bitonic)
+"""
+    assert rules_of(src, KPATH) == ["R2"]
+
+
+# ---------------------------------------------------------------------------
+# R3 jit hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_r3_flags_host_sync_and_branching_in_round_step():
+    src = """
+import numpy as np
+def round_step(carry, t):
+    x = carry + t
+    if x > 0:
+        y = float(x)
+    z = np.asarray(x)
+    return z
+"""
+    findings = lint_source(src)
+    assert [f.rule for f in findings] == ["R3", "R3", "R3"]
+
+
+def test_r3_flags_item_in_scan_body():
+    src = """
+import jax
+def run(xs):
+    def body(c, x):
+        v = c.item()
+        return c, v
+    return jax.lax.scan(body, 0.0, xs)
+"""
+    assert rules_of(src) == ["R3"]
+
+
+def test_r3_flags_shard_map_lambda():
+    src = """
+import jax
+from jax.experimental.shard_map import shard_map
+def run(mesh, xs):
+    f = shard_map(lambda x: float(x), mesh=mesh, in_specs=None,
+                  out_specs=None)
+    return f(xs)
+"""
+    assert rules_of(src) == ["R3"]
+
+
+def test_r3_accepts_closure_config_branching():
+    # Branching on closure config (not a tracer) is the engines' idiom.
+    src = """
+import jax.numpy as jnp
+def build(trivial):
+    def round_step(carry, t):
+        mask = jnp.ones((4,), bool)
+        if not trivial:
+            mask = jnp.logical_not(mask)
+        out = jnp.where(mask, carry, 0.0)
+        return out, out
+    return round_step
+"""
+    assert rules_of(src) == []
+
+
+def test_r3_ignores_host_loops():
+    # float()/np on traced-looking values OUTSIDE traced scopes is the
+    # host reference loop's job.
+    src = """
+import numpy as np
+def run_host(xs):
+    total = float(np.asarray(xs).sum())
+    return total
+"""
+    assert rules_of(src) == []
+
+
+# ---------------------------------------------------------------------------
+# R4 registry coverage
+# ---------------------------------------------------------------------------
+
+
+def test_r4_flags_registry_without_keyerror():
+    src = """
+MY_REGISTRY = {"a": 1}
+def make_thing(name):
+    return MY_REGISTRY[name]
+"""
+    assert rules_of(src) == ["R4"]
+
+
+def test_r4_accepts_registry_with_keyerror():
+    src = """
+MY_REGISTRY = {"a": 1}
+def make_thing(name):
+    if name not in MY_REGISTRY:
+        raise KeyError(f"unknown {name!r}; known: {sorted(MY_REGISTRY)}")
+    return MY_REGISTRY[name]
+"""
+    assert rules_of(src) == []
+
+
+def test_r4_flags_unvalidated_runspec_field():
+    src = """
+import dataclasses
+@dataclasses.dataclass(frozen=True)
+class RunSpec:
+    rounds: int = 1
+    seed: int = 0
+    def resolved(self):
+        if self.rounds < 1:
+            raise ValueError("rounds")
+        return self
+    def to_dict(self):
+        return dataclasses.asdict(self)
+    @classmethod
+    def from_dict(cls, d):
+        unknown = set(d) - {"rounds", "seed"}
+        if unknown:
+            raise KeyError(f"unknown {unknown}")
+        return cls(**d)
+"""
+    findings = lint_source(src)
+    assert [f.rule for f in findings] == ["R4"]
+    assert "'seed'" in findings[0].message
+
+
+def test_r4_flags_lossy_to_dict():
+    src = """
+class RunSpec:
+    rounds: int = 1
+    def resolved(self):
+        return self.rounds and self
+    def to_dict(self):
+        return {}
+    @classmethod
+    def from_dict(cls, d):
+        raise KeyError(d)
+"""
+    findings = lint_source(src)
+    assert any("dropped by to_dict" in f.message for f in findings)
+
+
+# ---------------------------------------------------------------------------
+# inline disables
+# ---------------------------------------------------------------------------
+
+
+def test_inline_disable_silences_the_line():
+    src = """
+import jax
+def f(key):
+    a = jax.random.uniform(key, (3,))
+    b = jax.random.normal(key, (3,))  # reprolint: disable=R1 -- fixture
+    return a + b
+"""
+    assert rules_of(src) == []
+
+
+def test_inline_disable_is_rule_specific():
+    src = """
+import jax
+def f(key):
+    a = jax.random.uniform(key, (3,))
+    b = jax.random.normal(key, (3,))  # reprolint: disable=R2 -- wrong rule
+    return a + b
+"""
+    assert rules_of(src) == ["R1"]
+
+
+# ---------------------------------------------------------------------------
+# the real tree + CLI + baseline pins
+# ---------------------------------------------------------------------------
+
+
+def test_src_repro_is_clean_modulo_baseline():
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", "src/repro"],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_cli_exits_nonzero_on_violations(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text(
+        "import jax\n"
+        "def f(key):\n"
+        "    a = jax.random.uniform(key, (3,))\n"
+        "    b = jax.random.normal(key, (3,))\n"
+        "    return a + b\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "tools.reprolint", str(bad)],
+        cwd=REPO, capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "R1" in proc.stdout
+
+
+def test_rule_catalogue_has_rationale_and_fixit():
+    assert set(RULES) == {"R1", "R2", "R3", "R4"}
+    for rule in RULES.values():
+        assert rule.rationale and rule.fixit and rule.title
+
+
+# The committed baseline may only shrink: these pins are the ratchet.
+# Raising either number requires editing this test (a reviewed decision),
+# not just rerunning --update-baseline.
+BASELINE_MAX_FINDINGS = 0
+BASELINE_MAX_DISABLES = 1
+
+
+def test_baseline_only_shrinks():
+    baseline = load_baseline(DEFAULT_BASELINE)
+    assert len(baseline["findings"]) <= BASELINE_MAX_FINDINGS, (
+        "new waived findings in tools/reprolint/baseline.json; fix the "
+        "code instead of growing the baseline")
+    assert sum(baseline["disables"].values()) <= BASELINE_MAX_DISABLES, (
+        "new inline `# reprolint: disable=` exemptions; fix the code or "
+        "raise the pin in a reviewed change")
+
+
+def test_baseline_file_is_valid_json():
+    data = json.loads(DEFAULT_BASELINE.read_text())
+    assert set(data) == {"findings", "disables"}

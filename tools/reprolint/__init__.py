@@ -1,0 +1,175 @@
+"""reprolint — AST-based contract checker for the parity-critical round path.
+
+Every engine-parity guarantee in this repo rests on conventions that are
+invisible to the type checker: derived ``fold_in`` PRNG streams, Mosaic-safe
+kernel idioms, no host sync inside traced round bodies, and fail-fast
+registries.  reprolint turns those conventions into machine-checked rules:
+
+  R1 key-discipline     every ``jax.random.*`` sampler consumes a key that
+                        was split/fold_in-derived in the same function or
+                        received as a parameter; no key feeds two samplers;
+                        ``fold_in`` literals come from the ``core/keys.py``
+                        KEY_FOLD registry.
+  R2 mosaic-safety      inside ``kernels/`` Pallas bodies: no 1-D iota, no
+                        gather/``take``/``argsort``, no float reduction
+                        directly over a padded ref block.
+  R3 jit-hygiene        inside ``round_step`` / ``lax.scan`` / ``shard_map``
+                        bodies: no ``.item()``/``float()``/``int()``/
+                        ``bool()`` on traced values, no ``np.*`` math on
+                        them, no Python branching on tracers.
+  R4 registry-coverage  every RunSpec field is validated in ``resolved()``
+                        and survives the JSON round-trip; every registry has
+                        a fail-fast ``KeyError`` lookup path.
+
+Usage (see docs/static_analysis.md)::
+
+    PYTHONPATH=src python -m tools.reprolint src/repro
+
+A finding is silenced inline with ``# reprolint: disable=R1 -- reason`` on
+the flagged line; inline disables are tallied against the committed
+baseline (tools/reprolint/baseline.json) so they can only shrink without a
+deliberate ``--update-baseline``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+__all__ = [
+    "Finding", "Rule", "RULES", "register_rule", "SourceFile", "Project",
+    "lint_project", "load_project", "lint_source",
+]
+
+_DISABLE_RE = re.compile(
+    r"#\s*reprolint:\s*disable=([A-Za-z0-9,\s]+?)(?:\s*--\s*(?P<reason>.*))?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str          # "R1".."R4"
+    path: str          # path as given (relative to the lint root's parent)
+    line: int
+    col: int
+    message: str
+
+    def fingerprint(self) -> tuple:
+        """Baseline identity: line numbers drift, messages rarely do."""
+        return (self.rule, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    """A registered check.  ``check`` sees the whole project (multi-file
+    rules like R2's cross-module kernel closure need more than one file)."""
+
+    name: str
+    title: str
+    rationale: str     # why the contract exists (one short paragraph)
+    fixit: str         # how to fix a finding (one short hint)
+    check: Callable[["Project"], List[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def register_rule(rule: Rule) -> Rule:
+    if rule.name in RULES:
+        raise KeyError(f"rule {rule.name!r} already registered")
+    RULES[rule.name] = rule
+    return rule
+
+
+def get_rule(name: str) -> Rule:
+    if name not in RULES:
+        raise KeyError(f"unknown rule {name!r}; registered: {sorted(RULES)}")
+    return RULES[name]
+
+
+class SourceFile:
+    """A parsed source file plus its inline-disable map."""
+
+    def __init__(self, path: str, source: str):
+        self.path = path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        # line -> set of rule names disabled on that line
+        self.disabled: Dict[int, set] = {}
+        for lineno, text in enumerate(source.splitlines(), start=1):
+            m = _DISABLE_RE.search(text)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                self.disabled[lineno] = rules
+
+    def is_disabled(self, rule: str, line: int) -> bool:
+        return rule in self.disabled.get(line, ())
+
+
+class Project:
+    """The set of files one lint invocation covers."""
+
+    def __init__(self, files: Sequence[SourceFile]):
+        self.files = list(files)
+
+    def kernels_files(self) -> List[SourceFile]:
+        return [f for f in self.files
+                if "kernels/" in f.path.replace("\\", "/")]
+
+
+def load_project(paths: Sequence[str]) -> Project:
+    """Collect ``.py`` files under each path (file or directory)."""
+    files: List[SourceFile] = []
+    for p in paths:
+        root = Path(p)
+        if root.is_file():
+            candidates = [root]
+        elif root.is_dir():
+            candidates = sorted(root.rglob("*.py"))
+        else:
+            raise FileNotFoundError(f"no such file or directory: {p}")
+        for f in candidates:
+            files.append(SourceFile(str(f), f.read_text()))
+    return Project(files)
+
+
+def lint_project(project: Project,
+                 rules: Optional[Sequence[str]] = None):
+    """Run rules over the project.
+
+    Returns ``(findings, disabled)``: findings that are live, and findings
+    silenced by an inline ``# reprolint: disable=`` comment (still counted
+    — the baseline pins how many disables exist per rule).
+    """
+    by_path = {f.path: f for f in project.files}
+    live: List[Finding] = []
+    disabled: List[Finding] = []
+    for name in sorted(rules if rules is not None else RULES):
+        rule = get_rule(name)
+        for finding in rule.check(project):
+            sf = by_path.get(finding.path)
+            if sf is not None and sf.is_disabled(finding.rule, finding.line):
+                disabled.append(finding)
+            else:
+                live.append(finding)
+    live.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    disabled.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return live, disabled
+
+
+def lint_source(source: str, path: str = "<string>",
+                rules: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Lint one in-memory source string (test fixtures)."""
+    project = Project([SourceFile(path, source)])
+    live, _ = lint_project(project, rules=rules)
+    return live
+
+
+# Importing registers the built-in rules.
+from . import rules as _rules  # noqa: E402,F401

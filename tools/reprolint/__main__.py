@@ -1,0 +1,96 @@
+"""CLI: ``python -m tools.reprolint [paths...]``.
+
+Exit codes: 0 clean (modulo baseline), 1 findings / disable overflow,
+2 usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import RULES, lint_project, load_project
+from .baseline import (DEFAULT_BASELINE, disable_overflow, load_baseline,
+                       save_baseline, split_baselined)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST contract checker for the parity-critical round "
+                    "path (rules R1-R4; see docs/static_analysis.md)")
+    ap.add_argument("paths", nargs="*", default=["src/repro"],
+                    help="files or directories to lint (default: src/repro)")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="baseline JSON (default: tools/reprolint/"
+                         "baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="report every finding, ignoring the baseline")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to the current findings + "
+                         "inline-disable tally")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated subset of rules to run "
+                         f"(default: all of {sorted(RULES)})")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            rule = RULES[name]
+            print(f"{name} ({rule.title})")
+            print(f"  why: {rule.rationale}")
+            print(f"  fix: {rule.fixit}")
+        return 0
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+        unknown = [r for r in rules if r not in RULES]
+        if unknown:
+            print(f"unknown rules {unknown}; registered: {sorted(RULES)}",
+                  file=sys.stderr)
+            return 2
+
+    try:
+        project = load_project(args.paths)
+    except (FileNotFoundError, SyntaxError) as e:
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
+
+    findings, disabled = lint_project(project, rules=rules)
+
+    if args.update_baseline:
+        data = save_baseline(args.baseline, findings, disabled)
+        print(f"baseline updated: {len(data['findings'])} waived "
+              f"finding(s), disables={data['disables']} "
+              f"-> {args.baseline}")
+        return 0
+
+    baseline = ({"findings": [], "disables": {}} if args.no_baseline
+                else load_baseline(args.baseline))
+    new, waived = split_baselined(findings, baseline)
+    overflow = disable_overflow(disabled, baseline)
+
+    for f in new:
+        print(f.render())
+    failed_rules = sorted({f.rule for f in new})
+    for name in failed_rules:
+        rule = RULES[name]
+        print(f"\n{name} ({rule.title}): {rule.rationale}")
+        print(f"  fix: {rule.fixit}")
+    for rule, (count, allowed) in overflow.items():
+        print(f"\n{rule}: {count} inline disable(s), baseline allows "
+              f"{allowed}; remove the new exemption or run "
+              f"--update-baseline deliberately")
+
+    n_files = len(project.files)
+    summary = (f"reprolint: {n_files} file(s), {len(new)} new finding(s), "
+               f"{len(waived)} baselined, {len(disabled)} inline-disabled")
+    print(("\n" if new or overflow else "") + summary)
+    return 1 if new or overflow else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

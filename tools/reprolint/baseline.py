@@ -1,0 +1,76 @@
+"""Committed reprolint baseline: waived findings + inline-disable tally.
+
+The baseline file (``tools/reprolint/baseline.json``) records
+
+* ``findings`` — pre-existing findings waived without a code change,
+  matched by ``(rule, path, message)`` so they survive line drift; and
+* ``disables`` — how many inline ``# reprolint: disable=`` exemptions
+  exist per rule.
+
+Both may only shrink organically; growing either requires an explicit
+``--update-baseline`` run (and a reviewer seeing the diff).
+"""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Dict, List, Sequence, Tuple
+
+from . import Finding
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+def load_baseline(path: Path) -> dict:
+    if not path.exists():
+        return {"findings": [], "disables": {}}
+    data = json.loads(path.read_text())
+    data.setdefault("findings", [])
+    data.setdefault("disables", {})
+    return data
+
+
+def save_baseline(path: Path, findings: Sequence[Finding],
+                  disabled: Sequence[Finding]) -> dict:
+    data = {
+        "findings": [
+            {"rule": f.rule, "path": f.path, "line": f.line,
+             "message": f.message}
+            for f in findings
+        ],
+        "disables": dict(sorted(Counter(f.rule for f in disabled).items())),
+    }
+    path.write_text(json.dumps(data, indent=1) + "\n")
+    return data
+
+
+def split_baselined(findings: Sequence[Finding],
+                    baseline: dict) -> Tuple[List[Finding], List[Finding]]:
+    """Partition findings into (new, waived-by-baseline).
+
+    Each baseline entry waives at most one live finding (a multiset
+    match), so duplicating a violation immediately surfaces the copy.
+    """
+    budget = Counter(
+        (e["rule"], e["path"], e["message"]) for e in baseline["findings"])
+    new: List[Finding] = []
+    waived: List[Finding] = []
+    for f in findings:
+        fp = f.fingerprint()
+        if budget.get(fp, 0) > 0:
+            budget[fp] -= 1
+            waived.append(f)
+        else:
+            new.append(f)
+    return new, waived
+
+
+def disable_overflow(disabled: Sequence[Finding],
+                     baseline: dict) -> Dict[str, Tuple[int, int]]:
+    """rules whose inline-disable count exceeds the baselined count."""
+    current = Counter(f.rule for f in disabled)
+    allowed = baseline["disables"]
+    return {rule: (count, int(allowed.get(rule, 0)))
+            for rule, count in sorted(current.items())
+            if count > int(allowed.get(rule, 0))}

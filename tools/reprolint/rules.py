@@ -1,0 +1,687 @@
+"""Built-in reprolint rules R1–R4.
+
+Each rule is a whole-project check returning :class:`Finding`s.  The AST
+analyses are deliberately conservative: they encode the repo's documented
+idioms (DESIGN.md PRNG contract, docs/kernels.md Mosaic catalogue) rather
+than general dataflow, so a finding is almost always a genuine contract
+violation and the escape hatch is an inline disable with a reason.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from . import Finding, Project, Rule, SourceFile, register_rule
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+
+def qualname(node: ast.AST) -> Optional[str]:
+    """Dotted name of a Name/Attribute chain ('jax.random.fold_in')."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def root_name(node: ast.AST) -> Optional[str]:
+    """Base Name of a Name/Attribute/Subscript chain ('carry.key' -> carry)."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def names_in(node: ast.AST) -> Set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def param_names(fn: ast.AST) -> Set[str]:
+    a = fn.args
+    params = [*a.posonlyargs, *a.args, *a.kwonlyargs]
+    if a.vararg:
+        params.append(a.vararg)
+    if a.kwarg:
+        params.append(a.kwarg)
+    return {p.arg for p in params}
+
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+def function_scopes(tree: ast.AST):
+    """Yield every function/lambda node (module handled separately)."""
+    for node in ast.walk(tree):
+        if isinstance(node, _FUNC_NODES):
+            yield node
+
+
+def scope_statements(scope: ast.AST) -> List[ast.stmt]:
+    if isinstance(scope, ast.Lambda):
+        return [ast.Expr(value=scope.body)]
+    return list(scope.body)
+
+
+def target_names(target: ast.AST) -> Set[str]:
+    out: Set[str] = set()
+    for n in ast.walk(target):
+        if isinstance(n, ast.Name):
+            out.add(n.id)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# R1 — key discipline
+# ---------------------------------------------------------------------------
+
+# jax.random callables that CONSUME the stream passed as first argument.
+R1_SAMPLERS = frozenset({
+    "ball", "bernoulli", "beta", "binomial", "bits", "categorical", "cauchy",
+    "chisquare", "choice", "dirichlet", "double_sided_maxwell", "exponential",
+    "gamma", "geometric", "gumbel", "laplace", "loggamma", "logistic",
+    "lognormal", "maxwell", "multivariate_normal", "normal", "orthogonal",
+    "pareto", "permutation", "poisson", "rademacher", "randint", "rayleigh",
+    "t", "triangular", "truncated_normal", "uniform", "wald", "weibull_min",
+})
+# ``split`` also consumes its argument (the parent stream must not be reused
+# after splitting); ``fold_in`` does NOT — deriving side streams off a key
+# that is also consumed once is the repo's documented derived-stream idiom.
+R1_DERIVERS = frozenset({"split", "fold_in", "PRNGKey", "key", "clone",
+                         "wrap_key_data"})
+
+
+def _jax_random_fn(call: ast.Call) -> Optional[str]:
+    q = qualname(call.func)
+    if q and (q.startswith("jax.random.") or q.startswith("jrandom.")
+              or q.startswith("jr.")):
+        return q.rsplit(".", 1)[1]
+    return None
+
+
+class _R1Scope:
+    """Ordered walk of one function scope tracking key derivation/use."""
+
+    def __init__(self, sf: SourceFile, params: Set[str], skip_literals: bool):
+        self.sf = sf
+        self.params = params
+        self.derived: Set[str] = set()
+        self.consumed: Dict[str, int] = {}
+        self.findings: List[Finding] = []
+        self.skip_literals = skip_literals
+
+    # -- classification ----------------------------------------------------
+
+    def _derives(self, value: ast.AST) -> bool:
+        """Does binding a name to ``value`` yield an in-scope-derived key?"""
+        if isinstance(value, ast.Call):
+            fn = _jax_random_fn(value)
+            return fn in R1_DERIVERS
+        if isinstance(value, (ast.Attribute, ast.Subscript, ast.Name)):
+            root = root_name(value)
+            return root in self.params or root in self.derived
+        if isinstance(value, (ast.Tuple, ast.List)):
+            return all(self._derives(e) for e in value.elts)
+        return False
+
+    def _consume(self, expr: ast.AST, call: ast.Call) -> None:
+        """Record the stream ``expr`` being consumed by ``call``."""
+        if isinstance(expr, ast.Name):
+            token = expr.id
+            known = token in self.params or token in self.derived
+        elif isinstance(expr, (ast.Attribute, ast.Subscript)):
+            token = ast.dump(expr)
+            root = root_name(expr)
+            known = root in self.params or root in self.derived
+        elif isinstance(expr, ast.Call):
+            # inline-derived key (fold_in(...)/split(...)[i]): consumed once
+            # by construction, nothing to track.
+            return
+        else:
+            token, known = ast.dump(expr), False
+        if not known:
+            self.findings.append(Finding(
+                "R1", self.sf.path, call.lineno, call.col_offset,
+                f"key {ast.unparse(expr)!r} is neither a parameter of this "
+                f"function nor derived here via jax.random.split/fold_in"))
+        self.consumed[token] = self.consumed.get(token, 0) + 1
+        if self.consumed[token] == 2:
+            self.findings.append(Finding(
+                "R1", self.sf.path, call.lineno, call.col_offset,
+                f"key {ast.unparse(expr)!r} consumed by more than one "
+                f"jax.random call in this scope (derive side streams with "
+                f"fold_in, or split further)"))
+
+    # -- traversal ---------------------------------------------------------
+
+    def visit(self, node: ast.AST) -> None:
+        if isinstance(node, _FUNC_NODES):
+            return                      # nested scopes analyzed separately
+        if isinstance(node, ast.Call):
+            self._visit_call(node)      # recurses into children itself
+            return
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            self._visit_assign(node)
+            return
+        if isinstance(node, ast.For):
+            self.visit(node.iter)
+            if self._derives(node.iter):
+                self.derived |= target_names(node.target)
+            for stmt in [*node.body, *node.orelse]:
+                self.visit(stmt)
+            return
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+    def _visit_assign(self, node: ast.AST) -> None:
+        if node.value is not None:
+            self.visit(node.value)
+        targets = (node.targets if isinstance(node, ast.Assign)
+                   else [node.target])
+        value = node.value
+        derives = value is not None and self._derives(value)
+        # split returning a tuple unpacked over names: every part is derived
+        for t in targets:
+            for name in target_names(t):
+                if derives:
+                    self.derived.add(name)
+                else:
+                    self.derived.discard(name)
+                # rebinding starts a fresh stream under the old name
+                self.consumed.pop(name, None)
+
+    def _visit_call(self, node: ast.Call) -> None:
+        fn = _jax_random_fn(node)
+        if fn == "fold_in" and not self.skip_literals:
+            data = node.args[1] if len(node.args) > 1 else None
+            if (isinstance(data, ast.Constant)
+                    and isinstance(data.value, int)
+                    and not isinstance(data.value, bool)):
+                self.findings.append(Finding(
+                    "R1", self.sf.path, node.lineno, node.col_offset,
+                    f"magic fold_in literal {data.value!r}; use a named "
+                    f"constant from the core/keys.py KEY_FOLD registry"))
+        if fn in R1_SAMPLERS or fn == "split":
+            if node.args:
+                self._consume(node.args[0], node)
+        for child in ast.iter_child_nodes(node):
+            self.visit(child)
+
+
+def check_r1(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in project.files:
+        # keys.py defines the registry itself; its integers are the source
+        # of truth, not magic numbers.
+        skip_literals = sf.path.replace("\\", "/").endswith("core/keys.py")
+        scopes: List[Tuple[ast.AST, Set[str]]] = [(sf.tree, set())]
+        scopes += [(fn, param_names(fn)) for fn in function_scopes(sf.tree)]
+        for scope, params in scopes:
+            s = _R1Scope(sf, params, skip_literals)
+            for stmt in scope_statements(scope) if scope is not sf.tree \
+                    else sf.tree.body:
+                s.visit(stmt)
+            findings.extend(s.findings)
+    return findings
+
+
+register_rule(Rule(
+    name="R1",
+    title="key-discipline",
+    rationale=(
+        "Engine bit-parity depends on every PRNG stream being derived "
+        "(split/fold_in) from exactly one parent and consumed exactly once; "
+        "a reused key correlates draws across rounds/engines, and a magic "
+        "fold_in integer can silently alias two streams."),
+    fixit=(
+        "split/fold_in the key inside the function (or accept it as a "
+        "parameter), give each jax.random call its own sub-key, and "
+        "register fold_in constants in src/repro/core/keys.py"),
+    check=check_r1,
+))
+
+
+# ---------------------------------------------------------------------------
+# R2 — Mosaic safety inside Pallas kernel bodies
+# ---------------------------------------------------------------------------
+
+R2_REDUCERS = frozenset({"sum", "mean", "max", "min", "prod"})
+R2_GATHERS = frozenset({"take", "take_along_axis", "gather", "argsort"})
+_KERNEL_NAME_RE = re.compile(r"(^|_)kernel$|^_.*_kernel$|_kernel$")
+
+
+def _kernel_index(project: Project) -> Dict[str, Tuple[SourceFile, ast.AST]]:
+    """funcname -> (file, FunctionDef) over all kernels/ modules."""
+    index: Dict[str, Tuple[SourceFile, ast.AST]] = {}
+    for sf in project.kernels_files():
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                index[node.name] = (sf, node)
+    return index
+
+
+def _unwrap_partial(node: ast.AST) -> ast.AST:
+    """functools.partial(f, ...) -> f."""
+    if isinstance(node, ast.Call):
+        q = qualname(node.func)
+        if q in ("functools.partial", "partial") and node.args:
+            return node.args[0]
+    return node
+
+
+def _kernel_roots(project: Project,
+                  index: Dict[str, Tuple[SourceFile, ast.AST]]) -> Set[str]:
+    roots: Set[str] = set()
+    for name in index:
+        if name.endswith("_kernel"):
+            roots.add(name)
+    for sf in project.kernels_files():
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = qualname(node.func)
+            if q and q.rsplit(".", 1)[-1] == "pallas_call" and node.args:
+                body = _unwrap_partial(node.args[0])
+                n = qualname(body)
+                if n:
+                    roots.add(n.rsplit(".", 1)[-1])
+    return roots & set(index)
+
+
+def _kernel_closure(index, roots: Set[str]) -> Set[str]:
+    """Transitive same-package callees, incl. function-valued arguments."""
+    seen: Set[str] = set()
+    todo = list(roots)
+    while todo:
+        name = todo.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        _, fn = index[name]
+        for node in ast.walk(fn):
+            cands: List[Optional[str]] = []
+            if isinstance(node, ast.Call):
+                cands.append(qualname(node.func))
+                for arg in [*node.args, *[k.value for k in node.keywords]]:
+                    cands.append(qualname(arg))
+            for q in cands:
+                if not q:
+                    continue
+                tail = q.rsplit(".", 1)[-1]
+                if tail in index and tail not in seen:
+                    todo.append(tail)
+    return seen
+
+
+def _check_kernel_fn(sf: SourceFile, fn: ast.AST,
+                     findings: List[Finding]) -> None:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        q = qualname(node.func)
+        tail = q.rsplit(".", 1)[-1] if q else (
+            node.func.attr if isinstance(node.func, ast.Attribute) else None)
+        if tail is None:
+            continue
+        if tail == "iota":
+            findings.append(Finding(
+                "R2", sf.path, node.lineno, node.col_offset,
+                "lax.iota is 1-D; Mosaic rejects 1-D iota inside TPU "
+                "kernels — use a >=2-D broadcasted_iota"))
+        elif tail == "arange":
+            findings.append(Finding(
+                "R2", sf.path, node.lineno, node.col_offset,
+                "arange lowers to a 1-D iota, which Mosaic rejects inside "
+                "TPU kernels — use a >=2-D broadcasted_iota"))
+        elif tail == "broadcasted_iota":
+            shape = node.args[1] if len(node.args) > 1 else None
+            if isinstance(shape, (ast.Tuple, ast.List)) and \
+                    len(shape.elts) == 1:
+                findings.append(Finding(
+                    "R2", sf.path, node.lineno, node.col_offset,
+                    "1-D broadcasted_iota; Mosaic requires >=2-D iota "
+                    "inside TPU kernels (make it (n, 1) and reshape)"))
+        elif tail in R2_GATHERS:
+            findings.append(Finding(
+                "R2", sf.path, node.lineno, node.col_offset,
+                f"{tail} is a gather/scatter Mosaic cannot lower inside "
+                f"TPU kernels — restructure as masked arithmetic or a "
+                f"compare-exchange network (docs/kernels.md)"))
+        elif tail in R2_REDUCERS:
+            if isinstance(node.func, ast.Attribute) and \
+                    qualname(node.func.value) not in ("jnp", "np", "jax.numpy",
+                                                      "math", "jax.lax", "lax"):
+                subject = node.func.value          # x.sum()
+            else:
+                subject = node.args[0] if node.args else None
+            if subject is not None and _reads_ref_directly(subject):
+                findings.append(Finding(
+                    "R2", sf.path, node.lineno, node.col_offset,
+                    f"{tail} reduces directly over a padded ref block; "
+                    f"read the block into a local and reduce the true "
+                    f"length ([:n]) instead (docs/kernels.md)"))
+
+
+def _reads_ref_directly(node: ast.AST) -> bool:
+    for n in ast.walk(node):
+        if isinstance(n, ast.Subscript):
+            base = n.value
+            if isinstance(base, ast.Name) and base.id.endswith("_ref"):
+                return True
+    return False
+
+
+def check_r2(project: Project) -> List[Finding]:
+    index = _kernel_index(project)
+    if not index:
+        return []
+    roots = _kernel_roots(project, index)
+    findings: List[Finding] = []
+    for name in sorted(_kernel_closure(index, roots)):
+        sf, fn = index[name]
+        _check_kernel_fn(sf, fn, findings)
+    return findings
+
+
+register_rule(Rule(
+    name="R2",
+    title="mosaic-safety",
+    rationale=(
+        "Pallas kernel bodies must stay inside the Mosaic-TPU-lowerable "
+        "subset (docs/kernels.md): no 1-D iota, no gathers, no argsort, and "
+        "float reductions over the true length, not the padded block — "
+        "violations either fail to lower on TPU or silently break "
+        "XLA-vs-Pallas bitwise parity."),
+    fixit=(
+        "use >=2-D broadcasted_iota, replace gathers with masked "
+        "arithmetic / compare-exchange networks, and reduce over [:n] "
+        "after reading the ref into a local"),
+    check=check_r2,
+))
+
+
+# ---------------------------------------------------------------------------
+# R3 — jit hygiene inside traced round bodies
+# ---------------------------------------------------------------------------
+
+R3_TRACED_WRAPPERS = {"scan": 0, "while_loop": 1, "shard_map": 0,
+                      "fori_loop": 2}
+
+
+def _traced_roots(sf: SourceFile) -> List[ast.AST]:
+    by_name = {n.name: n for n in ast.walk(sf.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    roots: List[ast.AST] = [fn for name, fn in by_name.items()
+                            if name == "round_step"]
+    seen = {id(r) for r in roots}
+    for node in ast.walk(sf.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        q = qualname(node.func)
+        tail = q.rsplit(".", 1)[-1] if q else None
+        if tail not in R3_TRACED_WRAPPERS:
+            continue
+        pos = R3_TRACED_WRAPPERS[tail]
+        if len(node.args) <= pos:
+            continue
+        body = _unwrap_partial(node.args[pos])
+        target: Optional[ast.AST] = None
+        if isinstance(body, ast.Lambda):
+            target = body
+        else:
+            n = qualname(body)
+            if n:
+                target = by_name.get(n.rsplit(".", 1)[-1])
+        if target is not None and id(target) not in seen:
+            seen.add(id(target))
+            roots.append(target)
+    return roots
+
+
+class _R3Scope:
+    def __init__(self, sf: SourceFile, root: ast.AST):
+        self.sf = sf
+        self.findings: List[Finding] = []
+        self.tainted: Set[str] = param_names(root) if not isinstance(
+            root, ast.Lambda) else {a.arg for a in root.args.args}
+        # params of nested traced closures are tracers too
+        for fn in ast.walk(root):
+            if isinstance(fn, _FUNC_NODES) and fn is not root:
+                self.tainted |= (param_names(fn)
+                                 if not isinstance(fn, ast.Lambda)
+                                 else {a.arg for a in fn.args.args})
+
+    def _expr_tainted(self, node: ast.AST) -> bool:
+        if names_in(node) & self.tainted:
+            return True
+        for n in ast.walk(node):
+            if isinstance(n, ast.Call):
+                q = qualname(n.func)
+                if q and (q.startswith("jnp.") or q.startswith("jax.")
+                          or q.startswith("lax.")):
+                    return True
+        return False
+
+    def run(self, root: ast.AST) -> None:
+        body = scope_statements(root)
+        for stmt in body:
+            self._visit(stmt)
+
+    def _visit(self, node: ast.AST) -> None:
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            if node.value is not None:
+                self._check_expr(node.value)
+                tainted = self._expr_tainted(node.value)
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    for name in target_names(t):
+                        (self.tainted.add(name) if tainted
+                         else self.tainted.discard(name))
+            return
+        if isinstance(node, (ast.If, ast.While)):
+            if names_in(node.test) & self.tainted:
+                kind = "if" if isinstance(node, ast.If) else "while"
+                self.findings.append(Finding(
+                    "R3", self.sf.path, node.lineno, node.col_offset,
+                    f"Python `{kind}` on a traced value inside a "
+                    f"round_step/scan/shard_map body; use jnp.where / "
+                    f"lax.cond (branching on tracers raises at trace time "
+                    f"or silently specializes)"))
+            self._check_expr(node.test)
+            for stmt in [*node.body, *node.orelse]:
+                self._visit(stmt)
+            return
+        if isinstance(node, _FUNC_NODES):
+            for stmt in scope_statements(node):
+                self._visit(stmt)
+            return
+        for n in ast.iter_child_nodes(node):
+            if isinstance(n, ast.expr):
+                self._check_expr(n)
+            else:
+                self._visit(n)
+
+    def _check_expr(self, node: ast.AST) -> None:
+        for n in ast.walk(node):
+            if isinstance(n, _FUNC_NODES):
+                continue
+            if not isinstance(n, ast.Call):
+                continue
+            if isinstance(n.func, ast.Attribute) and n.func.attr == "item":
+                self.findings.append(Finding(
+                    "R3", self.sf.path, n.lineno, n.col_offset,
+                    ".item() forces a host sync inside a traced body; "
+                    "keep the value on-device (jnp scalar) instead"))
+                continue
+            q = qualname(n.func)
+            if q in ("float", "int", "bool") and any(
+                    self._expr_tainted(a) for a in n.args):
+                self.findings.append(Finding(
+                    "R3", self.sf.path, n.lineno, n.col_offset,
+                    f"{q}() on a traced value forces a host sync inside a "
+                    f"traced body; use .astype(...) / jnp casts"))
+            elif q and (q.startswith("np.") or q.startswith("numpy.")) \
+                    and any(self._expr_tainted(a) for a in n.args):
+                self.findings.append(Finding(
+                    "R3", self.sf.path, n.lineno, n.col_offset,
+                    f"{q} on a traced value materializes it on host inside "
+                    f"a traced body; use the jnp equivalent"))
+
+
+def check_r3(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in project.files:
+        for root in _traced_roots(sf):
+            scope = _R3Scope(sf, root)
+            scope.run(root)
+            findings.extend(scope.findings)
+    return findings
+
+
+register_rule(Rule(
+    name="R3",
+    title="jit-hygiene",
+    rationale=(
+        "round_step and lax.scan/shard_map bodies are traced once and "
+        "executed compiled; host syncs (.item()/float()/np.*) either crash "
+        "at trace time or serialize the device stream, and Python branches "
+        "on tracers bake one branch into the compiled program."),
+    fixit=(
+        "keep round-path math in jnp/lax, replace Python branches on "
+        "traced values with jnp.where/lax.cond, and convert to host types "
+        "only outside the compiled chunk"),
+    check=check_r3,
+))
+
+
+# ---------------------------------------------------------------------------
+# R4 — registry / RunSpec coverage
+# ---------------------------------------------------------------------------
+
+_REGISTRY_NAME_RE = re.compile(r"REGISTRY$|^STALENESS_DISCOUNTS$|^KEY_FOLDS$")
+
+
+def _module_raises_keyerror(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Raise) and node.exc is not None:
+            exc = node.exc
+            name = None
+            if isinstance(exc, ast.Call):
+                name = qualname(exc.func)
+            elif isinstance(exc, ast.Name):
+                name = exc.id
+            if name == "KeyError":
+                return True
+    return False
+
+
+def _check_registries(sf: SourceFile, findings: List[Finding]) -> None:
+    has_keyerror = _module_raises_keyerror(sf.tree)
+    for node in sf.tree.body:
+        flagged: Optional[Tuple[int, int, str]] = None
+        if isinstance(node, (ast.Assign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                if isinstance(t, ast.Name) and _REGISTRY_NAME_RE.search(t.id) \
+                        and isinstance(node.value, (ast.Dict, ast.Call)):
+                    flagged = (node.lineno, node.col_offset, t.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and node.name.startswith("register_"):
+            flagged = (node.lineno, node.col_offset, node.name)
+        if flagged and not has_keyerror:
+            line, col, name = flagged
+            findings.append(Finding(
+                "R4", sf.path, line, col,
+                f"registry {name!r} has no fail-fast KeyError lookup in "
+                f"this module; unknown names must raise KeyError listing "
+                f"the registered keys"))
+
+
+def _check_runspec(sf: SourceFile, findings: List[Finding]) -> None:
+    for node in sf.tree.body:
+        if not (isinstance(node, ast.ClassDef) and node.name == "RunSpec"):
+            continue
+        fields = [s.target.id for s in node.body
+                  if isinstance(s, ast.AnnAssign)
+                  and isinstance(s.target, ast.Name)]
+        methods = {m.name: m for m in node.body
+                   if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        resolved = methods.get("resolved")
+        if resolved is None:
+            findings.append(Finding(
+                "R4", sf.path, node.lineno, node.col_offset,
+                "RunSpec has no resolved() validation method"))
+        else:
+            covered: Set[str] = set()
+            for n in ast.walk(resolved):
+                if isinstance(n, ast.Attribute) and \
+                        isinstance(n.value, ast.Name) and n.value.id == "self":
+                    covered.add(n.attr)
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    covered.add(n.value)
+            for f in fields:
+                if f not in covered:
+                    findings.append(Finding(
+                        "R4", sf.path, resolved.lineno, resolved.col_offset,
+                        f"RunSpec field {f!r} is never validated in "
+                        f"resolved()"))
+        to_dict = methods.get("to_dict")
+        if to_dict is not None:
+            uses_asdict = any(
+                isinstance(n, ast.Call) and (qualname(n.func) or "").endswith(
+                    "asdict") for n in ast.walk(to_dict))
+            if not uses_asdict:
+                mentioned = {n.attr for n in ast.walk(to_dict)
+                             if isinstance(n, ast.Attribute)}
+                for f in fields:
+                    if f not in mentioned:
+                        findings.append(Finding(
+                            "R4", sf.path, to_dict.lineno,
+                            to_dict.col_offset,
+                            f"RunSpec field {f!r} is dropped by to_dict() "
+                            f"(not serialized, breaking the JSON "
+                            f"round-trip)"))
+        for name in ("to_dict", "from_dict"):
+            if name not in methods:
+                findings.append(Finding(
+                    "R4", sf.path, node.lineno, node.col_offset,
+                    f"RunSpec has no {name}() (JSON round-trip is part of "
+                    f"the spec contract)"))
+        if "from_dict" in methods and not _module_raises_keyerror(
+                methods["from_dict"]):
+            findings.append(Finding(
+                "R4", sf.path, methods["from_dict"].lineno,
+                methods["from_dict"].col_offset,
+                "RunSpec.from_dict() does not reject unknown fields with "
+                "a KeyError"))
+
+
+def check_r4(project: Project) -> List[Finding]:
+    findings: List[Finding] = []
+    for sf in project.files:
+        _check_registries(sf, findings)
+        _check_runspec(sf, findings)
+    return findings
+
+
+register_rule(Rule(
+    name="R4",
+    title="registry-coverage",
+    rationale=(
+        "The RunSpec/registry layer is the engines' shared contract: an "
+        "unvalidated field or a silent-KeyError registry turns a config "
+        "typo into a crash (or a wrong result) deep inside a compiled "
+        "loop instead of a readable error at build time."),
+    fixit=(
+        "validate every RunSpec field in resolved(), serialize all of them "
+        "in to_dict(), and give every registry a lookup that raises "
+        "KeyError listing the registered names"),
+    check=check_r4,
+))
