@@ -32,6 +32,13 @@ is where XLA compiles) for the three execution paths of one
   column reach N = 1e6 on both engines and N = 1e7 on the sharded engine
   (``--n-smoke-1e7``, a few rounds, existence proof not throughput).
 
+The N = 1e5 cells additionally run a ``sharded2d`` column: the same round
+on a two-axis ``(clients, model)`` mesh (``make_fed_mesh((0, 2))``), with
+each cohort client's parameters sharded over the ``model`` axis.  The
+per-cell ``mesh2d_over_1d_ratio`` (2-D rounds/s over 1-D sharded
+rounds/s) is gated in CI — on CPU the model axis buys no FLOPs, so the
+floor only bounds the overhead of the gather/slice/psum plumbing.
+
 Each engine cell also records the scale-accounting columns —
 ``n_staged_bytes`` (resident client-data bytes; 0 for synth),
 ``staged_bytes_per_client``, and ``selection_comm_bytes_per_round`` (the
@@ -72,7 +79,8 @@ from repro.core.fedstep import make_fed_round
 from repro.core.strategies import make_strategy
 from repro.data.pipeline import stage_client_arrays
 from repro.data.synthetic import SynthTask, make_synthetic_client_arrays
-from repro.launch.mesh import make_client_mesh
+from repro.launch.mesh import make_client_mesh, make_fed_mesh
+from repro.sharding.rules import model_specs
 from repro.models import softmax_reg
 from repro.models.softmax_reg import SoftmaxRegConfig
 from repro.optim import make_optimizer
@@ -132,13 +140,16 @@ def bench_vmapped(scenario: str, algo: str, rounds: int, cells: int,
 def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
                          n_classes: int = 10, samples: int = 64,
                          k: int = 10, seed: int = 0, synth: bool = False,
-                         topk_impl: str = "stream"):
+                         topk_impl: str = "stream", model_axis=None):
     """One synthetic N-scaling cell (vectorized data, no per-client loop).
 
     ``synth=True`` hands the engine a :class:`repro.data.SynthTask` instead
     of staged arrays: cohort batches are synthesized on demand inside the
     compiled loop, so device-resident client data is 0 bytes regardless of
     N — the path that makes the 1e6/1e7 cells possible at all.
+
+    ``model_axis`` (with a 2-D mesh naming it) additionally shards each
+    cohort client's parameters over that axis — the two-axis engine path.
     """
     if synth:
         staged = SynthTask(n_clients=n_clients, dim=dim, n_classes=n_classes,
@@ -163,11 +174,20 @@ def _build_nscale_engine(n_clients: int, mesh, *, dim: int = 32,
         engine = DeviceEngine(
             staged=staged, fed_round=make_fed_round(loss, opt), **common)
     else:
+        fkw, ekw = {}, {}
+        if model_axis is not None and model_axis in mesh.axis_names:
+            p_shapes = jax.eval_shape(common["init_params"],
+                                      jax.random.PRNGKey(0))
+            fkw = dict(model_axis=model_axis,
+                       param_specs=model_specs(p_shapes, mesh,
+                                               model_axis=model_axis))
+            ekw = dict(model_axis=model_axis)
         engine = ShardedEngine(
             mesh=mesh, axis="clients", staged=staged, n_clients=n_clients,
             topk_impl=topk_impl,
             fed_round=make_fed_round(loss, opt, cohort_axis="clients",
-                                     cohort_slots=k), **common)
+                                     cohort_slots=k, **fkw),
+            **ekw, **common)
     return engine
 
 
@@ -197,22 +217,33 @@ def bench_nscale(cells_spec, rounds: int, chunk: int) -> dict:
 
     ``cells_spec``: iterable of (n_clients, mode, engines, cell_rounds)
     with mode "staged" | "synth"; ``cell_rounds=None`` uses ``rounds``.
+    The ``sharded2d`` engine runs the same cell on a two-axis
+    ``(clients, model)`` mesh (skipped below 2 devices); its throughput
+    relative to the 1-D sharded cell is ``mesh2d_over_1d_ratio``.
     """
     mesh = make_client_mesh(axis_name="clients")
+    mesh2d = (make_fed_mesh((0, 2)) if jax.device_count() >= 2 else None)
     out = dict(devices=jax.device_count(),
                task=dict(dim=32, n_classes=10, samples_per_client=64, k=10),
                cells=[])
     for n, mode, engines, cell_rounds in cells_spec:
         r = cell_rounds or rounds
         cell = dict(n_clients=n, mode=mode)
-        for label, m in (("device", None), ("sharded", mesh)):
+        for label, m in (("device", None), ("sharded", mesh),
+                         ("sharded2d", mesh2d)):
             if label not in engines:
+                continue
+            if label == "sharded2d" and m is None:
+                print(f"  N={n:>8d} {mode:>6s} {label:>8s} skipped "
+                      f"(needs >= 2 devices)")
                 continue
             print(f"  N={n:>8d} {mode:>6s} {label:>8s} ...", end=" ",
                   flush=True)
             engine = None
             try:
-                engine = _build_nscale_engine(n, m, synth=(mode == "synth"))
+                engine = _build_nscale_engine(
+                    n, m, synth=(mode == "synth"),
+                    model_axis="model" if label == "sharded2d" else None)
                 cell[label] = _time_engine(engine, r, chunk)
                 cell[label]["n_staged_bytes"] = engine.n_staged_bytes
                 cell[label]["staged_bytes_per_client"] = round(
@@ -231,7 +262,19 @@ def bench_nscale(cells_spec, rounds: int, chunk: int) -> dict:
             cell["speedup_sharded_over_device"] = round(
                 cell["sharded"]["rounds_per_s"]
                 / cell["device"]["rounds_per_s"], 2)
+        if "rounds_per_s" in cell.get("sharded2d", {}) \
+                and "rounds_per_s" in cell.get("sharded", {}) \
+                and cell["sharded"]["rounds_per_s"] > 0:
+            cell["mesh2d_over_1d_ratio"] = round(
+                cell["sharded2d"]["rounds_per_s"]
+                / cell["sharded"]["rounds_per_s"], 3)
         out["cells"].append(cell)
+    ratios = [c["mesh2d_over_1d_ratio"] for c in out["cells"]
+              if "mesh2d_over_1d_ratio" in c]
+    if ratios:
+        # worst cell gates CI: the 2-D mesh must not cost more than the
+        # floor relative to pure client sharding on the same devices
+        out["mesh2d_over_1d_ratio"] = min(ratios)
     return out
 
 
@@ -281,9 +324,10 @@ def main(argv=None) -> dict:
     )
     if args.nscale or args.nscale_only:
         both = ("device", "sharded")
-        cells_spec = [(n, "staged", both, None)
+        with2d = both + ("sharded2d",)     # 2-D mesh column lives at N=1e5
+        cells_spec = [(n, "staged", with2d if n == 100_000 else both, None)
                       for n in (1_000, 10_000, 100_000) if n <= args.n_max]
-        cells_spec += [(n, "synth", both, None)
+        cells_spec += [(n, "synth", with2d if n == 100_000 else both, None)
                        for n in (100_000, 1_000_000) if n <= args.n_max]
         if args.n_smoke_1e7:
             # chunk + 2 rounds: one compile chunk plus a measurable tail

@@ -87,7 +87,8 @@ def make_fed_round(loss_fn: Callable, server_opt: Optimizer, *,
                    mode: str = "parallel", remat: bool = False,
                    param_shardings=None, acc_dtype=jnp.float32,
                    prox_mu: float = 0.0, cohort_axis: str = None,
-                   cohort_slots: int = None):
+                   cohort_slots: int = None, model_axis: str = None,
+                   param_specs=None):
     """Build the jittable round function.
 
     fed_round(params, opt_state, cohort_batch, weights, client_lr)
@@ -105,27 +106,93 @@ def make_fed_round(loss_fn: Callable, server_opt: Optimizer, *,
     weighted delta and metrics across shards.  ``cohort_slots`` is the real
     cohort size K the loss/grad-norm means are normalized by, matching the
     single-device ``losses.mean()`` over K slots.
+
+    ``model_axis`` (with ``cohort_axis``): second mesh axis carrying a
+    tensor-parallel split of the *stored* params and optimizer state,
+    whose per-leaf layout is ``param_specs`` (a P-tree from
+    ``sharding.rules.model_specs``).  The round all-gathers each sharded
+    leaf over ``model_axis`` (tiled, so the full array is reconstructed
+    bit-exactly), trains the local cohort slice at full width — every
+    model shard computes the identical replicated result — then slices
+    its own block back out of the weighted delta before the ``psum`` over
+    ``cohort_axis`` (slice and psum commute elementwise, so the stored
+    blocks stay bitwise slices of the 1-D layout), and applies the
+    elementwise server update blockwise.  Only the delta-norm needs an
+    extra ``psum`` over ``model_axis`` (partial sums of squares).
     """
     assert mode in ("parallel", "sequential"), mode
 
     if cohort_axis is not None:
         assert mode == "parallel", "sharded cohort execution is parallel-mode"
         assert cohort_slots is not None, "cohort_axis needs cohort_slots=K"
+        if model_axis is not None and param_specs is None:
+            raise ValueError("model_axis needs param_specs (a P-tree from "
+                             "sharding.rules.model_specs)")
+
+        def _model_dim(spec):
+            for i, entry in enumerate(spec):
+                if entry is None:
+                    continue
+                names = (entry,) if isinstance(entry, str) else tuple(entry)
+                if model_axis in names:
+                    return i
+            return None
+
+        def _gather_full(leaf, spec):
+            d = _model_dim(spec)
+            if d is None:
+                return leaf
+            return jax.lax.all_gather(leaf, model_axis, axis=d, tiled=True)
+
+        def _slice_block(full, blk_like, spec):
+            d = _model_dim(spec)
+            if d is None:
+                return full
+            blk = blk_like.shape[d]
+            return jax.lax.dynamic_slice_in_dim(
+                full, jax.lax.axis_index(model_axis) * blk, blk, axis=d)
 
         def fed_round_sharded(params, opt_state, cohort_batch, weights,
                               client_lr, slot_mask):
+            if model_axis is None:
+                p_full = params
+            else:
+                p_full = jax.tree.map(_gather_full, params, param_specs)
             deltas, losses, gnorms = jax.vmap(
-                lambda b: _local_sgd(loss_fn, params, b, client_lr, remat,
+                lambda b: _local_sgd(loss_fn, p_full, b, client_lr, remat,
                                      prox_mu=prox_mu)
             )(cohort_batch)
-            delta = jax.lax.psum(weighted_aggregate(deltas, weights),
-                                 cohort_axis)
             loss = jax.lax.psum((losses * slot_mask).sum(),
                                 cohort_axis) / cohort_slots
             gnorm = jax.lax.psum((gnorms * slot_mask).sum(),
                                  cohort_axis) / cohort_slots
-            dnorm = jnp.sqrt(sum(jnp.sum(x * x).astype(jnp.float32)
-                                 for x in jax.tree.leaves(delta)))
+            if model_axis is None:
+                delta = jax.lax.psum(weighted_aggregate(deltas, weights),
+                                     cohort_axis)
+                dnorm = jnp.sqrt(sum(jnp.sum(x * x).astype(jnp.float32)
+                                     for x in jax.tree.leaves(delta)))
+            else:
+                delta_full = weighted_aggregate(deltas, weights)
+                delta = jax.tree.map(
+                    lambda f, b, s: jax.lax.psum(_slice_block(f, b, s),
+                                                 cohort_axis),
+                    delta_full, params, param_specs)
+                # per-block partial sums of squares; replicated leaves are
+                # held on every model shard and must be counted once
+                d_leaves = jax.tree.leaves(delta)
+                d_specs = jax.tree.structure(delta).flatten_up_to(param_specs)
+                sq_sharded = sum(
+                    (jnp.sum(x * x).astype(jnp.float32)
+                     for x, s in zip(d_leaves, d_specs)
+                     if _model_dim(s) is not None),
+                    jnp.zeros((), jnp.float32))
+                sq_repl = sum(
+                    (jnp.sum(x * x).astype(jnp.float32)
+                     for x, s in zip(d_leaves, d_specs)
+                     if _model_dim(s) is None),
+                    jnp.zeros((), jnp.float32))
+                dnorm = jnp.sqrt(
+                    sq_repl + jax.lax.psum(sq_sharded, model_axis))
             updates, opt_state = server_opt.update(delta, opt_state, params)
             params = apply_updates(params, updates)
             return params, opt_state, RoundMetrics(loss=loss,

@@ -167,13 +167,17 @@ def stage_client_arrays(arrays: dict, counts: np.ndarray, *, mesh=None,
     quantum = shards * SHARD_PAD_QUANTUM
     n_pad = -(-n // quantum) * quantum
     nl = n_pad // shards
-    devices = list(mesh.devices.flat)
+    # (shards, replicas): each client-shard row lists the devices holding
+    # that block — one device on a 1-D mesh, the whole model column on a
+    # 2-D (clients, model) mesh (P(axis) replicates over unnamed axes)
+    ax_i = mesh.axis_names.index(axis)
+    dev_rows = np.moveaxis(mesh.devices, ax_i, 0).reshape(shards, -1)
     sharding = NamedSharding(mesh, P(axis))
     placed = {}
     for name, arr in arrays.items():
         arr = np.asarray(arr)
         blocks = []
-        for si, dev in enumerate(devices):
+        for si in range(shards):
             lo = si * nl
             m = max(0, min(lo + nl, n) - lo)
             if m == nl:
@@ -182,7 +186,7 @@ def stage_client_arrays(arrays: dict, counts: np.ndarray, *, mesh=None,
                 blk = np.zeros((nl,) + arr.shape[1:], arr.dtype)
                 if m > 0:
                     blk[:m] = arr[lo:lo + m]
-            blocks.append(jax.device_put(blk, dev))
+            blocks.extend(jax.device_put(blk, dev) for dev in dev_rows[si])
         placed[name] = jax.make_array_from_single_device_arrays(
             (n_pad,) + arr.shape[1:], sharding, blocks)
     counts_pad = np.concatenate([counts, np.ones(n_pad - n, np.int32)])

@@ -55,8 +55,9 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                   ckpt_dir: Optional[str] = None, prox_mu: float = 0.0,
                   log_fn: Callable = print, positively_correlated: bool = False,
                   metrics_path: Optional[str] = None,
-                  engine: str = "device", mesh=None,
-                  clients_axis: str = "clients") -> TrainResult:
+                  engine: str = "device", mesh_shape=None,
+                  clients_axis: str = "clients",
+                  model_axis: str = "model") -> TrainResult:
     """Availability-string front-end: wraps the arguments into an ad-hoc
     :class:`Scenario` + :class:`RunSpec` and runs it through
     :func:`repro.sim.runner.run_spec`.
@@ -72,8 +73,9 @@ def run_federated(task_id: str = "synthetic11", algo_name: str = "f3ast",
                    clients_per_round=clients_per_round, beta=beta, seed=seed,
                    eval_every=eval_every, ckpt_dir=ckpt_dir, prox_mu=prox_mu,
                    positively_correlated=positively_correlated,
-                   metrics_path=metrics_path, engine=engine, mesh=mesh,
-                   clients_axis=clients_axis)
+                   metrics_path=metrics_path, engine=engine,
+                   mesh_shape=mesh_shape, clients_axis=clients_axis,
+                   model_axis=model_axis)
     return run_scenario(spec, log_fn=log_fn)
 
 
@@ -173,13 +175,18 @@ def main():
                     help="top-k cut implementation: reference XLA "
                          "(default) or the fused Pallas selection kernel "
                          "(bit-identical masks/rates; docs/kernels.md)")
-    ap.add_argument("--mesh", type=int, default=None,
-                    help="shard the client dimension over this many devices "
-                         "(0 = all visible devices; default: unsharded; "
+    ap.add_argument("--mesh-shape", default=None, metavar="C[,M]",
+                    help="comma-separated device-mesh shape: '4' shards "
+                         "clients over 4 devices, '2,2' also shards each "
+                         "model over 2 (0 in a slot = fill with all "
+                         "remaining devices; default: unsharded; "
                          "DESIGN.md §7.2)")
     ap.add_argument("--clients-axis", default="clients",
                     help="mesh axis name for the client shard (default "
                          "'clients')")
+    ap.add_argument("--model-axis", default="model",
+                    help="mesh axis name for the model shard (default "
+                         "'model')")
     ap.add_argument("--spec", default=None, metavar="PATH",
                     help="load a RunSpec JSON and run it (the other run "
                          "flags are ignored)")
@@ -209,7 +216,11 @@ def main():
                        seed=args.seed, ckpt_dir=args.ckpt_dir,
                        prox_mu=args.prox_mu, engine=args.engine,
                        select_impl=args.select_impl,
-                       mesh=args.mesh, clients_axis=args.clients_axis,
+                       mesh_shape=(tuple(int(x) for x in
+                                         args.mesh_shape.split(","))
+                                   if args.mesh_shape else None),
+                       clients_axis=args.clients_axis,
+                       model_axis=args.model_axis,
                        aggregation=args.aggregation,
                        buffer_size=args.buffer_size,
                        staleness_power=args.staleness_power,

@@ -33,8 +33,9 @@ STACKED_KEYS = ("blocks", "groups", "tail", "enc_blocks", "dec_blocks", "lstm")
 _MODEL_DIM_HINTS = [
     (re.compile(r"(wq|wk|wv|w1|w3|wx|wy|w_i|w_a|in_proj|router|fc_w|out_w)$"), "last"),
     (re.compile(r"(wo|w2|out_proj|proj)$"), "first"),
-    (re.compile(r"embed$"), "first"),       # vocab-parallel embedding
+    # unembed before embed: "unembed" also matches the embed$ search
     (re.compile(r"unembed$"), "last"),      # vocab-parallel unembedding
+    (re.compile(r"embed$"), "first"),       # vocab-parallel embedding
 ]
 
 
@@ -212,25 +213,135 @@ def pad_client_dim(x, n_pad: int):
     x = jnp.asarray(x)
     if x.shape[0] == n_pad:
         return x
-    assert x.shape[0] < n_pad, (x.shape, n_pad)
+    if x.shape[0] > n_pad:
+        raise ValueError(f"client dim {x.shape[0]} exceeds padded width "
+                         f"{n_pad} (leaf shape {tuple(x.shape)}); the pad "
+                         f"target must be >= the real client count")
     return jnp.pad(x, [(0, n_pad - x.shape[0])] + [(0, 0)] * (x.ndim - 1))
 
 
-def client_spec(leaf, n_clients: int, axis: str = "clients") -> P:
+def _spec_axes(spec) -> set:
+    axes = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        axes.update((entry,) if isinstance(entry, str) else tuple(entry))
+    return axes
+
+
+def client_spec(leaf, n_clients: int, axis: str = "clients", *,
+                override: Optional[P] = None) -> P:
     """P(axis) for leaves whose dim 0 is the (padded) client dimension,
-    P() (replicated) for everything else — scalars, cluster-level state."""
+    P() (replicated) for everything else — scalars, cluster-level state.
+
+    ``override`` is an explicit per-leaf spec.  If the leaf's dim 0 happens
+    to equal ``n_clients`` but the override does not shard it over ``axis``,
+    the coincidence is rejected rather than silently replicating what looks
+    like per-client state (or silently sharding what isn't).
+    """
     shape = getattr(leaf, "shape", ())
-    if len(shape) >= 1 and shape[0] == n_clients:
+    client_like = len(shape) >= 1 and shape[0] == n_clients
+    if override is not None:
+        if client_like and axis not in _spec_axes(override):
+            raise ValueError(
+                f"leaf of shape {tuple(shape)} has dim 0 == n_clients "
+                f"({n_clients}) but the explicit override {override} does "
+                f"not shard it over {axis!r}; reshape the leaf so the "
+                f"coincidence disappears or shard it over the client axis")
+        return override
+    if client_like:
         return P(axis)
     return P()
 
 
-def client_specs(tree, n_clients: int, axis: str = "clients"):
-    """Pytree of PartitionSpecs: client-dim leaves sharded, rest replicated."""
-    return jax.tree.map(lambda x: client_spec(x, n_clients, axis), tree)
+def client_specs(tree, n_clients: int, axis: str = "clients",
+                 overrides=None):
+    """Pytree of PartitionSpecs: client-dim leaves sharded, rest replicated.
+
+    ``overrides`` is an optional matching pytree of explicit per-leaf specs
+    (``None`` entries fall back to the default rule)."""
+    if overrides is None:
+        return jax.tree.map(lambda x: client_spec(x, n_clients, axis), tree)
+    return jax.tree.map(
+        lambda x, o: client_spec(x, n_clients, axis, override=o),
+        tree, overrides)
 
 
 def client_shardings(tree, mesh: Mesh, n_clients: int,
                      axis: str = "clients"):
     """Pytree of NamedShardings matching :func:`client_specs`."""
     return to_named_shardings(client_specs(tree, n_clients, axis), mesh)
+
+
+# ---------------------------------------------------------------------------
+# Composed client × model rules (two-axis fed mesh, DESIGN.md §7.2)
+# ---------------------------------------------------------------------------
+
+def model_specs(tree, mesh: Mesh, *, model_axis: str = "model",
+                fsdp_axes: Optional[Tuple[str, ...]] = None):
+    """Pytree of PartitionSpecs (not NamedShardings): per-leaf tensor-
+    parallel assignment via :func:`spec_for_leaf`.  This is the P-tree the
+    sharded engine threads into ``shard_map`` carry specs and
+    ``make_fed_round(model_axis=...)``; :func:`param_shardings` is the
+    NamedSharding view of the same rules."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for_leaf(p, leaf, mesh, model_axis=model_axis,
+                                fsdp_axes=fsdp_axes) for p, leaf in flat])
+
+
+def client_model_specs(tree, mesh: Mesh, n_clients: int, *,
+                       clients_axis: str = "clients",
+                       model_axis: str = "model"):
+    """Compose both mesh axes in one spec tree: leaves with a leading
+    client dimension shard it over ``clients_axis`` and their *trailing*
+    dims over ``model_axis`` (per-client stacked parameters / optimizer
+    state); all other leaves get the plain model-parallel assignment.
+
+    The model-dim choice for client-stacked leaves reuses the exact
+    :func:`spec_for_leaf` hint/divisibility/replication ladder on the
+    shape with the client dim stripped, so e.g. a non-divisible head dim
+    falls back to replication identically on both layouts."""
+    def one(path, leaf):
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) >= 1 and shape[0] == n_clients:
+            rest = jax.ShapeDtypeStruct(
+                shape[1:], np.dtype(getattr(leaf, "dtype", np.float32)))
+            inner = spec_for_leaf(path, rest, mesh, model_axis=model_axis)
+            return P(clients_axis, *inner)
+        return spec_for_leaf(path, leaf, mesh, model_axis=model_axis)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, leaf) for p, leaf in flat])
+
+
+def state_specs_like(state_tree, params_tree, params_specs):
+    """Specs for an optimizer-state pytree built from params copies.
+
+    The repo's server optimizers (``optim.optimizers``) hold a scalar step
+    counter plus zero or more momentum/variance trees created with
+    ``zeros_like(params)`` — so every non-scalar state leaf is a
+    params-shaped copy in params flatten order.  Each copy inherits the
+    matching leaf's spec; scalars replicate.  Anything else is rejected:
+    running a model-sharded server update against mismatched state shapes
+    would silently broadcast."""
+    p_leaves = jax.tree.leaves(params_tree)
+    p_specs = jax.tree.structure(params_tree).flatten_up_to(params_specs)
+    flat, treedef = jax.tree_util.tree_flatten(state_tree)
+    out, j = [], 0
+    for leaf in flat:
+        shape = tuple(getattr(leaf, "shape", ()))
+        if len(shape) == 0:
+            out.append(P())
+            continue
+        k = j % len(p_leaves) if p_leaves else 0
+        if p_leaves and shape == tuple(p_leaves[k].shape):
+            out.append(p_specs[k])
+            j += 1
+        else:
+            raise ValueError(
+                f"optimizer-state leaf of shape {shape} does not mirror the "
+                f"params flatten order; model-axis sharding needs "
+                f"params-shaped state copies (optim.optimizers style)")
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -59,6 +59,7 @@ from ..data.synthetic import SynthTask
 from ..optim import make_optimizer
 from ..core.keys import COMPLETION as KEY_FOLD
 from ..core.sanitize import guard_transfers
+from ..sharding.rules import model_specs
 from .scenario import Scenario, get_scenario
 
 __all__ = ["DeviceEngine", "build_engine", "run_scenario_device",
@@ -226,6 +227,7 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
                  positively_correlated: bool = False,
                  fed_mode: str = "parallel",
                  mesh=None, clients_axis: str = "clients",
+                 model_axis: str = "model",
                  strategy_kwargs=None,
                  completion: Optional[str] = None, completion_kwargs=None,
                  select_impl: str = "xla", topk_impl: str = "stream"):
@@ -238,11 +240,16 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     strategy registry (aliases like ``fedadam`` rewrite to their base
     strategy + server optimizer; unknown names raise ``KeyError``).
 
-    ``mesh`` (a Mesh, a shard count, or ``<= 0`` for every device) selects
-    the client-sharded engine (:mod:`repro.sim.engine_sharded`): the N
-    dimension of availability state, selection, and staged data is
-    partitioned over the ``clients_axis`` mesh axis.  Same seed ⇒ same
-    selection masks / rates / losses as the unsharded engine.
+    ``mesh`` (a Mesh, a shard count, a 1- or 2-tuple shape, or ``<= 0`` /
+    ``(0,)`` for every device) selects the client-sharded engine
+    (:mod:`repro.sim.engine_sharded`): the N dimension of availability
+    state, selection, and staged data is partitioned over the
+    ``clients_axis`` mesh axis.  A 2-tuple ``(c, m)`` (or a prebuilt Mesh
+    naming ``model_axis``) additionally shards each stored parameter and
+    optimizer-state leaf over the ``model_axis`` per
+    ``sharding.rules.model_specs`` — the two-axis federated mesh of
+    DESIGN.md §7.2.  Same seed ⇒ same selection masks / rates / losses as
+    the unsharded engine on any mesh shape.
     ``topk_impl`` picks the sharded engine's distributed top-k reduction
     (``"stream"`` — default, O(k) butterfly/ring exchange — or
     ``"allgather"``, the legacy full-(N,) gather); both produce bitwise-
@@ -251,7 +258,7 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
     from .runner import build_task   # local import: runner ↔ engine
     from .engine_sharded import ShardedEngine, resolve_client_mesh
 
-    mesh = resolve_client_mesh(mesh, clients_axis)
+    mesh = resolve_client_mesh(mesh, clients_axis, model_axis)
     if mesh is not None and select_impl == "pallas":
         raise ValueError(
             "select_impl='pallas' fuses the single-device top-k cut; the "
@@ -295,11 +302,23 @@ def build_engine(scenario: Union[str, Scenario], algo_name: str = "f3ast", *,
             raise ValueError("the client-sharded engine runs the cohort in "
                              "parallel mode only (the mesh axis carries the "
                              f"cohort split); got fed_mode={fed_mode!r}")
+        use_model = model_axis in mesh.axis_names
+        if use_model:
+            # Per-leaf model-parallel layout, computed once from the param
+            # shapes; ShardedEngine re-derives the identical tree for its
+            # carry specs (model_specs is deterministic in (shapes, mesh)).
+            p_shapes = jax.eval_shape(init, jax.random.PRNGKey(0))
+            p_specs = model_specs(p_shapes, mesh, model_axis=model_axis)
         fed_round = make_fed_round(loss, opt, mode="parallel",
                                    prox_mu=prox_mu,
                                    cohort_axis=clients_axis,
-                                   cohort_slots=budget.k_max)
+                                   cohort_slots=budget.k_max,
+                                   model_axis=model_axis if use_model
+                                   else None,
+                                   param_specs=p_specs if use_model
+                                   else None)
         engine = ShardedEngine(mesh=mesh, axis=clients_axis,
+                               model_axis=model_axis if use_model else None,
                                staged=sampler.stage_device(
                                    mesh=mesh, axis=clients_axis),
                                fed_round=fed_round, n_clients=n,
@@ -353,6 +372,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
                         metrics_path: Optional[str] = None,
                         fed_mode: str = "parallel",
                         mesh=None, clients_axis: str = "clients",
+                        model_axis: str = "model",
                         strategy_kwargs=None,
                         completion: Optional[str] = None,
                         completion_kwargs=None,
@@ -385,6 +405,7 @@ def run_scenario_device(scenario: Union[str, Scenario],
                                positively_correlated=positively_correlated,
                                fed_mode=fed_mode, mesh=mesh,
                                clients_axis=clients_axis,
+                               model_axis=model_axis,
                                strategy_kwargs=strategy_kwargs,
                                completion=completion,
                                completion_kwargs=completion_kwargs,

@@ -3,9 +3,12 @@
 The device engine in :mod:`repro.sim.engine` keeps every (N,)-shaped object
 — availability state, r_k rates, selection scores, the staged (N, S, ...)
 client data — on ONE device, capping N at what a single HBM/host can hold.
-This module partitions that client dimension over a 1-D ``("clients",)``
-mesh (``launch.mesh.make_client_mesh``) and runs the whole chunked round
-loop inside ``shard_map``:
+This module partitions that client dimension over the ``clients`` axis of a
+1-D ``("clients",)`` mesh (``launch.mesh.make_client_mesh``) — or the
+leading axis of a 2-D ``("clients", "model")`` mesh
+(``launch.mesh.make_fed_mesh``), whose trailing axis then shards each
+cohort client's parameters tensor-parallel — and runs the whole chunked
+round loop inside ``shard_map``:
 
 * **state** — availability-process state and the staged client arrays live
   sharded over the ``clients`` axis (padded to a multiple of the mesh size;
@@ -74,7 +77,8 @@ from ..core.selection import sharded_cohort_ids_from_mask
 from ..core.strategies import SelectCtx, as_sharded
 from ..data.pipeline import SHARD_PAD_QUANTUM, synth_cohort_batch
 from ..data.synthetic import SynthTask
-from ..sharding.rules import pad_client_dim, to_named_shardings
+from ..sharding.rules import (model_specs, pad_client_dim, state_specs_like,
+                              to_named_shardings)
 from ..core.keys import COMPLETION as KEY_FOLD
 from .engine import EngineCarry, RoundStream, _staged_nbytes
 
@@ -115,14 +119,18 @@ def _selection_comm_bytes(*, d: int, nl: int, k: int, topk_impl: str,
     return items * 8 + items * 4 + mask_bytes
 
 
-def resolve_client_mesh(mesh, axis: str = "clients") -> Mesh:
-    """Accept a Mesh, a shard count (``<= 0`` → all devices), or None."""
+def resolve_client_mesh(mesh, axis: str = "clients",
+                        model_axis: str = "model") -> Mesh:
+    """Accept a Mesh, a shard count (``<= 0`` → all devices), a 1- or 2-D
+    ``mesh_shape`` tuple (``(c,)`` / ``(c, m)``, 0 = fill), or None."""
     if mesh is None or isinstance(mesh, Mesh):
         if isinstance(mesh, Mesh) and axis not in mesh.axis_names:
             raise ValueError(f"mesh {mesh.axis_names} has no {axis!r} axis")
         return mesh
-    from ..launch.mesh import make_client_mesh
-    return make_client_mesh(int(mesh), axis_name=axis)
+    from ..launch.mesh import make_fed_mesh
+    if isinstance(mesh, int):
+        mesh = (max(mesh, 0),)      # legacy shard count: <= 0 → all devices
+    return make_fed_mesh(tuple(mesh), axis_names=(axis, model_axis))
 
 
 class ShardedEngine:
@@ -138,13 +146,31 @@ class ShardedEngine:
     batches are synthesized on demand inside the compiled loop, which is
     what makes N = 1e6–1e7 rounds fit.  ``topk_impl`` picks the
     distributed top-k reduction (``core.selection.TOPK_IMPLS``).
+
+    ``model_axis``: optional second mesh axis (``make_fed_mesh((c, m))``)
+    carrying a tensor-parallel split of the stored params and optimizer
+    state (per-leaf layout from ``sharding.rules.model_specs``).  All
+    client-side state and collectives name only the ``clients`` axis, so
+    every model shard computes the identical selection masks / r_k / K_t
+    streams; ``fed_round`` must be built with the matching
+    ``model_axis``/``param_specs`` (see ``make_fed_round``).
     """
 
     def __init__(self, *, mesh: Mesh, axis: str = "clients", avail_model,
                  budget, strategy, staged, fed_round, init_params, opt,
                  client_lr, local_steps, local_batch, n_clients: int,
-                 completion=None, topk_impl: str = "stream"):
+                 completion=None, topk_impl: str = "stream",
+                 model_axis: Optional[str] = None):
         self.mesh, self.axis = mesh, axis
+        self.model_axis = model_axis
+        if model_axis is not None:
+            if model_axis == axis:
+                raise ValueError(f"model_axis {model_axis!r} collides with "
+                                 f"the client axis")
+            if model_axis not in mesh.axis_names:
+                raise ValueError(f"mesh {mesh.axis_names} has no "
+                                 f"{model_axis!r} axis; build it with "
+                                 f"launch.mesh.make_fed_mesh((c, m))")
         self.strategy = strategy
         self.completion = completion
         trivial = completion is None or completion.trivial
@@ -334,10 +360,20 @@ class ShardedEngine:
         params_s = jax.eval_shape(init_params, jax.random.PRNGKey(0))
         opt_s = jax.eval_shape(opt.init, params_s)
         algo_s = jax.eval_shape(lambda: strategy.init(self.n_clients))
+        if model_axis is None:
+            p_specs = jax.tree.map(lambda _: P(), params_s)
+            o_specs = jax.tree.map(lambda _: P(), opt_s)
+        else:
+            # stored params / optimizer state shard over the model axis
+            # (per-leaf layout from the rule engine); fed_round must have
+            # been built with the same model_axis + param_specs
+            p_specs = model_specs(params_s, mesh, model_axis=model_axis)
+            o_specs = state_specs_like(opt_s, params_s, p_specs)
+        self.param_specs = p_specs
         carry_specs = EngineCarry(
             key=P(),
-            params=jax.tree.map(lambda _: P(), params_s),
-            opt_state=jax.tree.map(lambda _: P(), opt_s),
+            params=p_specs,
+            opt_state=o_specs,
             algo_state=jax.tree.map(lambda _: P(), algo_s),
             avail_state=jax.tree.map(lambda f: P(axis) if f else P(), flags),
         )

@@ -12,11 +12,13 @@ The old kwarg spelling ``run_scenario(scenario, algo_name, rounds=...,
 equivalent RunSpec and emits a ``DeprecationWarning``.
 
 Three engines implement the same cell semantics (DESIGN.md §7), selected
-by ``spec.engine`` / ``spec.mesh``:
+by ``spec.engine`` / ``spec.mesh_shape``:
 
 * ``engine="device"`` (default) — the device-resident chunked-``lax.scan``
-  engine in :mod:`repro.sim.engine`; with ``mesh`` set, the client-sharded
-  variant (:mod:`repro.sim.engine_sharded`).
+  engine in :mod:`repro.sim.engine`; with ``mesh_shape`` set, the
+  client-sharded variant (:mod:`repro.sim.engine_sharded`), which with a
+  2-D ``(c, m)`` shape also shards each cohort client's parameters over
+  the ``model`` axis.
 * ``engine="host"`` — the reference Python loop below: availability step →
   strategy ``select`` (completion-aware, DESIGN.md §7.3) → static-shape
   cohort batch → jitted federated round → per-round metrics.  Kept as the
@@ -124,11 +126,13 @@ def build_task(task_id: str, seed: int, **task_kwargs):
 
 
 # Kwargs the deprecated run_scenario(scenario, algo, **kwargs) spelling
-# accepted, mapped onto their RunSpec fields.
+# accepted, mapped onto their RunSpec fields.  "mesh" (a scalar shard
+# count) predates RunSpec.mesh_shape and is rewritten to a 1-D shape.
 _LEGACY_FIELDS = ("rounds", "server_opt", "clients_per_round", "beta",
                   "seed", "eval_every", "ckpt_dir", "prox_mu",
                   "positively_correlated", "metrics_path", "engine",
-                  "chunk_size", "mesh", "clients_axis", "strategy_kwargs")
+                  "chunk_size", "mesh", "mesh_shape", "clients_axis",
+                  "model_axis", "strategy_kwargs")
 
 
 def _legacy_server_lr(algo_name: str, server_lr) -> Optional[float]:
@@ -156,6 +160,19 @@ def _legacy_spec(scenario, algo_name, kwargs) -> RunSpec:
     algo_name = algo_name or "f3ast"
     server_lr = _legacy_server_lr(algo_name, kwargs.pop("server_lr", None))
     fields = {k: v for k, v in kwargs.items() if k in _LEGACY_FIELDS}
+    if "mesh" in fields:
+        mesh = fields.pop("mesh")
+        if "mesh_shape" in fields:
+            raise TypeError("pass either mesh= (deprecated scalar) or "
+                            "mesh_shape=, not both")
+        if mesh is not None:
+            if isinstance(mesh, bool) or not isinstance(mesh, (int, np.integer)):
+                raise TypeError(
+                    f"legacy mesh= takes an int shard count (got "
+                    f"{type(mesh).__name__}); prebuilt Mesh objects go "
+                    f"through sim.engine.build_engine, tuples through "
+                    f"mesh_shape=")
+            fields["mesh_shape"] = (max(int(mesh), 0),)
     return RunSpec(scenario=scenario, strategy=algo_name,
                    server_lr=server_lr, **fields)
 
@@ -219,10 +236,10 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             staleness_discount=rs.staleness_discount,
             select_impl=rs.select_impl,
             engine=rs.engine, log_fn=log_fn)
-    if rs.engine == "host" and rs.mesh is not None:
-        raise ValueError("mesh= shards the device engine's client dimension; "
-                         "it cannot apply to engine='host' (drop mesh or use "
-                         "engine='device')")
+    if rs.engine == "host" and rs.mesh_shape is not None:
+        raise ValueError("mesh_shape= shards the device engine's client "
+                         "dimension; it cannot apply to engine='host' (drop "
+                         "mesh_shape or use engine='device')")
     fallback_reason = None
     if rs.engine == "device" and entry.host_only:
         fallback_reason = (
@@ -231,7 +248,7 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             f"strategy {algo_label!r} is registered host-only")
         warnings.warn(
             f"algorithm {algo_label!r} is not supported by the "
-            f"{'sharded' if rs.mesh is not None else 'device'} engine "
+            f"{'sharded' if rs.mesh_shape is not None else 'device'} engine "
             f"({fallback_reason}); falling back to engine='host'",
             stacklevel=2)
     if rs.engine == "device" and fallback_reason is None:
@@ -245,7 +262,8 @@ def run_spec(spec: RunSpec, *, log_fn: Callable = print) -> TrainResult:
             prox_mu=rs.prox_mu,
             positively_correlated=rs.positively_correlated,
             metrics_path=rs.metrics_path, fed_mode=rs.fed_mode,
-            mesh=rs.mesh, clients_axis=rs.clients_axis,
+            mesh=rs.mesh_shape, clients_axis=rs.clients_axis,
+            model_axis=rs.model_axis,
             strategy_kwargs=rs.strategy_kwargs,
             completion=rs.completion,
             completion_kwargs=rs.completion_kwargs,

@@ -17,9 +17,12 @@ reproducible from a single artifact:
     RunSpec.from_json(spec.to_json()) == spec        # exact round-trip
 
 ``scenario`` may be a registry key (serializes as the string) or an inline
-:class:`Scenario` (serializes as its field dict).  ``mesh`` may be a shard
-count (serializable) or a prebuilt ``jax.sharding.Mesh`` (runtime only —
-serialization rejects it).
+:class:`Scenario` (serializes as its field dict).  ``mesh_shape`` is a
+tuple of 1 or 2 ints — ``(c,)`` shards the client dimension, ``(c, m)``
+additionally shards each cohort client's parameters over a ``model`` axis
+(``launch.mesh.make_fed_mesh``); an entry of 0 means "fill with the
+visible devices".  JSON round-trips it as a list and ``from_dict`` coerces
+it back to a tuple.
 """
 from __future__ import annotations
 
@@ -97,8 +100,10 @@ class RunSpec:
     #   "stream" (ppermute candidate merge, O(k·log D) traffic) |
     #   "allgather" (legacy full candidate gather).  Bit-identical masks
     #   either way (core.selection.TOPK_IMPLS); ignored off-mesh.
-    mesh: Optional[Any] = None                  # shard count | Mesh | None
+    mesh_shape: Optional[Any] = None            # (c,) | (c, m) | None;
+    #   0 entries fill with the visible devices (launch.mesh.make_fed_mesh)
     clients_axis: str = "clients"
+    model_axis: str = "model"                   # 2-D mesh trailing axis name
     chunk_size: Optional[int] = None            # device engine rounds/chunk
     fed_mode: str = "parallel"                  # cohort execution (DESIGN §4)
     # outputs
@@ -134,11 +139,28 @@ class RunSpec:
         if self.topk_impl not in TOPK_IMPLS:
             raise ValueError(f"topk_impl must be one of {TOPK_IMPLS}, "
                              f"got {self.topk_impl!r}")
-        if self.select_impl == "pallas" and self.mesh is not None:
+        mesh_shape = self.mesh_shape
+        if mesh_shape is not None:
+            if isinstance(mesh_shape, (list, tuple)):
+                mesh_shape = tuple(mesh_shape)
+            bad = (not isinstance(mesh_shape, tuple) or not mesh_shape
+                   or len(mesh_shape) > 2
+                   or any(isinstance(s, bool)
+                          or not isinstance(s, (int, np.integer)) or s < 0
+                          for s in mesh_shape)
+                   or sum(1 for s in mesh_shape if s == 0) > 1)
+            if bad:
+                raise ValueError(
+                    f"RunSpec.mesh_shape must be None or a tuple of 1-2 "
+                    f"non-negative ints with at most one 0 entry (= fill "
+                    f"with the visible devices), got {self.mesh_shape!r}")
+            mesh_shape = tuple(int(s) for s in mesh_shape)
+        if self.select_impl == "pallas" and mesh_shape is not None:
             raise ValueError(
                 "select_impl='pallas' fuses the single-device top-k cut; "
                 "the client-sharded engine keeps its distributed "
-                "sharded_topk_mask (drop mesh= or use select_impl='xla')")
+                "sharded_topk_mask (drop mesh_shape= or use "
+                "select_impl='xla')")
         if self.fed_mode not in ("parallel", "sequential"):
             raise ValueError(f"fed_mode must be 'parallel' or 'sequential', "
                              f"got {self.fed_mode!r}")
@@ -146,10 +168,10 @@ class RunSpec:
             raise ValueError(f"aggregation must be 'sync' or 'buffered', "
                              f"got {self.aggregation!r}")
         if self.aggregation == "buffered":
-            if self.mesh is not None:
+            if mesh_shape is not None:
                 raise ValueError(
                     "aggregation='buffered' has no client-sharded engine "
-                    "yet; drop mesh= or use aggregation='sync'")
+                    "yet; drop mesh_shape= or use aggregation='sync'")
             from .engine_async import STALENESS_DISCOUNTS  # lazy: spec↔engine
             if self.staleness_discount not in STALENESS_DISCOUNTS:
                 raise KeyError(
@@ -190,6 +212,12 @@ class RunSpec:
         if not isinstance(self.clients_axis, str) or not self.clients_axis:
             raise ValueError(f"RunSpec.clients_axis must be a non-empty "
                              f"mesh-axis name, got {self.clients_axis!r}")
+        if not isinstance(self.model_axis, str) or not self.model_axis:
+            raise ValueError(f"RunSpec.model_axis must be a non-empty "
+                             f"mesh-axis name, got {self.model_axis!r}")
+        if self.model_axis == self.clients_axis:
+            raise ValueError(f"RunSpec.model_axis must differ from "
+                             f"clients_axis, both are {self.model_axis!r}")
         for fname in ("ckpt_dir", "metrics_path"):
             val = getattr(self, fname)
             if val is not None and (not isinstance(val, str) or not val):
@@ -197,16 +225,12 @@ class RunSpec:
                                  f"non-empty path string, got {val!r}")
         return dataclasses.replace(self, strategy=name,
                                    server_opt=server_opt,
-                                   server_lr=server_lr)
+                                   server_lr=server_lr,
+                                   mesh_shape=mesh_shape)
 
     # -- JSON round-trip ----------------------------------------------------
 
     def to_dict(self) -> dict:
-        if self.mesh is not None and not isinstance(self.mesh, int):
-            raise TypeError(
-                "RunSpec.mesh must be None or an int shard count to "
-                f"serialize (got {type(self.mesh).__name__}); prebuilt Mesh "
-                "objects are runtime-only")
         return _plain(dataclasses.asdict(self))
 
     @classmethod
@@ -218,6 +242,9 @@ class RunSpec:
             if "algorithms" in sc:
                 sc["algorithms"] = tuple(sc["algorithms"])
             d["scenario"] = Scenario(**sc)
+        ms = d.get("mesh_shape")
+        if isinstance(ms, list):               # JSON round-trip: list → tuple
+            d["mesh_shape"] = tuple(ms)
         unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
         if unknown:
             raise KeyError(f"unknown RunSpec fields {sorted(unknown)}")

@@ -44,7 +44,7 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
               rounds=_UNSET, out_dir: str = "experiments/sweep",
               seed=_UNSET, server_opt=_UNSET, server_lr=_UNSET,
               eval_every: Optional[int] = None, engine=_UNSET,
-              mesh=_UNSET, clients_axis=_UNSET,
+              mesh_shape=_UNSET, clients_axis=_UNSET, model_axis=_UNSET,
               base_spec: Optional[RunSpec] = None,
               log_fn: Callable = print) -> dict:
     """Run the grid; returns {(scenario, algorithm): final_metrics} — with
@@ -71,14 +71,15 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
     defaults apply) and ``eval_every`` defaults to evaluating only first +
     last round for short sweeps.  ``engine`` routes every cell through the
     device-resident engine (default) or the reference host loop
-    (DESIGN.md §7); ``mesh`` shards the client dimension of every cell
-    over that many devices (DESIGN.md §7.2).
+    (DESIGN.md §7); ``mesh_shape`` shards every cell over a ``(clients,)``
+    or ``(clients, model)`` device mesh (DESIGN.md §7.2).
     """
     os.makedirs(out_dir, exist_ok=True)
     overrides = {k: v for k, v in dict(
         rounds=rounds, seed=seed, server_opt=server_opt,
-        server_lr=server_lr, engine=engine, mesh=mesh,
-        clients_axis=clients_axis).items() if v is not _UNSET}
+        server_lr=server_lr, engine=engine, mesh_shape=mesh_shape,
+        clients_axis=clients_axis, model_axis=model_axis).items()
+        if v is not _UNSET}
     base = dataclasses.replace(base_spec or RunSpec(), **overrides)
     results = {}
     for sc_key in scenarios:
@@ -106,11 +107,10 @@ def run_sweep(scenarios: Sequence[str], algorithms: Optional[Sequence[str]] = No
                     spec = dataclasses.replace(spec, completion=comp)
                 if agg is not None:
                     spec = dataclasses.replace(spec, aggregation=agg)
-                if spec.mesh is None or isinstance(spec.mesh, int):
-                    spec.save(os.path.join(out_dir, f"{cell}.spec.json"))
-                else:   # runtime-only Mesh objects are not serializable
-                    log_fn(f"sweep,{cell}: mesh is a runtime Mesh object, "
-                           f"skipping {cell}.spec.json")
+                # mesh_shape is a plain tuple (JSON list round-trip), so the
+                # spec artifact is always writable — no runtime-Mesh escape
+                # hatch exists at the spec layer any more
+                spec.save(os.path.join(out_dir, f"{cell}.spec.json"))
                 res = run_scenario(spec, log_fn=lambda *_: None)
                 results[cell_key] = res.final_metrics
                 fm = res.final_metrics
@@ -127,6 +127,11 @@ def _parse_list(arg: str, universe: Sequence[str]) -> list:
     if arg == "all":
         return list(universe)
     return [x.strip() for x in arg.split(",") if x.strip()]
+
+
+def _parse_mesh_shape(arg: str) -> tuple:
+    """'4' -> (4,); '2,2' -> (2, 2).  Validation lives in RunSpec.resolved."""
+    return tuple(int(x.strip()) for x in arg.split(",") if x.strip())
 
 
 def main(argv=None) -> None:
@@ -155,12 +160,18 @@ def main(argv=None) -> None:
     ap.add_argument("--engine", default="device", choices=["device", "host"],
                     help="device-resident scan engine (default) or the "
                          "reference host loop")
-    ap.add_argument("--mesh", type=int, default=None,
-                    help="shard the client dimension over this many devices "
-                         "(0 = all visible devices; default: unsharded)")
+    ap.add_argument("--mesh-shape", default=None, metavar="C[,M]",
+                    help="comma-separated device-mesh shape: '4' shards "
+                         "clients over 4 devices, '2,2' also shards each "
+                         "model over 2 (0 in a slot = fill with all "
+                         "remaining devices; default: unsharded; "
+                         "DESIGN.md §7.2)")
     ap.add_argument("--clients-axis", default="clients",
                     help="mesh axis name for the client shard (default "
                          "'clients')")
+    ap.add_argument("--model-axis", default="model",
+                    help="mesh axis name for the model shard (default "
+                         "'model')")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and exit")
     args = ap.parse_args(argv)
@@ -180,13 +191,15 @@ def main(argv=None) -> None:
                    if args.completions else None)
     aggregations = (_parse_list(args.aggregations, ("sync", "buffered"))
                     if args.aggregations else None)
+    mesh_shape = (_parse_mesh_shape(args.mesh_shape)
+                  if args.mesh_shape is not None else _UNSET)
     run_sweep(scenarios, algorithms, completions=completions,
               aggregations=aggregations,
               rounds=args.rounds, out_dir=args.out,
               seed=args.seed, server_opt=args.server_opt,
               eval_every=args.eval_every,
-              engine=args.engine, mesh=args.mesh,
-              clients_axis=args.clients_axis)
+              engine=args.engine, mesh_shape=mesh_shape,
+              clients_axis=args.clients_axis, model_axis=args.model_axis)
 
 
 if __name__ == "__main__":

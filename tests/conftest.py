@@ -51,7 +51,7 @@ def silent(*args, **kwargs):
 ENGINE_OVERRIDES = {
     "host": dict(engine="host"),
     "device": dict(engine="device"),
-    "sharded": dict(engine="device", mesh=0),          # all visible devices
+    "sharded": dict(engine="device", mesh_shape=(0,)),  # all visible devices
     "host_buffered": dict(engine="host", aggregation="buffered"),
     "device_buffered": dict(engine="device", aggregation="buffered"),
 }
@@ -75,6 +75,11 @@ PARITY_COMPLETIONS = tuple(COMPLETION_SETTINGS)
 # select_impl axis: the reference XLA cut vs the fused Pallas selection
 # kernel (tests force the actual kernel via the interpreter on CPU).
 PARITY_SELECT_IMPLS = ("xla", "pallas")
+# mesh_shape axis: client-only, client×model, and model-only splits of the
+# two-axis federated mesh (DESIGN.md §7.2) — all must reproduce the device
+# engine's trajectories bit-for-bit.  Needs >= 4 virtual devices (the
+# sharded-multidevice CI job runs under 8).
+PARITY_MESH_SHAPES = ((4, 1), (2, 2), (1, 4))
 PARITY_ROUNDS = 8
 
 

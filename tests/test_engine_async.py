@@ -252,7 +252,8 @@ def test_runspec_async_fields_round_trip():
      "staleness_power"),
     (dict(aggregation="buffered", staleness_discount="nope"), KeyError,
      "staleness discount"),
-    (dict(aggregation="buffered", mesh=0), ValueError, "client-sharded"),
+    (dict(aggregation="buffered", mesh_shape=(0,)), ValueError,
+     "client-sharded"),
 ])
 def test_runspec_rejects_bad_async_fields(overrides, exc, match):
     spec = RunSpec(scenario="scarce", strategy="f3ast", **overrides)

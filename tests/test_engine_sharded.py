@@ -1,7 +1,9 @@
 """Client-sharded engine ⇔ single-device engine ⇔ host-loop parity.
 
 The sharded engine (``sim/engine_sharded.py``) partitions the client
-dimension over a ``("clients",)`` mesh.  Parity is required to be *exact*
+dimension over the ``clients`` axis of a ``(clients,)`` or
+``(clients, model)`` mesh (the 2-D parity cells live in
+``test_parity_matrix.py``).  Parity is required to be *exact*
 for everything the selection dynamics depend on: for the same seed the
 selection masks and r_k trajectories must be bit-identical across the three
 engines, and losses must agree to float tolerance (the psum reduction order
@@ -34,9 +36,11 @@ from repro.sim import run_scenario
 ROUNDS = 12
 
 
-def _run(algo, scenario, engine, mesh=None, rounds=ROUNDS, **kw):
+def _run(algo, scenario, engine, mesh_shape=None, rounds=ROUNDS, **kw):
+    if mesh_shape is not None:
+        kw["mesh_shape"] = mesh_shape
     return run_cell(parity_spec(algo, scenario=scenario, rounds=rounds),
-                    engine, mesh=mesh, **kw)
+                    engine, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -56,7 +60,7 @@ def _run(algo, scenario, engine, mesh=None, rounds=ROUNDS, **kw):
 def test_sharded_engine_matches_device_and_host(scenario, algo):
     host = _run(algo, scenario, "host")
     dev = _run(algo, scenario, "device")
-    sh = _run(algo, scenario, "device", mesh=0)   # all visible devices
+    sh = _run(algo, scenario, "device", mesh_shape=(0,))   # all visible devices
     assert sh.final_metrics["engine"] == "sharded"
     # masks bit-identical everywhere; rate EMA bit-identical between the
     # two compiled engines, float-tolerance vs the host loop
@@ -69,8 +73,8 @@ def test_sharded_engine_matches_device_and_host(scenario, algo):
 
 
 def test_sharded_parity_independent_of_chunk_size():
-    a = _run("f3ast", "scarce", "device", mesh=0, chunk_size=12)
-    b = _run("f3ast", "scarce", "device", mesh=0, chunk_size=5)
+    a = _run("f3ast", "scarce", "device", mesh_shape=(0,), chunk_size=12)
+    b = _run("f3ast", "scarce", "device", mesh_shape=(0,), chunk_size=5)
     np.testing.assert_array_equal(a.sel_history, b.sel_history)
     assert a.final_metrics["test_loss"] == pytest.approx(
         b.final_metrics["test_loss"], rel=1e-5)
@@ -86,7 +90,7 @@ def test_host_engine_rejects_mesh():
     # mesh= only applies to the device engine; silently dropping it would
     # let '--engine host --mesh 8' run unsharded without notice
     with pytest.raises(ValueError, match="host"):
-        _run("f3ast", "scarce", "host", mesh=0, rounds=2)
+        _run("f3ast", "scarce", "host", mesh_shape=(0,), rounds=2)
 
 
 # ---------------------------------------------------------------------------
@@ -317,8 +321,8 @@ def test_synth_engines_match_staged_engine():
 def test_topk_impl_engine_parity():
     # RunSpec.topk_impl: streaming and all_gather reductions must produce
     # the same trajectory, bit for bit (rates included)
-    stream = _run("f3ast", "scarce", "device", mesh=0, topk_impl="stream")
-    allg = _run("f3ast", "scarce", "device", mesh=0, topk_impl="allgather")
+    stream = _run("f3ast", "scarce", "device", mesh_shape=(0,), topk_impl="stream")
+    allg = _run("f3ast", "scarce", "device", mesh_shape=(0,), topk_impl="allgather")
     assert_cell_parity(stream, allg, rates_exact=True)
 
 
@@ -328,7 +332,7 @@ def test_spec_rejects_unknown_topk_impl():
 
 
 def test_final_metrics_surface_scale_accounting():
-    res = _run("f3ast", "scarce", "device", mesh=0, rounds=4)
+    res = _run("f3ast", "scarce", "device", mesh_shape=(0,), rounds=4)
     assert res.final_metrics["n_staged_bytes"] > 0       # staged scenario data
     assert res.final_metrics["selection_comm_bytes_per_round"] >= 0
     host = _run("f3ast", "scarce", "host", rounds=4)
@@ -344,7 +348,7 @@ def test_final_metrics_surface_the_engine():
                 rounds=4).final_metrics["engine"] == "host"
     assert _run("f3ast", "scarce", "device",
                 rounds=4).final_metrics["engine"] == "device"
-    assert _run("f3ast", "scarce", "device", mesh=0,
+    assert _run("f3ast", "scarce", "device", mesh_shape=(0,),
                 rounds=4).final_metrics["engine"] == "sharded"
 
 
@@ -374,7 +378,7 @@ silent = lambda *a, **k: None
 dev = run_scenario("scarce", "f3ast", rounds=8, seed=0, eval_every=8,
                    engine="device", log_fn=silent)
 sh = run_scenario("scarce", "f3ast", rounds=8, seed=0, eval_every=8,
-                  engine="device", mesh=0, log_fn=silent)
+                  engine="device", mesh_shape=(0,), log_fn=silent)
 assert np.array_equal(dev.sel_history, sh.sel_history)
 assert np.array_equal(dev.rates, sh.rates)
 assert abs(dev.final_metrics["test_loss"] - sh.final_metrics["test_loss"]) < 1e-5

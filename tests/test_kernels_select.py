@@ -218,6 +218,6 @@ def test_select_impl_validation():
 def test_runspec_rejects_pallas_with_mesh():
     from repro.sim import RunSpec
     with pytest.raises(ValueError, match="sharded"):
-        RunSpec(select_impl="pallas", mesh=1).resolved()
+        RunSpec(select_impl="pallas", mesh_shape=(1,)).resolved()
     with pytest.raises(ValueError, match="select_impl"):
         RunSpec(select_impl="fast").resolved()

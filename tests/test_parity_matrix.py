@@ -10,12 +10,13 @@ Unsupported combinations are contract-tested too: the buffered engine
 must *reject* completion processes with no latency semantics (bernoulli)
 rather than silently degrade.
 """
+import jax
 import pytest
 
 from conftest import (PARITY_COMPLETIONS, PARITY_ENGINES,
-                      PARITY_SELECT_IMPLS, PARITY_STRATEGIES,
-                      REFERENCE_ENGINE, assert_cell_parity, parity_spec,
-                      run_cell)
+                      PARITY_MESH_SHAPES, PARITY_SELECT_IMPLS,
+                      PARITY_STRATEGIES, REFERENCE_ENGINE,
+                      assert_cell_parity, parity_spec, run_cell)
 
 
 def _buffered(engine):
@@ -87,3 +88,45 @@ def test_topk_impl_matches_allgather(strategy, completion,
     ref = parity_reference_cache[key]
     res = run_cell(spec, "sharded", topk_impl="stream")
     assert_cell_parity(ref, res, rates_exact=True)
+
+
+def _need_devices(n):
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices (run under "
+                    f"XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@pytest.mark.parametrize("mesh_shape", PARITY_MESH_SHAPES)
+@pytest.mark.parametrize("strategy", PARITY_STRATEGIES)
+def test_mesh_shape_matches_device(mesh_shape, strategy,
+                                   parity_reference_cache):
+    """mesh_shape axis of the matrix: every split of 4 devices between the
+    ``clients`` and ``model`` axes — client-only (4,1), mixed (2,2), and
+    model-only (1,4) — must reproduce the unsharded device engine's
+    selection masks, completion masks, and r_k EMA bit-for-bit
+    (``rates_exact=True``: the client-side round is computed replicated
+    over the model axis, so the model split cannot perturb it), with
+    losses to float tolerance (DESIGN.md §7.2)."""
+    _need_devices(4)
+    spec = parity_spec(strategy, "deadline")
+    key = ("device-meshref", strategy)
+    if key not in parity_reference_cache:
+        parity_reference_cache[key] = run_cell(spec, "device")
+    ref = parity_reference_cache[key]
+    res = run_cell(spec, "sharded", mesh_shape=mesh_shape)
+    assert_cell_parity(ref, res, rates_exact=True)
+
+
+def test_mesh_shape_1d_regression_pin(parity_reference_cache):
+    """Regression pin: an explicit 1-D ``mesh_shape=(n,)`` and the
+    two-axis ``(n, 1)`` spelling both reproduce the default sharded
+    engine (``mesh_shape=(0,)``, all devices on the client axis)
+    bit-for-bit — the size-1 model axis makes every model-parallel op an
+    identity, so adding the axis cannot move a single bit."""
+    _need_devices(4)
+    spec = parity_spec("f3ast", "deadline")
+    ref = run_cell(spec, "sharded")                       # (0,) → (n,)
+    n = jax.device_count() if jax.device_count() <= 4 else 4
+    for shape in [(n,), (n, 1)]:
+        res = run_cell(spec, "sharded", mesh_shape=shape)
+        assert_cell_parity(ref, res, rates_exact=True)

@@ -217,6 +217,59 @@ def run(mesh, xs):
     assert rules_of(src) == ["R3"]
 
 
+def test_r3_flags_hardcoded_axis_name_in_collective():
+    # a literal axis name inside a traced body pins the program to one
+    # mesh spelling — the axis must come from the mesh/RunSpec
+    src = """
+import jax
+def round_step(carry, t):
+    s = jax.lax.psum(carry, "clients")
+    i = jax.lax.axis_index("model")
+    return s + i, s
+"""
+    findings = lint_source(src)
+    assert [f.rule for f in findings] == ["R3", "R3"]
+    assert "hard-coded mesh-axis" in findings[0].message
+
+
+def test_r3_flags_axis_literal_in_scan_body_keyword():
+    src = """
+import jax
+def run(xs):
+    def body(c, x):
+        g = jax.lax.all_gather(x, "model", axis=0, tiled=True)
+        return c, g
+    return jax.lax.scan(body, 0.0, xs)
+"""
+    assert rules_of(src) == ["R3"]
+
+
+def test_r3_accepts_axis_name_from_variable():
+    # the engines' idiom: the axis name is closure state threaded from the
+    # mesh/RunSpec (engine_sharded.ShardedEngine(axis=...))
+    src = """
+import jax
+def build(axis, model_axis):
+    def round_step(carry, t):
+        s = jax.lax.psum(carry, axis)
+        b = jax.lax.all_gather(s, model_axis, axis=0, tiled=True)
+        return b, s
+    return round_step
+"""
+    assert rules_of(src) == []
+
+
+def test_r3_axis_literal_outside_traced_body_is_fine():
+    # tests/benchmarks and host-side helpers may spell axis names directly;
+    # only traced round bodies are constrained
+    src = """
+import jax
+def host_helper(x):
+    return jax.lax.psum(x, "clients")
+"""
+    assert rules_of(src) == []
+
+
 def test_r3_accepts_closure_config_branching():
     # Branching on closure config (not a tracer) is the engines' idiom.
     src = """

@@ -3,11 +3,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-hypothesis = pytest.importorskip("hypothesis")  # optional [dev] extra
-from hypothesis import given, settings, strategies as st
+try:                      # optional [dev] extra: only the property test
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:       # the example-based tests below still run
+    HAVE_HYPOTHESIS = False
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.rules import spec_for_leaf
+from repro.sharding.rules import (client_model_specs, client_spec,
+                                  model_specs, pad_client_dim, spec_for_leaf,
+                                  state_specs_like)
 
 jax.config.update("jax_platforms", "cpu")
 
@@ -84,22 +89,139 @@ def test_mamba_vocab_not_divisible():
     assert s == P(None, "model")
 
 
-@settings(max_examples=200, deadline=None)
-@given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
-       st.booleans())
-def test_any_shape_gets_valid_spec(shape, fsdp_on):
-    """Property: every spec is consistent — sharded dims are divisible by the
-    mesh-axis size and each mesh axis is used at most once."""
-    s = _spec(("blocks", "attn", "wq"), tuple(shape),
-              fsdp=("data",) if fsdp_on else None)
-    used = [a for a in s if a is not None]
-    flat_used = []
-    for a in used:
-        flat_used.extend(a if isinstance(a, tuple) else (a,))
-    assert len(flat_used) == len(set(flat_used))
-    for dim, axis in zip(shape, s):
-        if axis is None:
-            continue
-        size = int(np.prod([MESH.shape[a] for a in
-                            (axis if isinstance(axis, tuple) else (axis,))]))
-        assert dim % size == 0
+# ---------------------------------------------------------------------------
+# Composed client × model rules (two-axis fed mesh, DESIGN.md §7.2)
+# ---------------------------------------------------------------------------
+
+MESH2 = _FakeMesh({"clients": 4, "model": 2})
+
+
+def _tf_tree(heads_dim=64):
+    """A stacked-transformer-shaped param tree (leaves as ShapeDtypeStructs);
+    4 layers stacked on dim 0, megatron-style attn/mlp projections."""
+    return {
+        "embed": _leaf((128, 32)),
+        "blocks": {
+            "attn": {"wq": _leaf((4, 32, heads_dim)),
+                     "wo": _leaf((4, heads_dim, 32))},
+            "mlp": {"w1": _leaf((4, 32, 128)), "w2": _leaf((4, 128, 32)),
+                    "ln": _leaf((4, 32))},
+        },
+        "unembed": _leaf((32, 128)),
+    }
+
+
+def test_model_specs_stacked_transformer():
+    specs = model_specs(_tf_tree(), MESH2, model_axis="model")
+    assert specs["blocks"]["attn"]["wq"] == P(None, None, "model")
+    assert specs["blocks"]["attn"]["wo"] == P(None, "model", None)
+    assert specs["blocks"]["mlp"]["w1"] == P(None, None, "model")
+    assert specs["blocks"]["mlp"]["w2"] == P(None, "model", None)
+    assert specs["blocks"]["mlp"]["ln"] == P(None, None)   # vector: replicated
+    assert specs["embed"] == P("model", None)
+    assert specs["unembed"] == P(None, "model")
+
+
+def test_model_specs_nondivisible_heads_fall_back_to_replication():
+    # heads_dim=34 is divisible by neither model size 2 on wq's last dim
+    # nor wo's first non-stack dim when the alternative is also odd
+    specs = model_specs(_tf_tree(heads_dim=33), MESH2, model_axis="model")
+    # hint dim (last, 33) not divisible -> falls to the other dim (32, ok)
+    assert specs["blocks"]["attn"]["wq"] == P(None, "model", None)
+    # nothing divisible at all -> fully replicated
+    tree = {"blocks": {"attn": {"wq": _leaf((4, 33, 35))}}}
+    specs = model_specs(tree, MESH2, model_axis="model")
+    assert specs["blocks"]["attn"]["wq"] == P(None, None, None)
+
+
+def test_model_specs_size_one_model_axis_is_all_replicated():
+    mesh1 = _FakeMesh({"clients": 8, "model": 1})
+    specs = model_specs(_tf_tree(), mesh1, model_axis="model")
+    for s in jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)):
+        assert all(e is None for e in s), s
+
+
+def test_client_model_specs_split_by_leading_dim():
+    n_clients = 64
+    tree = {
+        "avail": _leaf((n_clients,)),              # client state
+        "r_ema": _leaf((n_clients,)),
+        "w1": _leaf((32, 128)),                    # model param
+    }
+    specs = client_model_specs(tree, MESH2, n_clients)
+    assert specs["avail"] == P("clients")
+    assert specs["r_ema"] == P("clients")
+    assert specs["w1"] == P(None, "model")
+    # client-dim leaves with trailing dims shard dim 0 over clients and the
+    # rest per the model rules
+    tree2 = {"staged": _leaf((n_clients, 32, 128))}
+    specs2 = client_model_specs(tree2, MESH2, n_clients)
+    assert specs2["staged"][0] == "clients"
+
+
+def test_state_specs_like_mirrors_params():
+    params = {"w1": _leaf((32, 128)), "b": _leaf((128,))}
+    p_specs = model_specs(params, MESH2, model_axis="model")
+    # adam-shaped state: scalar t + two moment trees mirroring params
+    state = (_leaf(()),
+             {"w1": _leaf((32, 128)), "b": _leaf((128,))},
+             {"w1": _leaf((32, 128)), "b": _leaf((128,))})
+    o_specs = state_specs_like(state, params, p_specs)
+    assert o_specs[0] == P()
+    assert o_specs[1]["w1"] == p_specs["w1"]
+    assert o_specs[2]["b"] == p_specs["b"]
+
+
+def test_state_specs_like_rejects_non_mirroring_state():
+    params = {"w1": _leaf((32, 128))}
+    p_specs = model_specs(params, MESH2, model_axis="model")
+    bad_state = (_leaf(()), {"w1": _leaf((7, 5))})
+    with pytest.raises(ValueError, match="mirror"):
+        state_specs_like(bad_state, params, p_specs)
+
+
+def test_client_spec_rejects_coincidental_dim_without_axis():
+    n = 48
+    leaf = _leaf((n, 16))
+    # explicit override that does NOT shard the client dim: the dim-0
+    # match is then a coincidence the caller must resolve explicitly
+    with pytest.raises(ValueError, match="n_clients"):
+        client_spec(leaf, n, override=P(None, "model"))
+    # override that does name the client axis passes through
+    assert client_spec(leaf, n, override=P("clients", None)) == \
+        P("clients", None)
+    # no override: the default client-dim rule applies
+    assert client_spec(leaf, n)[0] == "clients"
+
+
+def test_pad_client_dim_raises_on_overflow():
+    x = jnp.zeros((10, 3))
+    with pytest.raises(ValueError, match="exceeds"):
+        pad_client_dim(x, 8)
+    y = pad_client_dim(x, 16)
+    assert y.shape == (16, 3)
+    np.testing.assert_array_equal(np.asarray(y[:10]), np.asarray(x))
+    assert not np.asarray(y[10:]).any()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.lists(st.integers(1, 4096), min_size=1, max_size=4),
+           st.booleans())
+    def test_any_shape_gets_valid_spec(shape, fsdp_on):
+        """Property: every spec is consistent — sharded dims are divisible by
+        the mesh-axis size and each mesh axis is used at most once."""
+        s = _spec(("blocks", "attn", "wq"), tuple(shape),
+                  fsdp=("data",) if fsdp_on else None)
+        used = [a for a in s if a is not None]
+        flat_used = []
+        for a in used:
+            flat_used.extend(a if isinstance(a, tuple) else (a,))
+        assert len(flat_used) == len(set(flat_used))
+        for dim, axis in zip(shape, s):
+            if axis is None:
+                continue
+            size = int(np.prod([MESH.shape[a] for a in
+                                (axis if isinstance(axis, tuple)
+                                 else (axis,))]))
+            assert dim % size == 0

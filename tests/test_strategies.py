@@ -73,7 +73,7 @@ def test_custom_strategy_runs_on_all_three_engines(lowid_registered):
                    eval_every=ROUNDS)
     host = run_scenario(spec.replace(engine="host"), log_fn=_silent)
     dev = run_scenario(spec, log_fn=_silent)
-    sh = run_scenario(spec.replace(mesh=0), log_fn=_silent)
+    sh = run_scenario(spec.replace(mesh_shape=(0,)), log_fn=_silent)
     assert host.final_metrics["engine"] == "host"
     assert dev.final_metrics["engine"] == "device"
     assert sh.final_metrics["engine"] == "sharded"
@@ -109,9 +109,13 @@ def test_runspec_json_roundtrip_exact():
     spec = RunSpec(scenario="diurnal", strategy="fedadam", rounds=42,
                    strategy_kwargs={"d": 5}, clients_per_round=7,
                    beta=2e-3, server_opt="yogi", server_lr=0.5,
-                   seed=3, engine="device", mesh=4, chunk_size=8,
+                   seed=3, engine="device", mesh_shape=(4,), chunk_size=8,
                    eval_every=21, metrics_path="m.jsonl")
     assert RunSpec.from_json(spec.to_json()) == spec
+    # 2-D mesh shape: the JSON list comes back as the original tuple
+    spec2d = spec.replace(mesh_shape=(2, 2))
+    assert RunSpec.from_json(spec2d.to_json()) == spec2d
+    assert RunSpec.from_json(spec2d.to_json()).mesh_shape == (2, 2)
 
 
 def test_runspec_json_roundtrip_inline_scenario():
@@ -136,11 +140,14 @@ def test_runspec_save_load_runs(tmp_path, lowid_registered):
     assert np.isfinite(res.final_metrics["test_loss"])
 
 
-def test_runspec_rejects_unserializable_mesh():
+def test_runspec_rejects_non_shape_mesh():
+    # runtime Mesh objects (and other non-shapes) are not valid mesh_shape
+    # values — the spec layer only carries serializable tuples; prebuilt
+    # Mesh objects go through sim.engine.build_engine directly
     from repro.launch.mesh import make_client_mesh
-    spec = RunSpec(mesh=make_client_mesh())
-    with pytest.raises(TypeError, match="mesh"):
-        spec.to_json()
+    for bad in (make_client_mesh(), (2, 2, 2), (-1,), (0, 0), (True,), "4"):
+        with pytest.raises(ValueError, match="mesh_shape"):
+            RunSpec(mesh_shape=bad).resolved()
 
 
 def test_runspec_from_dict_rejects_unknown_fields():

@@ -29,7 +29,10 @@ million-client regime keeps working at all (absolute rounds/sec are
 machine-dependent and not gated there) — and, with
 ``--min-nscale-1e6-ratio``, the N=1e6 on-demand-synthesis cell must show
 the sharded engine at least that many times faster than the unsharded one
-(machine-independent: both numbers come from the same run).
+(machine-independent: both numbers come from the same run).  With
+``--min-mesh2d-ratio`` the worst-cell ``mesh2d_over_1d_ratio`` — the
+two-axis ``(clients, model)`` mesh's rounds/sec over the 1-D sharded
+engine's in the same run — must stay above the floor.
 
 With ``--selection-current`` it additionally gates the fused selection
 kernel (``benchmarks/selection_overhead.py``):
@@ -117,11 +120,16 @@ def check(
     return errors
 
 
-def check_nscale(result: dict, min_1e6_ratio: float = 0.0) -> list:
+def check_nscale(result: dict, min_1e6_ratio: float = 0.0,
+                 min_mesh2d_ratio: float = 0.0) -> list:
     """The largest-N sharded cell must complete with nonzero throughput;
     with ``min_1e6_ratio`` > 0 the N=1e6 cell must additionally show the
     sharded engine at least that many times faster than the unsharded one
-    (machine-independent: both numbers come from the same run)."""
+    (machine-independent: both numbers come from the same run); with
+    ``min_mesh2d_ratio`` > 0 the worst-cell ``mesh2d_over_1d_ratio`` (the
+    two-axis (clients, model) mesh's rounds/sec over the 1-D sharded
+    engine's, same run) must stay above the floor — on CPU the model axis
+    buys no FLOPs, so this bounds the gather/slice/psum plumbing overhead."""
     cells = result.get("nscale", {}).get("cells", [])
     if not cells:
         return ["nscale results contain no cells"]
@@ -160,6 +168,25 @@ def check_nscale(result: dict, min_1e6_ratio: float = 0.0) -> list:
                     f"check_bench_regression: nscale N=1e6 sharded/device "
                     f"ratio {ratio:.2f}x (>= {min_1e6_ratio:.2f}x)"
                 )
+    if min_mesh2d_ratio > 0.0:
+        ratio = result.get("nscale", {}).get("mesh2d_over_1d_ratio")
+        if ratio is None:
+            errors.append(
+                "nscale results lack 'mesh2d_over_1d_ratio' (no cell ran "
+                "both the 1-D and 2-D sharded engines; needed for "
+                "--min-mesh2d-ratio)"
+            )
+        elif ratio < min_mesh2d_ratio:
+            errors.append(
+                f"two-axis (clients, model) mesh runs at {ratio:.2f}x of "
+                f"the 1-D sharded engine, below the required "
+                f"{min_mesh2d_ratio:.2f}x"
+            )
+        else:
+            print(
+                f"check_bench_regression: nscale 2-D/1-D mesh ratio "
+                f"{ratio:.2f}x (>= {min_mesh2d_ratio:.2f}x)"
+            )
     return errors
 
 
@@ -207,6 +234,14 @@ def main(argv=None) -> int:
         "0 disables the check)",
     )
     ap.add_argument(
+        "--min-mesh2d-ratio",
+        type=float,
+        default=0.0,
+        help="required worst-cell mesh2d_over_1d_ratio (two-axis mesh "
+        "rounds/sec over 1-D sharded rounds/sec; used with "
+        "--nscale-current; 0 disables the check)",
+    )
+    ap.add_argument(
         "--min-selection-ratio",
         type=float,
         default=1.0,
@@ -247,7 +282,8 @@ def main(argv=None) -> int:
                    args.min_dropout_ratio, args.min_buffered_ratio)
     if args.nscale_current:
         errors += check_nscale(load(args.nscale_current),
-                               args.min_nscale_1e6_ratio)
+                               args.min_nscale_1e6_ratio,
+                               args.min_mesh2d_ratio)
     if args.selection_current:
         errors += check_selection(
             load(args.selection_current), args.min_selection_ratio

@@ -412,6 +412,14 @@ register_rule(Rule(
 R3_TRACED_WRAPPERS = {"scan": 0, "while_loop": 1, "shard_map": 0,
                       "fori_loop": 2}
 
+# Collective primitives whose axis-name argument must come from the
+# mesh/RunSpec (clients_axis/model_axis), never a hard-coded string: a
+# literal inside a traced body silently pins the program to one mesh
+# spelling and breaks the two-axis composition (DESIGN.md §7.2).
+R3_COLLECTIVE_CALLS = frozenset({
+    "psum", "pmax", "pmin", "pmean", "all_gather", "ppermute",
+    "axis_index", "psum_scatter", "all_to_all"})
+
 
 def _traced_roots(sf: SourceFile) -> List[ast.AST]:
     by_name = {n.name: n for n in ast.walk(sf.tree)
@@ -520,6 +528,22 @@ class _R3Scope:
                     "keep the value on-device (jnp scalar) instead"))
                 continue
             q = qualname(n.func)
+            tail = q.rsplit(".", 1)[-1] if q else None
+            if tail in R3_COLLECTIVE_CALLS:
+                lits = [a for a in n.args
+                        if isinstance(a, ast.Constant)
+                        and isinstance(a.value, str)]
+                lits += [kw.value for kw in n.keywords
+                         if kw.arg in ("axis_name", "axis")
+                         and isinstance(kw.value, ast.Constant)
+                         and isinstance(kw.value.value, str)]
+                for lit in lits:
+                    self.findings.append(Finding(
+                        "R3", self.sf.path, lit.lineno, lit.col_offset,
+                        f"hard-coded mesh-axis name {lit.value!r} in "
+                        f"{tail}() inside a traced body; thread the axis "
+                        f"name from the mesh/RunSpec "
+                        f"(clients_axis/model_axis) instead"))
             if q in ("float", "int", "bool") and any(
                     self._expr_tainted(a) for a in n.args):
                 self.findings.append(Finding(
@@ -550,12 +574,15 @@ register_rule(Rule(
     rationale=(
         "round_step and lax.scan/shard_map bodies are traced once and "
         "executed compiled; host syncs (.item()/float()/np.*) either crash "
-        "at trace time or serialize the device stream, and Python branches "
-        "on tracers bake one branch into the compiled program."),
+        "at trace time or serialize the device stream, Python branches "
+        "on tracers bake one branch into the compiled program, and "
+        "hard-coded collective axis-name strings pin the body to one mesh "
+        "spelling, breaking clients_axis/model_axis composition."),
     fixit=(
         "keep round-path math in jnp/lax, replace Python branches on "
-        "traced values with jnp.where/lax.cond, and convert to host types "
-        "only outside the compiled chunk"),
+        "traced values with jnp.where/lax.cond, convert to host types "
+        "only outside the compiled chunk, and pass collective axis names "
+        "in from the mesh/RunSpec rather than as string literals"),
     check=check_r3,
 ))
 
